@@ -1,0 +1,138 @@
+"""Shared benchmark utilities. Every benchmark returns rows of
+(name, us_per_call, derived) — us_per_call is the wall-time of the dominant
+computation, derived is the figure's headline number."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+from repro.configs.base import JobConfig, ThroughputConfig
+
+Row = Tuple[str, float, float]
+
+# the paper's evaluation setting (Sec. VI-A): LLaMA2-7B LoRA job, 30-min
+# slots, workload 80 over deadline 10, N in [1, 12], mu = 0.9
+PAPER_JOB = JobConfig(workload=80.0, deadline=10, n_min=1, n_max=12,
+                      value=120.0, gamma=2.0, on_demand_price=1.0)
+PAPER_TPUT = ThroughputConfig(alpha=1.0, beta=0.0, mu1=0.9, mu2=0.95)
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6  # us
+
+
+def job_stream(rng: np.random.Generator, n: int, deadline: int = 10):
+    """Fig. 9 job distribution: L ~ U[70,120], Nmin in [1,4), Nmax in [12,17)."""
+    for _ in range(n):
+        yield JobConfig(
+            workload=float(rng.uniform(70, 120)),
+            deadline=deadline,
+            n_min=int(rng.integers(1, 4)),
+            n_max=int(rng.integers(12, 17)),
+            value=PAPER_JOB.value,
+        )
+
+
+def print_rows(rows: List[Row]):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived:.6g}")
+
+
+# ---------------------------------------------------------------------------
+# Shared policy-evaluation harness for the Fig. 5-8 sweeps
+# ---------------------------------------------------------------------------
+
+EVAL_SPEC_NAMES = ("ahap", "ahanp", "od_only", "msu", "up")
+
+
+def eval_specs():
+    """Representative AHAP/AHANP + the three baselines (paper Fig. 5-8)."""
+    from repro.core.policy_pool import (
+        KIND_AHANP,
+        KIND_AHAP,
+        PolicySpec,
+        baseline_specs,
+    )
+
+    return [
+        PolicySpec(KIND_AHAP, omega=3, v=1, sigma=0.7),
+        PolicySpec(KIND_AHANP, sigma=0.7),
+    ] + baseline_specs()
+
+
+def best_of_family_utilities(jobs, traces, tput, **kw):
+    """Paper methodology: 'the selected optimal policy is always the better
+    of the two' — evaluate the whole 112-policy pool and report
+    (best_ahap, best_ahanp, od, msu, up) mean utilities."""
+    from repro.core.policy_pool import baseline_specs, paper_pool
+
+    pool = paper_pool()
+    specs = pool + baseline_specs()
+    u = mean_utilities(jobs, traces, tput, specs=specs, **kw)
+    ahap_u = max(u[i] for i, s in enumerate(pool) if s.kind == 0)
+    ahanp_u = max(u[i] for i, s in enumerate(pool) if s.kind == 1)
+    return np.array([ahap_u, ahanp_u, u[-3], u[-2], u[-1]])
+
+
+def mean_utilities(
+    jobs,
+    traces,
+    tput,
+    noise_kind: str = "fixed_uniform",
+    noise_level: float = 0.10,
+    specs=None,
+) -> np.ndarray:
+    """(P,) mean utility of each spec over the (job, trace) pairs."""
+    from repro.core import fast_sim
+    from repro.core.policy_pool import specs_to_arrays
+    from repro.core.predictor import NoisyPredictor, PerfectPredictor
+
+    specs = specs or eval_specs()
+    arrs = specs_to_arrays(specs)
+    d = jobs[0].deadline
+    assert all(j.deadline == d for j in jobs)
+    prices = np.stack([t.prices[:d] for t in traces])
+    avail = np.stack([t.avail[:d] for t in traces])
+    preds = []
+    for i, t in enumerate(traces):
+        if noise_level <= 0:
+            m = PerfectPredictor(t).matrix(fast_sim.W1MAX - 1)
+        else:
+            m = NoisyPredictor(t, noise_kind, noise_level, seed=i).matrix(
+                fast_sim.W1MAX - 1
+            )
+        preds.append(m[:d])
+    out = fast_sim.simulate_pool_jobs(
+        arrs, fast_sim.stack_jobs(jobs), tput,
+        np.asarray(prices, np.float32), np.asarray(avail, np.int64),
+        np.asarray(np.stack(preds), np.float32),
+    )
+    return np.asarray(out["utility"]).mean(axis=0)
+
+
+def paper_market(seed: int = 11, days: float = 30, **overrides):
+    """The evaluation market regime: scarce availability with a strong
+    diurnal cycle and volatile prices that regularly approach the on-demand
+    rate — the conditions under which prediction pays (paper Sec. VI).
+    Under abundant cheap spot, MSU is near-optimal and the paper's gaps
+    vanish (EXPERIMENTS.md notes this sensitivity)."""
+    from repro.core.market import vast_like_trace
+
+    kw = dict(mean_price=0.7, price_sigma=0.5, avail_mean=5.5,
+              avail_season_amp=3.0)
+    kw.update(overrides)
+    return vast_like_trace(seed=seed, days=days, **kw)
+
+
+def windows(trace, n, deadline, rng):
+    return [
+        trace.window(int(rng.integers(0, len(trace) - deadline - 1)), deadline + 1)
+        for _ in range(n)
+    ]

@@ -1,0 +1,60 @@
+"""Fig. 10: policy-weight dynamics under changing prediction quality.
+
+Four phases (paper): Fixed-Mag+Uniform 10% -> Fixed-Mag+Heavy-Tail 30% ->
+Fixed-Mag+Uniform 50% -> 200% noise. The selector re-converges to a new
+policy each phase; the weight-history heatmap data is saved to
+experiments/fig10_weights.npz.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import PAPER_TPUT, job_stream, timed
+from benchmarks.fig9_convergence import _utilities_matrix
+from repro.core.policy_pool import paper_pool
+from repro.core.selector import init_selector, update
+
+PHASES = [
+    ("fixed_uniform", 0.1, 500),
+    ("fixed_heavytail", 0.3, 500),
+    ("fixed_uniform", 0.5, 500),
+    ("fixed_uniform", 2.0, 600),
+]
+
+
+def run() -> list:
+    pool = paper_pool()
+    M = len(pool)
+    K = sum(p[2] for p in PHASES)
+    st = init_selector(M, K, track_history=True)
+    phase_winners = []
+    t0 = 0.0
+    for i, (kind, level, n) in enumerate(PHASES):
+        (u, un), us = timed(_utilities_matrix, pool, kind, level, n, seed=31 + i)
+        t0 += us
+        for k in range(n):
+            st = update(st, un[k], track_history=True)
+        phase_winners.append(int(np.argmax(st.weights)))
+
+    os.makedirs("experiments", exist_ok=True)
+    hist = np.stack(st.weight_history)  # (K+1, M)
+    np.savez_compressed(
+        "experiments/fig10_weights.npz",
+        weights=hist.astype(np.float32),
+        phase_bounds=np.cumsum([p[2] for p in PHASES]),
+        winners=np.array(phase_winners),
+        pool_names=np.array([p.name for p in pool]),
+    )
+    rows = [("fig10_total_jobs", t0, K)]
+    for i, w in enumerate(phase_winners):
+        rows.append((f"fig10_phase{i}_winner_idx", 0.0, w))
+        rows.append((f"fig10_phase{i}_winner_is_ahanp", 0.0, float(pool[w].kind == 1)))
+    rows.append(("fig10_distinct_phase_winners", 0.0, float(len(set(phase_winners)))))
+    # heavy noise should push weight toward non-predictive AHANP policies
+    ahanp_mass_end = float(
+        hist[-1, [i for i, p in enumerate(pool) if p.kind == 1]].sum()
+    )
+    rows.append(("fig10_final_ahanp_weight_mass", 0.0, ahanp_mass_end))
+    return rows

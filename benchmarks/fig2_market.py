@@ -1,0 +1,21 @@
+"""Fig. 2: spot market fluctuation statistics (10-day A100-like trace)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core.market import TraceStats, vast_like_trace
+
+
+def run() -> list:
+    stats, us = timed(
+        lambda: [TraceStats.of(vast_like_trace(seed=s, days=10)) for s in range(8)]
+    )
+    m = float(np.mean([s.median_over_p90 for s in stats]))
+    dn = float(np.mean([s.avail_day_night_ratio for s in stats]))
+    am = float(np.mean([s.avail_mean for s in stats]))
+    return [
+        ("fig2_median_over_p90", us, m),          # paper: ~0.6
+        ("fig2_avail_day_night_ratio", us, dn),   # paper: >1 (diurnal)
+        ("fig2_avail_mean", us, am),              # capped [0, 16]
+    ]

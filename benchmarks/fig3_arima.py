@@ -1,0 +1,28 @@
+"""Fig. 3: ARIMA forecast quality on price and availability (30-min slots)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core.market import vast_like_trace
+from repro.core.predictor import ARIMAPredictor, forecast_errors, mape
+
+
+def run() -> list:
+    tr = vast_like_trace(seed=6, days=8)
+    errs, us = timed(lambda: forecast_errors(tr, ARIMAPredictor(tr), 5))
+    T = len(tr)
+    persist_price = np.mean(
+        [mape(tr.prices[: T - j], tr.prices[j:]) for j in range(1, 6)]
+    )
+    persist_avail = np.mean(
+        [mape(tr.avail[: T - j].astype(float),
+              np.maximum(tr.avail[j:], 1).astype(float)) for j in range(1, 6)]
+    )
+    return [
+        ("fig3_arima_price_mape_h1", us, errs["price"][0]),
+        ("fig3_arima_price_mape_h5", us, errs["price"][-1]),
+        ("fig3_arima_avail_mape_h1", us, errs["avail"][0]),
+        ("fig3_arima_vs_persist_price", us, np.mean(errs["price"]) / persist_price),
+        ("fig3_arima_vs_persist_avail", us, np.mean(errs["avail"]) / persist_avail),
+    ]

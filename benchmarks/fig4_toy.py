@@ -1,0 +1,85 @@
+"""Fig. 4: the 5-policy toy comparison (workload 20, deadline 5, p^o = 1).
+
+The paper's exact availability row is not recoverable from the figure text,
+so we use a reconstructed instance that reproduces the QUALITATIVE result:
+  * On-Demand Only  — completes, most expensive (cost 20)
+  * Spot-First      — cheapest but INCOMPLETE (misses workload)
+  * Progress-Track  — completes, mid cost
+  * Perfect-Pred.   — completes at the lowest completing cost
+  * Imperfect-Pred. (constant forecast of 6 spot instances) — completes,
+    costlier than perfect (prediction error has a price)
+Reconfiguration overhead is ignored (mu = 1), as in the paper's example.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import timed
+from repro.configs.base import JobConfig, ThroughputConfig
+from repro.core.market import from_arrays
+from repro.core.offline_opt import solve_offline
+from repro.core.policies import AHAP, AHAPParams, MSU, ODOnly, UP
+from repro.core.predictor import PerfectPredictor
+from repro.core.simulator import simulate
+
+JOB = JobConfig(workload=20, deadline=5, n_min=1, n_max=8, value=100.0,
+                gamma=2.0, on_demand_price=1.0)
+TPUT = ThroughputConfig(alpha=1.0, beta=0.0, mu1=1.0, mu2=1.0)
+
+PRICES = np.array([0.5, 0.7, 0.3, 0.5, 0.3])
+AVAIL = np.array([6, 2, 6, 0, 2])  # sums to 16 < 20: spot-first cannot finish
+
+
+class SpotFirst(MSU):
+    """Pure maximal-spot with NO on-demand fallback (the figure's policy 2)."""
+
+    def decide(self, obs):
+        n_s = min(obs.avail, self.job.n_max)
+        if obs.z_prev >= self.job.workload:
+            return 0, 0
+        return 0, n_s
+
+
+def run() -> list:
+    tr = from_arrays(PRICES, AVAIL)
+    pred = PerfectPredictor(tr).matrix(5)
+    const = pred.copy()
+    const[..., 1] = 6.0  # "constant forecast of 6 available spot instances"
+
+    rows = []
+    results = {}
+    for name, pol, pm in [
+        ("od_only", ODOnly(), None),
+        ("spot_first", SpotFirst(), None),
+        ("progress_track", UP(), None),
+        ("perfect_pred", AHAP(AHAPParams(5, 1, 0.9)), pred),
+        ("imperfect_pred", AHAP(AHAPParams(5, 1, 0.9)), const),
+    ]:
+        (r, us) = timed(simulate, pol, JOB, TPUT, tr, pm)
+        # in-window cost (what the figure's table shows) + full cost incl.
+        # the termination configuration for incomplete jobs
+        in_cost = float((r.n_spot * PRICES[: len(r.n_spot)]).sum() + r.n_od.sum())
+        results[name] = (r, in_cost)
+        rows.append((f"fig4_{name}_cost_in_window", us, in_cost))
+        rows.append((f"fig4_{name}_cost_total", us, r.cost))
+        rows.append((f"fig4_{name}_workload_by_d", us, r.z_ddl))
+        rows.append((f"fig4_{name}_utility", us, r.utility))
+
+    opt = solve_offline(JOB, TPUT, tr)
+    rows.append(("fig4_offline_opt_cost", 0.0, opt.cost))
+
+    # qualitative ordering (paper's message), as 1/0 derived flags:
+    #   spot-first misses workload in-window; perfect completes at the lowest
+    #   total cost; imperfect prediction costs more than perfect (in utility);
+    #   on-demand-only is the most expensive completing strategy
+    u = {k: v[0].utility for k, v in results.items()}
+    ok = (
+        (results["od_only"][0].z_ddl >= JOB.workload - 1e-6)
+        and (results["spot_first"][0].z_ddl < JOB.workload)
+        and (u["perfect_pred"] >= max(u.values()) - 1e-9)
+        and (u["imperfect_pred"] <= u["perfect_pred"] + 1e-9)
+        and (results["od_only"][0].cost >= max(v[0].cost for v in results.values()) - 1e-9)
+        and abs(results["perfect_pred"][0].cost - opt.cost) < 0.75
+    )
+    rows.append(("fig4_qualitative_ordering_ok", 0.0, float(ok)))
+    return rows

@@ -1,0 +1,59 @@
+"""Fig. 5: utility vs deadline — the paper's headline comparison.
+
+At the representative deadline=10 the paper reports AHAP improving utility by
+49.0% / 54.8% / 33.4% / 23.2% over OD-Only / MSU / UP / AHANP. We sweep
+deadlines {7, 8, 10, 12, 14} over many (job, trace-window) pairs with 10%
+fixed-magnitude uniform prediction noise and report the measured
+improvements at d=10.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import PAPER_JOB, PAPER_TPUT, best_of_family_utilities, paper_market, timed, windows
+
+N_JOBS = 96
+
+
+def run() -> list:
+    rng = np.random.default_rng(0)
+    trace = paper_market(seed=11)
+    rows = []
+    at10 = None
+    for d in (7, 8, 10, 12, 14):
+        jobs = [dataclasses.replace(PAPER_JOB, deadline=d) for _ in range(N_JOBS)]
+        trs = windows(trace, N_JOBS, d, rng)
+        u, us = timed(best_of_family_utilities, jobs, trs, PAPER_TPUT)
+        rows.append((f"fig5_d{d}_ahap_utility", us, u[0]))
+        rows.append((f"fig5_d{d}_ahanp_utility", us, u[1]))
+        rows.append((f"fig5_d{d}_od_utility", us, u[2]))
+        rows.append((f"fig5_d{d}_msu_utility", us, u[3]))
+        rows.append((f"fig5_d{d}_up_utility", us, u[4]))
+        if d == 10:
+            at10 = u
+    # headline improvements at deadline = 10 (paper: 49.0/54.8/33.4/23.2 %)
+    ahap = at10[0]
+    for i, name in [(2, "od"), (3, "msu"), (4, "up"), (1, "ahanp")]:
+        base = at10[i]
+        imp = 100.0 * (ahap - base) / abs(base) if abs(base) > 1e-9 else np.inf
+        rows.append((f"fig5_improvement_over_{name}_pct", 0.0, imp))
+
+    # the paper's literal (mu-blind, zero-margin) MSU variant at d=10: this
+    # is the baseline its -54.8% headline punishes; our default MSU adds a
+    # one-slot safety margin and is far stronger (EXPERIMENTS.md)
+    from repro.core.policies import MSUWeak
+    from repro.core.simulator import simulate
+
+    jobs = [dataclasses.replace(PAPER_JOB, deadline=10) for _ in range(N_JOBS)]
+    trs = windows(trace, N_JOBS, 10, np.random.default_rng(0))
+    uw = float(np.mean([
+        simulate(MSUWeak(), j, PAPER_TPUT, t).utility for j, t in zip(jobs, trs)
+    ]))
+    rows.append(("fig5_d10_msu_weak_utility", 0.0, uw))
+    rows.append((
+        "fig5_improvement_over_msu_weak_pct", 0.0,
+        100.0 * (ahap - uw) / abs(uw) if abs(uw) > 1e-9 else np.inf,
+    ))
+    return rows

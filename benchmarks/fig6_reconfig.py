@@ -1,0 +1,43 @@
+"""Fig. 6: impact of reconfiguration overhead (network bandwidth 100-800 Mbps).
+
+mu1/mu2 are derived from the real checkpoint size of the paper's LLaMA2-7B
+job via the switching-cost model (repro.checkpoint). The paper's finding:
+every policy degrades as bandwidth shrinks EXCEPT AHANP, whose
+allocation-stability design keeps it flat.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import PAPER_JOB, best_of_family_utilities, paper_market, timed, windows
+from repro.configs import get_config
+from repro.configs.base import ThroughputConfig
+from repro.core.throughput import calibrate
+
+N_JOBS = 64
+
+
+def run() -> list:
+    rng = np.random.default_rng(1)
+    trace = paper_market(seed=12)
+    cfg = get_config("llama2-7b")
+    rows = []
+    utils = {}
+    for bw_mbps in (100, 200, 400, 800):
+        t = calibrate(cfg, bandwidth_bps=bw_mbps * 1e6)
+        jobs = [PAPER_JOB] * N_JOBS
+        trs = windows(trace, N_JOBS, PAPER_JOB.deadline, rng)
+        u, us = timed(best_of_family_utilities, jobs, trs, t)
+        utils[bw_mbps] = u
+        rows.append((f"fig6_bw{bw_mbps}_mu1", 0.0, t.mu1))
+        for i, n in enumerate(("ahap", "ahanp", "od", "msu", "up")):
+            rows.append((f"fig6_bw{bw_mbps}_{n}_utility", us, u[i]))
+    # AHANP stability: utility drop from 800 -> 100 Mbps, vs AHAP's drop
+    drop_ahanp = utils[800][1] - utils[100][1]
+    drop_ahap = utils[800][0] - utils[100][0]
+    rows.append(("fig6_ahanp_drop", 0.0, drop_ahanp))
+    rows.append(("fig6_ahap_drop", 0.0, drop_ahap))
+    rows.append(("fig6_ahanp_more_stable", 0.0, float(drop_ahanp <= drop_ahap + 1e-9)))
+    return rows

@@ -1,0 +1,24 @@
+"""Fig. 7: impact of average spot availability."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import PAPER_JOB, PAPER_TPUT, mean_utilities, paper_market, timed, windows
+
+N_JOBS = 64
+
+
+def run() -> list:
+    rng = np.random.default_rng(2)
+    rows = []
+    for mean_av in (2.0, 4.0, 8.0, 12.0):
+        trace = paper_market(
+            seed=13, avail_mean=mean_av,
+            avail_season_amp=min(3.0, mean_av * 0.45),
+        )
+        jobs = [PAPER_JOB] * N_JOBS
+        trs = windows(trace, N_JOBS, PAPER_JOB.deadline, rng)
+        u, us = timed(mean_utilities, jobs, trs, PAPER_TPUT)
+        for i, n in enumerate(("ahap", "ahanp", "od", "msu", "up")):
+            rows.append((f"fig7_avail{mean_av:g}_{n}_utility", us, u[i]))
+    return rows

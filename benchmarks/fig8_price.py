@@ -1,0 +1,21 @@
+"""Fig. 8: impact of spot price volatility."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import PAPER_JOB, PAPER_TPUT, mean_utilities, paper_market, timed, windows
+
+N_JOBS = 64
+
+
+def run() -> list:
+    rng = np.random.default_rng(3)
+    rows = []
+    for sigma in (0.2, 0.5, 0.8):
+        trace = paper_market(seed=14, price_sigma=sigma)
+        jobs = [PAPER_JOB] * N_JOBS
+        trs = windows(trace, N_JOBS, PAPER_JOB.deadline, rng)
+        u, us = timed(mean_utilities, jobs, trs, PAPER_TPUT)
+        for i, n in enumerate(("ahap", "ahanp", "od", "msu", "up")):
+            rows.append((f"fig8_sigma{sigma:g}_{n}_utility", us, u[i]))
+    return rows

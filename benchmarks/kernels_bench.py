@@ -1,0 +1,51 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU: correctness-scale
+timings; the real perf numbers are the TPU dry-run rooflines)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.lora_matmul import lora_matmul
+from repro.kernels.ref import flash_attention_ref, lora_matmul_ref, ssd_scan_ref
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def run() -> list:
+    rng = jax.random.PRNGKey(0)
+    ks = jax.random.split(rng, 8)
+    rows = []
+
+    m = k = n = 256
+    x = jax.random.normal(ks[0], (m, k))
+    w = jax.random.normal(ks[1], (k, n)) * 0.05
+    a = jax.random.normal(ks[2], (k, 16)) * 0.05
+    b = jax.random.normal(ks[3], (16, n)) * 0.05
+    f = jax.jit(lambda *t: lora_matmul(*t, 2.0, interpret=True))
+    jax.block_until_ready(f(x, w, a, b))
+    _, us = timed(lambda: jax.block_until_ready(f(x, w, a, b)), repeat=3)
+    fr = jax.jit(lambda *t: lora_matmul_ref(*t, 2.0))
+    jax.block_until_ready(fr(x, w, a, b))
+    _, us_r = timed(lambda: jax.block_until_ready(fr(x, w, a, b)), repeat=3)
+    rows += [("kernel_lora_matmul_256_interp", us, 2.0 * m * k * n / (us / 1e6)),
+             ("kernel_lora_matmul_256_xla_ref", us_r, us / max(us_r, 1e-9))]
+
+    q = jax.random.normal(ks[4], (4, 256, 64))
+    kk = jax.random.normal(ks[5], (4, 256, 64))
+    v = jax.random.normal(ks[6], (4, 256, 64))
+    f = jax.jit(lambda *t: flash_attention(*t, interpret=True))
+    jax.block_until_ready(f(q, kk, v))
+    _, us = timed(lambda: jax.block_until_ready(f(q, kk, v)), repeat=3)
+    rows.append(("kernel_flash_attention_256_interp", us, 0.0))
+
+    xx = jax.random.normal(ks[7], (4, 256, 64))
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (4, 256))) * 0.5
+    A = -jnp.ones((4,)) * 0.5
+    B = jax.random.normal(ks[1], (4, 256, 32)) * 0.3
+    C = jax.random.normal(ks[2], (4, 256, 32)) * 0.3
+    f = jax.jit(lambda *t: ssd_scan(*t, chunk=64, interpret=True))
+    jax.block_until_ready(f(xx, dt, A, B, C))
+    _, us = timed(lambda: jax.block_until_ready(f(xx, dt, A, B, C)), repeat=3)
+    rows.append(("kernel_ssd_scan_256_interp", us, 0.0))
+    return rows

@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Run:
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,fig9]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "fig1_throughput",
+    "fig2_market",
+    "fig3_arima",
+    "fig4_toy",
+    "fig5_deadline",
+    "fig6_reconfig",
+    "fig7_availability",
+    "fig8_price",
+    "fig9_convergence",
+    "fig10_adaptation",
+    "theorem1",
+    "beyond_robust",
+    "predictor_value",
+    "theorem2",
+    "kernels_bench",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated module prefixes")
+    args = ap.parse_args()
+    sel = [s for s in args.only.split(",") if s]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        if sel and not any(mod_name.startswith(s) for s in sel):
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            rows = mod.run()
+            for name, us, derived in rows:
+                print(f"{name},{us:.1f},{derived:.6g}")
+        except Exception:
+            failures += 1
+            print(f"{mod_name},0.0,nan  # FAILED", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {mod_name} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""repro: deadline-aware online scheduling for LLM fine-tuning on spot
+markets (CS.DC'25 reproduction) — a multi-pod JAX training/inference
+framework with the paper's scheduler as a first-class layer.
+
+Packages: core (the paper), models, kernels (Pallas TPU), configs, data,
+optim, checkpoint, train, serve, launch. See README.md / DESIGN.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,9 @@
+from repro.checkpoint.ckpt import (
+    checkpoint_bytes,
+    reconfiguration_mu,
+    restore,
+    save,
+    serialize,
+    deserialize,
+    transfer_seconds,
+)

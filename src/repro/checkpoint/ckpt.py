@@ -1,0 +1,109 @@
+"""Checkpointing: msgpack + zstd over flattened pytrees.
+
+This is the substrate behind the paper's *switching cost* (Sec. II-A): when
+the spot scheduler changes the instance count or a preemption hits, the
+fine-tuning state (LoRA params + optimizer state + data-stream position) is
+written, shipped over the (possibly slow) network, and restored. The paper
+measures 0.58 s at 200 Gbps vs 1152 s at 100 Mbps for a full LLaMA2-7B
+checkpoint; ``checkpoint_bytes``/``transfer_seconds`` reproduce that model
+from the actual serialized sizes.
+
+Elastic resharding: checkpoints are *instance-count independent* (full
+logical arrays), so restoring onto a different data-parallel width is a
+no-op — the loader re-shards on the next step.
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+
+def _pack_leaf(x) -> dict:
+    arr = np.asarray(x)
+    if arr.dtype == jnp.bfloat16:
+        return {
+            "dtype": "bfloat16",
+            "shape": list(arr.shape),
+            "data": arr.view(np.uint16).tobytes(),
+        }
+    return {"dtype": str(arr.dtype), "shape": list(arr.shape), "data": arr.tobytes()}
+
+
+def _unpack_leaf(d: dict):
+    if d["dtype"] == "bfloat16":
+        arr = np.frombuffer(d["data"], np.uint16).reshape(d["shape"])
+        return jnp.asarray(arr.view(jnp.bfloat16))
+    arr = np.frombuffer(d["data"], np.dtype(d["dtype"])).reshape(d["shape"])
+    return jnp.asarray(arr)
+
+
+def serialize(tree, meta: Optional[Dict[str, Any]] = None) -> bytes:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {
+        "meta": json.dumps(meta or {}),
+        "leaves": [_pack_leaf(l) for l in leaves],
+    }
+    raw = msgpack.packb(payload, use_bin_type=True)
+    return zstandard.ZstdCompressor(level=3).compress(raw)
+
+
+def deserialize(blob: bytes, tree_like) -> Tuple[Any, Dict[str, Any]]:
+    raw = zstandard.ZstdDecompressor().decompress(blob)
+    payload = msgpack.unpackb(raw, raw=False)
+    leaves = [_unpack_leaf(d) for d in payload["leaves"]]
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return jax.tree_util.tree_unflatten(treedef, leaves), json.loads(payload["meta"])
+
+
+def save(path: str, tree, meta: Optional[Dict[str, Any]] = None) -> int:
+    """Atomic write; returns byte size (feeds the switching-cost model)."""
+    blob = serialize(tree, meta)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return len(blob)
+
+
+def restore(path: str, tree_like) -> Tuple[Any, Dict[str, Any]]:
+    with open(path, "rb") as f:
+        return deserialize(f.read(), tree_like)
+
+
+# ---------------------------------------------------------------------------
+# Switching-cost model (paper Sec. II-A / VI-A)
+# ---------------------------------------------------------------------------
+
+def checkpoint_bytes(cfg) -> int:
+    """Base model + LoRA + Adam moments, bf16 base / f32 adapters."""
+    base = cfg.param_count() * 2
+    lora = cfg.lora_param_count() * 4
+    adam = cfg.lora_param_count() * 8  # m and v in f32
+    return base + lora + adam
+
+
+def transfer_seconds(cfg, bandwidth_bps: float) -> float:
+    return checkpoint_bytes(cfg) * 8.0 / bandwidth_bps
+
+
+def reconfiguration_mu(cfg, bandwidth_bps: float, slot_seconds: float,
+                       startup_seconds: float = 180.0) -> float:
+    """Effective-compute fraction of a slot after a scale-up event (Eq. 2):
+    checkpoint transfer + container/startup time, clipped to [0, 1]."""
+    dead = transfer_seconds(cfg, bandwidth_bps) + startup_seconds
+    return float(np.clip(1.0 - dead / slot_seconds, 0.0, 1.0))

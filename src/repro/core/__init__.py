@@ -1,0 +1,43 @@
+"""The paper's contribution: deadline-aware online scheduling for LLM
+fine-tuning on mixed on-demand/spot GPU markets with predictions."""
+from repro.core.job import (
+    expected_progress,
+    normalization_bounds,
+    normalize_utility,
+    tilde_value,
+    value_fn,
+)
+from repro.core.market import Trace, TraceStats, constant_trace, from_arrays, vast_like_trace
+from repro.core.offline_opt import OfflineResult, solve_offline
+from repro.core.policies import (
+    AHANP,
+    AHANPParams,
+    AHAP,
+    AHAPParams,
+    MSU,
+    ODOnly,
+    UP,
+)
+from repro.core.policy_pool import (
+    PolicySpec,
+    baseline_specs,
+    paper_pool,
+    specs_to_arrays,
+)
+from repro.core.predictor import (
+    ARIMAPredictor,
+    NoisyPredictor,
+    PerfectPredictor,
+    forecast_errors,
+)
+from repro.core.selector import (
+    best_policy,
+    init_selector,
+    regret,
+    regret_bound,
+    select,
+    update,
+)
+from repro.core.simulator import SimResult, simulate
+from repro.core.throughput import calibrate, effective_work, mu_factor, throughput
+from repro.core.window_opt import brute_force_window, solve_window, solve_window_numpy

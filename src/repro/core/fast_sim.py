@@ -1,0 +1,324 @@
+"""Vectorized policy simulator: one lax.scan over slots, vmap over the whole
+112-policy pool (and over jobs) — this is what makes the paper's Fig. 9/10
+experiments (1000s of jobs x 112 policies) take seconds instead of hours.
+
+Semantics mirror repro.core.simulator.simulate exactly (pinned by
+tests/test_fast_sim.py): same feasibility pipeline, same mu/billing/
+termination rules, same rounding (jnp.round == python round, half-to-even).
+
+Policies are encoded as arrays (see policy_pool.specs_to_arrays); at every
+slot all five decision rules are evaluated and the right one is selected by
+kind — the wasted lanes are trivially cheap next to the window DP.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import JobConfig, ThroughputConfig
+from repro.core.job import value_fn
+from repro.core.window_opt import solve_window
+
+W1MAX = 6   # max omega + 1
+VMAX = 5    # max commitment level
+NTABLE = 16  # static unit-table width (paper availability cap)
+
+
+class JobArrays(NamedTuple):
+    workload: jnp.ndarray
+    deadline: jnp.ndarray       # int32 (dynamic; scan runs d_max slots)
+    n_min: jnp.ndarray
+    n_max: jnp.ndarray
+    value: jnp.ndarray
+    gamma: jnp.ndarray
+    p_o: jnp.ndarray
+
+    @staticmethod
+    def of(job: JobConfig) -> "JobArrays":
+        return JobArrays(
+            jnp.float32(job.workload), jnp.int32(job.deadline),
+            jnp.int32(job.n_min), jnp.int32(job.n_max),
+            jnp.float32(job.value), jnp.float32(job.gamma),
+            jnp.float32(job.on_demand_price),
+        )
+
+
+def _job_cfg(j: JobArrays) -> JobConfig:
+    """JobConfig carrying tracers (fine: frozen dataclass of leaves)."""
+    return JobConfig(
+        workload=j.workload, deadline=j.deadline, n_min=j.n_min,
+        n_max=j.n_max, value=j.value, gamma=j.gamma, on_demand_price=j.p_o,
+    )
+
+
+def _feasible(n_o, n_s, price, avail, j: JobArrays):
+    """Mirror of BasePolicy._feasible."""
+    n_s = jnp.minimum(jnp.minimum(n_s, avail), j.n_max)
+    n_o = jnp.maximum(n_o, 0)
+    total = n_o + n_s
+    need = jnp.maximum(j.n_min - total, 0)
+    spot_room = (price <= j.p_o) & (avail - n_s >= need)
+    n_s = jnp.where((total > 0) & (total < j.n_min) & spot_room, n_s + need, n_s)
+    n_o = jnp.where((total > 0) & (total < j.n_min) & ~spot_room, n_o + need, n_o)
+    over = jnp.maximum(n_o + n_s - j.n_max, 0)
+    drop_od = jnp.where(price <= j.p_o, jnp.minimum(over, n_o), 0)
+    n_o = n_o - drop_od
+    n_s = n_s - (over - drop_od)
+    zero = total <= 0
+    return jnp.where(zero, 0, n_o), jnp.where(zero, 0, n_s)
+
+
+def _sim_clip(n_o, n_s, avail, j: JobArrays):
+    """Mirror of simulate()'s hard feasibility clip."""
+    n_s = jnp.clip(n_s, 0, jnp.minimum(avail, j.n_max))
+    n_o = jnp.clip(n_o, 0, j.n_max - n_s)
+    n = n_o + n_s
+    n_o = jnp.where((n > 0) & (n < j.n_min), n_o + (j.n_min - n), n_o)
+    return n_o, n_s
+
+
+def simulate_one(
+    kind, omega, v, sigma,                 # policy encoding (scalars)
+    j: JobArrays,
+    tput: ThroughputConfig,
+    prices, avail, pred,                   # (dmax,), (dmax,), (dmax, W1MAX, 2)
+    rho=jnp.float32(1.0),                  # Robust-AHAP availability discount
+):
+    dmax = prices.shape[0]
+    jcfg = _job_cfg(j)
+    alpha, beta = tput.alpha, tput.beta
+    mu1, mu2 = tput.mu1, tput.mu2
+
+    def step(carry, xs):
+        z, n_prev, cost, done, T, plans, prev_avail, t = carry
+        price, av, pr = xs  # scalar, scalar, (W1MAX, 2)
+        active = (t < j.deadline) & ~done
+
+        # Robust-AHAP: discount *predicted* availability (j >= 1 only)
+        disc_av = jnp.floor(rho * pr[:, 1]).at[0].set(pr[0, 1])
+        pr = jnp.stack([pr[:, 0], disc_av], axis=-1)
+
+        # ---------------- AHAP ----------------
+        jj = jnp.arange(W1MAX)
+        in_w = jj <= omega
+        z_exp_end = j.workload / j.deadline * jnp.minimum(
+            (t + 1 + omega).astype(jnp.float32), j.deadline.astype(jnp.float32)
+        )
+        ahead = z >= z_exp_end
+        thr_s = jnp.where(
+            in_w
+            & (pr[:, 0] <= sigma * j.p_o)
+            & (pr[:, 1] >= j.n_min),
+            jnp.minimum(pr[:, 1].astype(jnp.int32), j.n_max),
+            0,
+        )
+        eff_slots = jnp.minimum(j.deadline - t, omega + 1)
+        chc_o, chc_s, _ = solve_window(
+            jcfg, tput, z, eff_slots, pr[:, 0], pr[:, 1].astype(jnp.int32),
+            j.p_o, table_n=NTABLE,
+        )
+        plan = jnp.where(
+            ahead,
+            jnp.stack([jnp.zeros(W1MAX, jnp.int32), thr_s], axis=-1),
+            jnp.stack([chc_o, chc_s], axis=-1),
+        ).astype(jnp.float32)  # (W1MAX, 2)
+        plans = jnp.concatenate([plan[None], plans[:-1]], axis=0)  # (VMAX, W1MAX, 2)
+        kk = jnp.arange(VMAX)
+        # a plan only exists if it was actually made (k <= t): matches the
+        # python policy's growing history, not zero-padded averaging
+        valid = ((kk < v) & (kk <= t))[:, None].astype(jnp.float32)
+        diag = plans[kk, jnp.minimum(kk, W1MAX - 1)]  # (VMAX, 2)
+        cnt = jnp.maximum(valid.sum(), 1.0)
+        avg = (diag * valid).sum(axis=0) / cnt
+        # round-half-up, matching the python reference exactly
+        ah_o = jnp.floor(avg[0] + 0.5).astype(jnp.int32)
+        ah_s = jnp.minimum(jnp.floor(avg[1] + 0.5).astype(jnp.int32), av)
+        ah_zero = (ah_o + ah_s) == 0
+        ah_o_f, ah_s_f = _feasible(ah_o, ah_s, price, av, j)
+        ah_o = jnp.where(ah_zero, 0, ah_o_f)
+        ah_s = jnp.where(ah_zero, 0, ah_s_f)
+
+        # ---------------- AHANP ----------------
+        z_exp_prev = j.workload / j.deadline * t.astype(jnp.float32)
+        z_hat = jnp.where(z_exp_prev > 0, z / z_exp_prev, 1.0)
+        p_hat = price / (sigma * j.p_o)
+        n_hat_inf = (prev_avail == 0) & (av > 0)
+        n_hat = jnp.where(
+            av == 0, 0.0,
+            jnp.where(prev_avail == 0, jnp.inf, av / jnp.maximum(prev_avail, 1).astype(jnp.float32)),
+        )
+        ahead1 = z_hat >= 1.0
+        n_an = jnp.where(
+            ahead1,
+            jnp.where(
+                av == 0,
+                0,
+                jnp.where(
+                    n_hat <= 0.5,
+                    jnp.maximum(n_prev // 2, j.n_min),
+                    jnp.where(
+                        n_hat <= 1.0,
+                        n_prev,
+                        jnp.where(p_hat > 1.0, n_prev, jnp.maximum(n_prev, av)),
+                    ),
+                ),
+            ),
+            jnp.maximum(2 * n_prev, j.n_min),
+        )
+        an_zero = n_an <= 0
+        n_an_c = jnp.clip(n_an, j.n_min, j.n_max)
+        an_s = jnp.minimum(av, n_an_c)
+        an_o_f, an_s_f = _feasible(n_an_c - an_s, an_s, price, av, j)
+        an_o = jnp.where(an_zero, 0, an_o_f)
+        an_s = jnp.where(an_zero, 0, an_s_f)
+
+        # ---------------- OD-Only ----------------
+        remaining = jnp.maximum(j.workload - z, 0.0)
+        slots_left = (j.deadline - t).astype(jnp.float32)
+        od_need = jnp.ceil(remaining / jnp.maximum(slots_left, 1.0) / alpha).astype(jnp.int32)
+        od_zero = (remaining <= 0) | (slots_left <= 0)
+        od_o_f, od_s_f = _feasible(jnp.clip(od_need, j.n_min, j.n_max), 0, price, av, j)
+        od_o = jnp.where(od_zero, 0, od_o_f)
+        od_s = jnp.where(od_zero, 0, od_s_f)
+
+        # ---------------- MSU ----------------
+        ms_s = jnp.minimum(av, j.n_max)
+        h_max = alpha * j.n_max.astype(jnp.float32) + beta
+        panic = remaining > h_max * jnp.maximum(slots_left - 1.0, 0.0)
+        ms_o = jnp.where(
+            panic,
+            jnp.maximum(jnp.minimum(od_need, j.n_max) - ms_s, 0),
+            0,
+        )
+        ms_zero = (remaining <= 0) | ((ms_s + ms_o) == 0)
+        ms_o_f, ms_s_f = _feasible(ms_o, ms_s, price, av, j)
+        ms_o = jnp.where(ms_zero, 0, ms_o_f)
+        ms_s = jnp.where(ms_zero, 0, ms_s_f)
+
+        # ---------------- UP ----------------
+        rate = j.workload / j.deadline.astype(jnp.float32)
+        deficit = jnp.maximum(rate * t.astype(jnp.float32) - z, 0.0)
+        up_need = jnp.clip(
+            jnp.ceil((rate + deficit) / alpha).astype(jnp.int32), j.n_min, j.n_max
+        )
+        up_s = jnp.minimum(av, up_need)
+        up_o = jnp.where(deficit > 0, up_need - up_s, 0)
+        up_zero = (remaining <= 0) | ((up_s + up_o) == 0)
+        up_o_f, up_s_f = _feasible(up_o, up_s, price, av, j)
+        up_o = jnp.where(up_zero, 0, up_o_f)
+        up_s = jnp.where(up_zero, 0, up_s_f)
+
+        # ---------------- select & execute ----------------
+        n_o = jnp.select(
+            [kind == 0, kind == 1, kind == 2, kind == 3, kind == 4],
+            [ah_o, an_o, od_o, ms_o, up_o],
+        )
+        n_s = jnp.select(
+            [kind == 0, kind == 1, kind == 2, kind == 3, kind == 4],
+            [ah_s, an_s, od_s, ms_s, up_s],
+        )
+        n_o, n_s = _sim_clip(n_o, n_s, av, j)
+        n_o = jnp.where(active, n_o, 0)
+        n_s = jnp.where(active, n_s, 0)
+        n = n_o + n_s
+
+        mu = jnp.where(
+            n > n_prev, mu1, jnp.where(n < n_prev, mu2, 1.0)
+        )
+        mu = jnp.where((n == 0) & (n_prev == 0), 1.0, mu)
+        work = mu * jnp.where(n > 0, alpha * n.astype(jnp.float32) + beta, 0.0)
+        will_done = active & (work > 0) & (z + work >= j.workload)
+        frac = jnp.where(work > 0, (j.workload - z) / jnp.maximum(work, 1e-9), 0.0)
+        T = jnp.where(will_done, t.astype(jnp.float32) + frac, T)
+        cost = cost + jnp.where(
+            active, n_s.astype(jnp.float32) * price + n_o.astype(jnp.float32) * j.p_o, 0.0
+        )
+        z = jnp.minimum(z + jnp.where(active, work, 0.0), j.workload)
+        n_prev = jnp.where(active, n, n_prev)
+        done = done | will_done
+        prev_avail = jnp.where(active, av, prev_avail)
+        return (z, n_prev, cost, done, T, plans, prev_avail, t + 1), (n_o, n_s)
+
+    init = (
+        jnp.float32(0.0), jnp.int32(0), jnp.float32(0.0),
+        jnp.bool_(False), jnp.float32(0.0),
+        jnp.zeros((VMAX, W1MAX, 2), jnp.float32), avail[0].astype(jnp.int32),
+        jnp.int32(0),
+    )
+    (z, n_prev, cost, done, T, _, _, _), (no_hist, ns_hist) = jax.lax.scan(
+        step, init, (prices, avail.astype(jnp.int32), pred)
+    )
+
+    h_max = alpha * j.n_max.astype(jnp.float32) + beta
+    dt = jnp.maximum(j.workload - z, 0.0) / h_max
+    T_final = jnp.where(done, T, j.deadline.astype(jnp.float32) + dt)
+    cost_final = cost + jnp.where(done, 0.0, j.p_o * j.n_max.astype(jnp.float32) * dt)
+    value = value_fn(jcfg, T_final)
+    return {
+        "utility": value - cost_final,
+        "value": value,
+        "cost": cost_final,
+        "completion_time": T_final,
+        "z_ddl": z,
+        "completed": done,
+        "n_od": no_hist,
+        "n_spot": ns_hist,
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("tput",))
+def simulate_pool(pool_arrays: dict, j: JobArrays, tput: ThroughputConfig,
+                  prices, avail, pred):
+    """vmap over the policy pool. pool_arrays from specs_to_arrays."""
+    n = len(pool_arrays["kind"])
+    rho = pool_arrays.get("rho")
+    rho = jnp.ones(n, jnp.float32) if rho is None else jnp.asarray(rho)
+    fn = lambda k, w, v, s, r: simulate_one(
+        k, w, v, s, j, tput, prices, avail, pred, rho=r
+    )
+    return jax.vmap(fn)(
+        jnp.asarray(pool_arrays["kind"]), jnp.asarray(pool_arrays["omega"]),
+        jnp.asarray(pool_arrays["v"]), jnp.asarray(pool_arrays["sigma"]), rho,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tput",))
+def simulate_pool_jobs(pool_arrays: dict, jobs: JobArrays, tput: ThroughputConfig,
+                       prices, avail, pred):
+    """Double vmap: jobs (leading axis) x policy pool -> dict of (J, P, ...).
+
+    ``jobs`` leaves are stacked (J,) arrays; prices/avail: (J, d_max);
+    pred: (J, d_max, W1MAX, 2). One XLA call simulates the paper's whole
+    Fig. 9/10 workload."""
+
+    def per_job(job_row, pr, av, pm):
+        return simulate_pool(pool_arrays, job_row, tput, pr, av, pm)
+
+    return jax.vmap(per_job)(jobs, prices, avail, pred)
+
+
+def stack_jobs(jobs) -> JobArrays:
+    return JobArrays(*[
+        jnp.stack([jnp.asarray(getattr(JobArrays.of(j), f)) for j in jobs])
+        for f in JobArrays._fields
+    ])
+
+
+def prepare_inputs(trace, pred_matrix, d_max: int):
+    """Pad/trim trace + prediction matrix to (d_max, ...) jnp arrays."""
+    prices = jnp.asarray(trace.prices[:d_max], jnp.float32)
+    avail = jnp.asarray(trace.avail[:d_max], jnp.int32)
+    if pred_matrix is None:
+        pm = np.zeros((d_max, W1MAX, 2), np.float32)
+        pm[:, :, 0] = np.asarray(trace.prices[:d_max])[:, None]
+        pm[:, :, 1] = np.asarray(trace.avail[:d_max])[:, None]
+    else:
+        pm = np.asarray(pred_matrix[:d_max, :W1MAX], np.float32)
+        if pm.shape[1] < W1MAX:
+            pad = np.repeat(pm[:, -1:], W1MAX - pm.shape[1], axis=1)
+            pm = np.concatenate([pm, pad], axis=1)
+    return prices, avail, jnp.asarray(pm)

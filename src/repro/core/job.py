@@ -1,0 +1,60 @@
+"""Fine-tuning job model: the paper's four-tuple {L, d, N^min, N^max} plus the
+deadline value function V(T) (Eq. 4) and its reformulation Ṽ(Z^ddl) (Eq. 9).
+
+Ṽ absorbs the *termination configuration*: any workload left at the deadline
+is finished immediately with N^max on-demand instances, so the value and the
+post-deadline cost become functions of Z^ddl only (Sec. III-E.2).
+
+All functions are jnp-compatible (work under jit/vmap) and accept numpy.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import JobConfig, ThroughputConfig
+
+
+def expected_progress(job: JobConfig, t):
+    """Uniform workload slicing Z^exp_t = (L/d) * t (Eq. 6)."""
+    return job.workload / job.deadline * t
+
+
+def value_fn(job: JobConfig, T):
+    """V(T), Eq. 4: full value v until d, linear decay to 0 at gamma*d."""
+    v, d, g = job.value, job.deadline, job.gamma
+    T = jnp.asarray(T, jnp.float32)
+    decay = v * (1.0 - (T - d) / ((g - 1.0) * d))
+    return jnp.where(T <= d, v, jnp.clip(decay, 0.0, v))
+
+
+def termination_time(job: JobConfig, tput: ThroughputConfig, z_ddl):
+    """Extra (fractional) slots past d to finish L - Z^ddl with N^max on-demand."""
+    rate = tput.alpha * job.n_max + tput.beta
+    remaining = jnp.maximum(job.workload - jnp.asarray(z_ddl, jnp.float32), 0.0)
+    return remaining / rate
+
+
+def tilde_value(job: JobConfig, tput: ThroughputConfig, z_ddl):
+    """Ṽ(Z^ddl), Eq. 9: value at completion minus post-deadline on-demand cost.
+
+    Piecewise-linear in Z^ddl, increasing; NOT concave (slope jumps up at the
+    point where completion crosses gamma*d) — the window solver must not
+    greedy-stop early (see window_opt.py).
+    """
+    dt = termination_time(job, tput, z_ddl)
+    val = value_fn(job, job.deadline + dt)
+    post_cost = job.on_demand_price * job.n_max * dt
+    return val - post_cost
+
+
+def normalization_bounds(job: JobConfig):
+    """(u_min, u_max) for the EG selector's normalized utility (Thm. 2 needs
+    u in [0,1]). u_max = v; u_min = worst feasible spend with zero value."""
+    u_max = job.value
+    u_min = -job.on_demand_price * job.n_max * job.gamma * job.deadline
+    return u_min, u_max
+
+
+def normalize_utility(job: JobConfig, u):
+    lo, hi = normalization_bounds(job)
+    return jnp.clip((u - lo) / (hi - lo), 0.0, 1.0)

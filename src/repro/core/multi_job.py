@@ -1,0 +1,166 @@
+"""Multi-job scheduling — the paper's stated extension (Sec. III-A: "our
+framework can be readily extended to handle multiple jobs").
+
+Jobs arrive over time and COMPETE for the same finite spot pool; each job
+runs its own policy instance (chosen by the per-job EG selector state), and
+a simple priority mechanism arbitrates the shared capacity:
+
+  * spot supply is allocated in order of *deadline slack* (least-slack
+    first): jobs closest to violating their SLO get spot first — the
+    textbook EDF-style rule adapted to elastic allocations;
+  * on-demand is unlimited (cloud semantics), so contention only reshapes
+    the cheap-capacity split.
+
+The scheduler keeps the single-job policy semantics intact: every policy
+sees a *virtual* market whose availability is the residual supply after
+higher-priority jobs took their share. Utilities therefore remain
+comparable with single-job simulation, and Theorem 2 applies per job
+unchanged (the pool's utility estimates are computed on each job's
+realized residual market).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import JobConfig, ThroughputConfig
+from repro.core.job import value_fn
+from repro.core.market import Trace
+from repro.core.policies import BasePolicy, Obs
+
+
+@dataclass
+class ActiveJob:
+    job_id: int
+    job: JobConfig
+    policy: BasePolicy
+    arrival: int
+    pred: Optional[np.ndarray] = None      # (T, h+1, 2) absolute-time forecasts
+    z: float = 0.0
+    n_prev: int = 0
+    cost: float = 0.0
+    t_complete: Optional[float] = None
+    alloc_spot: List[int] = field(default_factory=list)
+    alloc_od: List[int] = field(default_factory=list)
+
+    def slack(self, t: int, tput: ThroughputConfig) -> float:
+        """Slots to spare if finished at N^max from now on (can be < 0)."""
+        remaining = max(self.job.workload - self.z, 0.0)
+        h_max = tput.alpha * self.job.n_max + tput.beta
+        need = remaining / h_max
+        deadline_abs = self.arrival + self.job.deadline
+        return (deadline_abs - t) - need
+
+    @property
+    def local_t(self) -> int:
+        return -1  # set per step by the scheduler
+
+
+@dataclass
+class JobResult:
+    job_id: int
+    utility: float
+    value: float
+    cost: float
+    completion_time: float
+    completed_by_deadline: bool
+
+
+class MultiJobScheduler:
+    """Slot-synchronous scheduler over a shared market trace."""
+
+    def __init__(self, tput: ThroughputConfig, trace: Trace):
+        self.tput = tput
+        self.trace = trace
+        self.active: List[ActiveJob] = []
+        self.done: List[JobResult] = []
+        self._next_id = 0
+
+    def submit(self, t: int, job: JobConfig, policy: BasePolicy,
+               pred: Optional[np.ndarray] = None) -> int:
+        policy.reset(job, self.tput)
+        aj = ActiveJob(self._next_id, job, policy, arrival=t, pred=pred)
+        self.active.append(aj)
+        self._next_id += 1
+        return aj.job_id
+
+    # ------------------------------------------------------------------
+    def step(self, t: int):
+        """One market slot: least-slack-first spot arbitration."""
+        price = float(self.trace.prices[t])
+        supply = int(self.trace.avail[t])
+        order = sorted(self.active, key=lambda a: a.slack(t, self.tput))
+        for aj in order:
+            local_t = t - aj.arrival
+            if local_t >= aj.job.deadline:
+                continue  # termination config handles it at finalize
+            pred = None
+            if aj.pred is not None:
+                pred = aj.pred[t]
+                pred = np.array(pred, copy=True)
+                # residual supply for the present slot; forecasts stay global
+                pred[0, 1] = min(pred[0, 1], supply)
+            obs = Obs(t=local_t, price=price, avail=supply, z_prev=aj.z,
+                      n_prev=aj.n_prev, pred=pred)
+            n_o, n_s = aj.policy.decide(obs)
+            n_s = int(np.clip(n_s, 0, min(supply, aj.job.n_max)))
+            n_o = int(np.clip(n_o, 0, aj.job.n_max - n_s))
+            n = n_o + n_s
+            if 0 < n < aj.job.n_min:
+                n_o += aj.job.n_min - n
+                n = n_o + n_s
+            supply -= n_s
+
+            mu = 1.0 if n == aj.n_prev else (
+                self.tput.mu1 if n > aj.n_prev else self.tput.mu2
+            )
+            if n == 0 and aj.n_prev == 0:
+                mu = 1.0
+            work = mu * (self.tput.alpha * n + (self.tput.beta if n > 0 else 0.0))
+            aj.cost += n_s * price + n_o * aj.job.on_demand_price
+            aj.alloc_spot.append(n_s)
+            aj.alloc_od.append(n_o)
+            if work > 0 and aj.z + work >= aj.job.workload and aj.t_complete is None:
+                aj.t_complete = local_t + (aj.job.workload - aj.z) / work
+            aj.z = min(aj.z + work, aj.job.workload)
+            aj.n_prev = n
+
+        # retire finished / past-deadline jobs
+        still = []
+        for aj in self.active:
+            local_t = t - aj.arrival
+            if aj.t_complete is not None:
+                self.done.append(self._finalize(aj))
+            elif local_t + 1 >= aj.job.deadline:
+                self.done.append(self._finalize(aj))
+            else:
+                still.append(aj)
+        self.active = still
+
+    # ------------------------------------------------------------------
+    def _finalize(self, aj: ActiveJob) -> JobResult:
+        job, tput = aj.job, self.tput
+        if aj.t_complete is None:
+            h_max = tput.alpha * job.n_max + tput.beta
+            dt = (job.workload - aj.z) / h_max
+            aj.t_complete = job.deadline + dt
+            aj.cost += job.on_demand_price * job.n_max * dt
+        value = float(value_fn(job, aj.t_complete))
+        return JobResult(
+            job_id=aj.job_id, utility=value - aj.cost, value=value,
+            cost=aj.cost, completion_time=float(aj.t_complete),
+            completed_by_deadline=aj.t_complete <= job.deadline,
+        )
+
+    # ------------------------------------------------------------------
+    def run(self, t_end: int):
+        for t in range(t_end):
+            if not self.active:
+                continue
+            self.step(t)
+        for aj in self.active:  # anything left at horizon end
+            self.done.append(self._finalize(aj))
+        self.active = []
+        return self.done

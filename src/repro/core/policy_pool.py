@@ -1,0 +1,108 @@
+"""Policy pool construction (Sec. V-A / VI-A).
+
+The paper's pool: 105 AHAP policies (omega in 1..5, v in 1..omega, sigma in
+{0.3 .. 0.9}) + 7 AHANP policies (same sigmas) = 112, indexed 1..112 in
+Fig. 10. ``PolicySpec`` is the array encoding shared by the python policies
+and the vmapped JAX simulator.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.policies import (
+    AHANP,
+    AHANPParams,
+    AHAP,
+    AHAPParams,
+    BasePolicy,
+    MSU,
+    ODOnly,
+    UP,
+)
+
+KIND_AHAP, KIND_AHANP, KIND_OD, KIND_MSU, KIND_UP = 0, 1, 2, 3, 4
+KIND_NAMES = {0: "ahap", 1: "ahanp", 2: "od_only", 3: "msu", 4: "up"}
+
+SIGMAS = (0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9)
+OMEGAS = (1, 2, 3, 4, 5)
+
+
+@dataclass(frozen=True)
+class PolicySpec:
+    kind: int
+    omega: int = 0
+    v: int = 0
+    sigma: float = 0.0
+    rho: float = 1.0  # Robust-AHAP availability discount (1.0 = paper AHAP)
+
+    @property
+    def name(self) -> str:
+        if self.kind == KIND_AHAP:
+            r = f",r={self.rho:.2f}" if self.rho < 1.0 else ""
+            return f"ahap(w={self.omega},v={self.v},s={self.sigma:.1f}{r})"
+        if self.kind == KIND_AHANP:
+            return f"ahanp(s={self.sigma:.1f})"
+        return KIND_NAMES[self.kind]
+
+    def build(self) -> BasePolicy:
+        if self.kind == KIND_AHAP:
+            return AHAP(AHAPParams(self.omega, self.v, self.sigma, self.rho))
+        if self.kind == KIND_AHANP:
+            return AHANP(AHANPParams(self.sigma))
+        return {KIND_OD: ODOnly, KIND_MSU: MSU, KIND_UP: UP}[self.kind]()
+
+
+def paper_pool(
+    omegas: Sequence[int] = OMEGAS,
+    sigmas: Sequence[float] = SIGMAS,
+    fixed_v: Optional[int] = None,
+    fixed_sigma: Optional[float] = None,
+    include_ahanp: bool = True,
+) -> List[PolicySpec]:
+    """105 AHAP + 7 AHANP by default; the fixed_* arguments reproduce the
+    Fig. 9 hyperparameter-ablation pools (e.g. v=1 only, or sigma=0.9 only)."""
+    pool: List[PolicySpec] = []
+    for w in omegas:
+        for v in range(1, w + 1):
+            if fixed_v is not None and v != fixed_v:
+                continue
+            for s in sigmas:
+                if fixed_sigma is not None and abs(s - fixed_sigma) > 1e-9:
+                    continue
+                pool.append(PolicySpec(KIND_AHAP, w, v, s))
+    if include_ahanp:
+        for s in sigmas:
+            if fixed_sigma is not None and abs(s - fixed_sigma) > 1e-9:
+                continue
+            pool.append(PolicySpec(KIND_AHANP, 0, 0, s))
+    return pool
+
+
+def baseline_specs() -> List[PolicySpec]:
+    return [PolicySpec(KIND_OD), PolicySpec(KIND_MSU), PolicySpec(KIND_UP)]
+
+
+def robust_pool(
+    rhos: Sequence[float] = (0.5, 0.7, 0.85),
+    omegas: Sequence[int] = (3, 5),
+    sigmas: Sequence[float] = (0.3, 0.5, 0.7, 0.9),
+) -> List[PolicySpec]:
+    """BEYOND-PAPER: Robust-AHAP candidates (availability-pessimistic)."""
+    return [
+        PolicySpec(KIND_AHAP, w, 1, s, rho=r)
+        for r in rhos for w in omegas for s in sigmas
+    ]
+
+
+def specs_to_arrays(pool: Sequence[PolicySpec]) -> dict:
+    """Array encoding for the vmapped simulator."""
+    return {
+        "kind": np.array([p.kind for p in pool], np.int32),
+        "omega": np.array([p.omega for p in pool], np.int32),
+        "v": np.array([max(p.v, 1) for p in pool], np.int32),
+        "sigma": np.array([p.sigma for p in pool], np.float32),
+        "rho": np.array([p.rho for p in pool], np.float32),
+    }

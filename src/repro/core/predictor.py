@@ -1,0 +1,175 @@
+"""Spot price/availability forecasting (paper Sec. II-C, Fig. 3).
+
+Every predictor produces a *prediction matrix* P[t, j, c]: the forecast made
+at slot t for slot t+j (j=0 is the observed present, always exact), with
+channels c=0 price, c=1 availability. The matrix form is what the vmapped
+policy simulator consumes.
+
+Predictors:
+  PerfectPredictor  — oracle (paper's 'Perfect-Predictor' strategy)
+  NoisyPredictor    — the paper's four noise regimes: {magnitude-dependent,
+                      fixed-magnitude} x {uniform, heavy-tail}, with error
+                      growing in the prediction step j (multi-step error
+                      accumulation, Definition 1)
+  ARIMAPredictor    — seasonally-differenced AR(p) fit by least squares on a
+                      rolling history window (the paper's ARIMA with 30-min
+                      slots), forecast recursively
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.market import Trace
+
+NOISE_KINDS = (
+    "magdep_uniform",
+    "fixed_uniform",
+    "magdep_heavytail",
+    "fixed_heavytail",
+)
+
+
+def _true_future(trace: Trace, horizon: int) -> np.ndarray:
+    """(T, horizon+1, 2) true values, edge-padded past the end."""
+    T = len(trace)
+    prices = np.concatenate([trace.prices, np.full(horizon, trace.prices[-1])])
+    avail = np.concatenate([trace.avail, np.full(horizon, trace.avail[-1])])
+    out = np.empty((T, horizon + 1, 2))
+    for j in range(horizon + 1):
+        out[:, j, 0] = prices[j : j + T]
+        out[:, j, 1] = avail[j : j + T]
+    return out
+
+
+class PerfectPredictor:
+    def __init__(self, trace: Trace):
+        self.trace = trace
+
+    def matrix(self, horizon: int) -> np.ndarray:
+        return _true_future(self.trace, horizon)
+
+
+class NoisyPredictor:
+    """Perfect forecast corrupted by one of the four paper noise regimes.
+
+    ``level`` is the relative error scale (e.g. 0.1 = 10%); the j-step error
+    scales with sqrt(j) (error accumulation in multi-step forecasts).
+    """
+
+    def __init__(self, trace: Trace, kind: str, level: float, seed: int = 0,
+                 avail_max: int = 16):
+        assert kind in NOISE_KINDS, kind
+        self.trace, self.kind, self.level, self.seed = trace, kind, level, seed
+        self.avail_max = avail_max
+
+    def matrix(self, horizon: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        out = _true_future(self.trace, horizon)
+        T = out.shape[0]
+        scale = self.level * np.sqrt(np.arange(horizon + 1))  # 0 at j=0
+        ref = np.stack([
+            np.full(T, np.mean(self.trace.prices)),
+            np.full(T, np.mean(self.trace.avail)),
+        ], axis=-1)  # (T,2) reference magnitudes for fixed-magnitude noise
+        if self.kind.endswith("uniform"):
+            eps = rng.uniform(-1, 1, out.shape)
+        else:  # heavy-tail: Student-t(3), clipped for sanity
+            eps = np.clip(rng.standard_t(3, out.shape), -8, 8) / np.sqrt(3)
+        eps = eps * scale[None, :, None]
+        if self.kind.startswith("magdep"):
+            noisy = out * (1.0 + eps)
+        else:
+            noisy = out + eps * ref[:, None, :]
+        noisy[..., 0] = np.clip(noisy[..., 0], 0.01, 10.0)
+        noisy[..., 1] = np.clip(np.round(noisy[..., 1]), 0, self.avail_max)
+        noisy[:, 0, :] = out[:, 0, :]  # the present is observed, not predicted
+        return noisy
+
+
+@dataclass
+class ARIMAConfig:
+    p: int = 2                 # AR order on deseasonalized residuals
+    seasonal_lag: int = 48     # one day of 30-min slots
+    history: int = 10 * 48     # fit window
+    ridge: float = 1e-3
+
+
+class ARIMAPredictor:
+    """Seasonal AR: y_t = m_{t mod s} + r_t with AR(p) residuals.
+
+    The seasonal profile m (per time-of-day mean over the history window)
+    captures the diurnal cycle; the residual AR(p) (numpy lstsq with ridge)
+    captures the persistent noise — a SARIMA-family decomposition that beats
+    both pure persistence and naive seasonal differencing on AR-dominated
+    diurnal traces (test_market_predictor.py pins this).
+    """
+
+    def __init__(self, trace: Trace, cfg: Optional[ARIMAConfig] = None,
+                 avail_max: int = 16):
+        self.trace = trace
+        self.cfg = cfg or ARIMAConfig(seasonal_lag=trace.slots_per_day)
+        self.avail_max = avail_max
+
+    def _fit_forecast(self, series: np.ndarray, t: int, horizon: int) -> np.ndarray:
+        c = self.cfg
+        s, p = c.seasonal_lag, c.p
+        start = max(0, t + 1 - c.history)
+        hist = series[start : t + 1]
+        if len(hist) < s + p + 8:  # not enough data: persistence forecast
+            return np.full(horizon, series[t])
+        logspace = bool(np.all(hist > 0))  # prices: multiplicative dynamics
+        h = np.log(hist) if logspace else hist.astype(float)
+        # smoothed seasonal profile over the history window
+        idx = (np.arange(start, t + 1)) % s
+        prof = np.full(s, h.mean())
+        for k in range(s):
+            sel = h[idx == k]
+            if len(sel):
+                prof[k] = sel.mean()
+        w = 5  # circular smoothing kills per-slot profile noise
+        ker = np.ones(w) / w
+        prof = np.convolve(np.concatenate([prof[-w:], prof, prof[:w]]), ker, "same")[w:-w]
+        r = h - prof[idx]
+        # AR(p) on deseasonalized residuals
+        X = np.stack([r[p - i - 1 : len(r) - i - 1] for i in range(p)], axis=1)
+        y = r[p:]
+        A = X.T @ X + c.ridge * len(y) * np.eye(p)
+        coef = np.linalg.solve(A, X.T @ y)
+        rbuf = list(r[-p:])  # oldest..newest
+        out = np.empty(horizon)
+        for j in range(1, horizon + 1):
+            rn = float(np.dot(coef, rbuf[::-1][:p]))
+            v = prof[(t + j) % s] + rn
+            out[j - 1] = np.exp(v) if logspace else v
+            rbuf.append(rn)
+        return out
+
+    def matrix(self, horizon: int) -> np.ndarray:
+        T = len(self.trace)
+        out = _true_future(self.trace, horizon)  # j=0 column = observed
+        for t in range(T):
+            fp = self._fit_forecast(self.trace.prices, t, horizon)
+            fa = self._fit_forecast(self.trace.avail.astype(float), t, horizon)
+            out[t, 1:, 0] = np.clip(fp, 0.01, 10.0)
+            out[t, 1:, 1] = np.clip(np.round(fa), 0, self.avail_max)
+        return out
+
+
+def mape(pred: np.ndarray, true: np.ndarray) -> float:
+    return float(np.mean(np.abs(pred - true) / np.maximum(np.abs(true), 1e-6)))
+
+
+def forecast_errors(trace: Trace, predictor, horizon: int) -> dict:
+    """Per-step MAPE for price and availability (benchmarks/fig3)."""
+    M = predictor.matrix(horizon)
+    truth = _true_future(trace, horizon)
+    out = {"price": [], "avail": []}
+    T = len(trace)
+    for j in range(1, horizon + 1):
+        valid = np.arange(T - j)
+        out["price"].append(mape(M[valid, j, 0], truth[valid, j, 0]))
+        out["avail"].append(mape(M[valid, j, 1], np.maximum(truth[valid, j, 1], 1)))
+    return out

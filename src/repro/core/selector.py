@@ -1,0 +1,74 @@
+"""Online Policy Selection (Algorithm 2): Exponentiated Gradient over the
+policy pool, full-information (every candidate's utility is evaluated per
+job — cheap thanks to the vmapped simulator).
+
+Guarantee (Theorem 2): with eta = sqrt(2 ln M / K) and utilities normalized
+to [0,1], regret vs the best fixed policy is <= sqrt(2 K ln M).
+benchmarks/theorem2.py verifies the bound empirically; test_selector.py
+asserts it for adversarial utility streams.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass
+class SelectorState:
+    weights: np.ndarray               # (M,) simplex
+    eta: float
+    k: int = 0
+    cum_expected: float = 0.0         # sum_k E_{w_k}[u_k]
+    cum_utils: Optional[np.ndarray] = None  # (M,) per-policy cumulative
+    weight_history: List[np.ndarray] = field(default_factory=list)
+
+
+def init_selector(n_policies: int, horizon: int, eta: Optional[float] = None,
+                  track_history: bool = False) -> SelectorState:
+    eta = float(np.sqrt(2.0 * np.log(n_policies) / max(horizon, 1))) if eta is None else eta
+    st = SelectorState(
+        weights=np.full(n_policies, 1.0 / n_policies),
+        eta=eta,
+        cum_utils=np.zeros(n_policies),
+    )
+    if track_history:
+        st.weight_history.append(st.weights.copy())
+    return st
+
+
+def select(state: SelectorState, rng: np.random.Generator) -> int:
+    """Sample the policy to run for the incoming job (Line 6)."""
+    return int(rng.choice(len(state.weights), p=state.weights))
+
+
+def update(state: SelectorState, utilities: np.ndarray,
+           track_history: bool = False) -> SelectorState:
+    """EG / multiplicative-weights update (Lines 7-11). ``utilities`` must be
+    normalized to [0, 1] (see repro.core.job.normalize_utility)."""
+    u = np.clip(np.asarray(utilities, float), 0.0, 1.0)
+    assert u.shape == state.weights.shape
+    state.cum_expected += float(np.dot(state.weights, u))
+    state.cum_utils += u
+    logits = np.log(np.maximum(state.weights, 1e-300)) + state.eta * u
+    logits -= logits.max()
+    w = np.exp(logits)
+    state.weights = w / w.sum()
+    state.k += 1
+    if track_history:
+        state.weight_history.append(state.weights.copy())
+    return state
+
+
+def regret(state: SelectorState) -> float:
+    """max_m sum_k u_k^m - sum_k E_{w_k}[u_k]  (cumulative, Theorem 2 LHS)."""
+    return float(state.cum_utils.max() - state.cum_expected)
+
+
+def regret_bound(n_policies: int, k: int) -> float:
+    return float(np.sqrt(2.0 * k * np.log(n_policies)))
+
+
+def best_policy(state: SelectorState) -> int:
+    return int(np.argmax(state.weights))

@@ -1,0 +1,107 @@
+"""Slot-level execution of a policy on a market trace (reference simulator).
+
+Semantics (Sec. III): instances are billed per whole slot; progress in a slot
+is mu_t * H(n_t) (Eq. 1-2); the job stops renting once Z >= L; workload left
+at the deadline is finished by the termination configuration (N^max
+on-demand, fractionally billed) which is exactly the Ṽ(Z^ddl) - C^ddl
+objective (Eq. 9). Completion time is fractional within the finishing slot so
+V(T) is evaluated on continuous T (Eq. 4).
+
+The vmapped JAX twin of this loop lives in fast_sim.py; test_fast_sim.py
+pins them against each other.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from repro.configs.base import JobConfig, ThroughputConfig
+from repro.core.job import tilde_value, value_fn
+from repro.core.market import Trace
+from repro.core.policies import BasePolicy, Obs
+
+
+@dataclass
+class SimResult:
+    utility: float
+    value: float
+    cost: float
+    completion_time: float      # slots (may exceed d via termination config)
+    z_ddl: float
+    completed_by_deadline: bool
+    n_total: np.ndarray
+    n_spot: np.ndarray
+    n_od: np.ndarray
+
+    @property
+    def workload_done(self) -> float:
+        return self.z_ddl
+
+
+def simulate(
+    policy: BasePolicy,
+    job: JobConfig,
+    tput: ThroughputConfig,
+    trace: Trace,
+    pred_matrix: Optional[np.ndarray] = None,  # (T, horizon+1, 2)
+) -> SimResult:
+    d = job.deadline
+    assert len(trace) >= d, "trace shorter than deadline"
+    policy.reset(job, tput)
+
+    z, n_prev, cost = 0.0, 0, 0.0
+    T_complete: Optional[float] = None
+    ns_hist, no_hist = np.zeros(d, int), np.zeros(d, int)
+
+    for t in range(d):
+        price, avail = float(trace.prices[t]), int(trace.avail[t])
+        pred = pred_matrix[t] if pred_matrix is not None else None
+        obs = Obs(t=t, price=price, avail=avail, z_prev=z, n_prev=n_prev, pred=pred)
+        n_o, n_s = policy.decide(obs)
+        # hard feasibility (5b)-(5d): never trust a policy blindly
+        n_s = int(np.clip(n_s, 0, min(avail, job.n_max)))
+        n_o = int(np.clip(n_o, 0, job.n_max - n_s))
+        n = n_o + n_s
+        if 0 < n < job.n_min:
+            n_o += job.n_min - n
+            n = n_o + n_s
+
+        mu = 1.0 if n == n_prev else (tput.mu1 if n > n_prev else tput.mu2)
+        if n == 0 and n_prev == 0:
+            mu = 1.0
+        work = mu * (tput.alpha * n + (tput.beta if n > 0 else 0.0))
+        cost += n_s * price + n_o * job.on_demand_price  # whole-slot billing
+        ns_hist[t], no_hist[t] = n_s, n_o
+
+        if work > 0 and z + work >= job.workload and T_complete is None:
+            frac = (job.workload - z) / work
+            T_complete = t + frac
+        z = min(z + work, job.workload)
+        n_prev = n
+        if T_complete is not None:
+            break
+
+    if T_complete is not None:
+        value = float(value_fn(job, T_complete))
+    else:
+        # termination configuration: N^max on-demand past the deadline
+        h_max = tput.alpha * job.n_max + tput.beta
+        remaining = job.workload - z
+        dt = remaining / h_max
+        T_complete = d + dt
+        cost += job.on_demand_price * job.n_max * dt
+        value = float(value_fn(job, T_complete))
+
+    return SimResult(
+        utility=value - cost,
+        value=value,
+        cost=cost,
+        completion_time=float(T_complete),
+        z_ddl=float(z),
+        completed_by_deadline=T_complete <= d,
+        n_total=ns_hist + no_hist,
+        n_spot=ns_hist,
+        n_od=no_hist,
+    )

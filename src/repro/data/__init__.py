@@ -1,0 +1,2 @@
+from repro.data.loader import ShardedLMLoader
+from repro.data.synthetic import lm_batches, token_stream

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel: <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
+validated in interpret mode against the pure-jnp oracles in ref.py; ops.py
+holds the jit'd public wrappers.
+"""
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.lora_matmul import lora_matmul
+from repro.kernels.ssd_scan import ssd_scan

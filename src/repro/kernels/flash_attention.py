@@ -1,0 +1,108 @@
+"""Flash attention (forward) Pallas TPU kernel — causal and sliding-window.
+
+Online-softmax blockwise attention re-tiled for VMEM: a (bq x d) query tile
+stays resident while (bk x d) KV tiles stream through; running max/sum and
+the f32 output accumulator live in VMEM scratch across the sequential kv
+grid dimension. Masking uses block-level position iotas, so a fully-masked
+block costs one select, never an exp. This is the TPU adaptation of the
+paper's serving substrate hot spot (prefill_32k / long_500k shapes); the
+XLA twin lives in repro.models.attention._blockwise_attn.
+
+Layout: (BH, S, D) with heads folded into batch (GQA head repetition is the
+wrapper's job — see ops.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -2.0e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            sm_scale: float, causal: bool, window: Optional[int],
+            bq: int, bk: int, kv_steps: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * sm_scale        # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                   # (bk, d)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                  # (bq, bk)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok, s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(ki == kv_steps - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (BH, Sq, D)
+    k: jnp.ndarray,  # (BH, Sk, D)
+    v: jnp.ndarray,  # (BH, Sk, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    bq, bk = min(block_q, sq), min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0
+    kv_steps = sk // bk
+
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, sm_scale=1.0 / math.sqrt(d), causal=causal,
+            window=window, bq=bq, bk=bk, kv_steps=kv_steps,
+        ),
+        grid=(bh, sq // bq, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max
+            pltpu.VMEM((bq,), jnp.float32),      # running sum
+            pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

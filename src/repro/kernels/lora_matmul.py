@@ -1,0 +1,87 @@
+"""Fused base+LoRA matmul Pallas TPU kernel.
+
+Computes  y = x @ W + scale * (x @ A) @ B  in ONE pass over x and W:
+the rank-r bottleneck (x @ A) is accumulated alongside the main MXU matmul
+in an f32 VMEM scratch, and the (tiny) @B epilogue is fused into the final
+k-step — the low-rank path never round-trips through HBM. This is the
+TPU-native adaptation of the fused-adapter GEMMs used by LoRA serving
+systems (DESIGN.md §4): A (bk x r) stays resident in VMEM per k-step and r
+(= 8..64) rides in the MXU lane dimension.
+
+Grid: (M/bm, N/bn, K/bk), k innermost (sequential) so the f32 accumulators
+persist across k-steps of one (i, j) tile — the canonical Pallas matmul
+pattern. Block shapes default to MXU-aligned 128 tiles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, xa_ref, *,
+            scale: float, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xa_ref[...] = jnp.zeros_like(xa_ref)
+
+    x = x_ref[...]
+    acc_ref[...] += jnp.dot(
+        x, w_ref[...], preferred_element_type=jnp.float32
+    )
+    xa_ref[...] += jnp.dot(
+        x, a_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        delta = jnp.dot(
+            xa_ref[...], b_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        o_ref[...] = (acc_ref[...] + scale * delta).astype(o_ref.dtype)
+
+
+def lora_matmul(
+    x: jnp.ndarray,          # (M, K)
+    w: jnp.ndarray,          # (K, N)
+    a: jnp.ndarray,          # (K, r)
+    b: jnp.ndarray,          # (r, N)
+    scale: float,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    m, k = x.shape
+    k2, n = w.shape
+    r = a.shape[1]
+    assert k == k2 and a.shape[0] == k and b.shape == (r, n)
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    k_steps = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, k_steps=k_steps),
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),  # x
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),  # w
+            pl.BlockSpec((bk, r), lambda i, j, kk: (kk, 0)),   # a
+            pl.BlockSpec((r, bn), lambda i, j, kk: (0, j)),    # b
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[
+            # f32 accumulators resident in VMEM across the k grid dim
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, r), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w, a, b)

@@ -1,0 +1,96 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On TPU these dispatch the compiled kernels; on CPU (this container) they run
+interpret=True so tests exercise the real kernel bodies. The XLA model path
+(repro.models.*) is the default in the dry-run because Pallas TPU kernels
+cannot lower on the CPU backend (DESIGN.md §4); on real hardware the model
+can route its hot spots here via ``KernelConfig``.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.lora_matmul import lora_matmul as _lora
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@dataclass(frozen=True)
+class KernelConfig:
+    use_pallas: bool = True
+    interpret: bool = False      # forced True off-TPU
+
+    def resolved_interpret(self) -> bool:
+        return self.interpret or not on_tpu()
+
+
+DEFAULT = KernelConfig()
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "kcfg"))
+def lora_matmul(x, w, a, b, scale: float, kcfg: KernelConfig = DEFAULT):
+    """y = x @ W + scale * (x@A)@B. x:(..., K) flattened to 2-D internally."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if kcfg.use_pallas:
+        y = _lora(x2, w, a, b, scale, interpret=kcfg.resolved_interpret())
+    else:
+        y = ref.lora_matmul_ref(x2, w, a, b, scale)
+    return y.reshape(*lead, w.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "kcfg"))
+def attention(q, k, v, *, causal=True, window=None, kcfg: KernelConfig = DEFAULT):
+    """q:(B,Sq,H,D), k/v:(B,Sk,KV,D) with GQA -> (B,Sq,H,D)."""
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    if kcfg.use_pallas:
+        o = _flash(qt, kt, vt, causal=causal, window=window,
+                   interpret=kcfg.resolved_interpret())
+    else:
+        sk = kt.shape[1]
+        o = ref.flash_attention_ref(
+            qt.reshape(b, h, sq, d), kt.reshape(b, h, sk, d),
+            vt.reshape(b, h, sk, d), causal=causal, window=window,
+        ).reshape(b * h, sq, d)
+    return o.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "kcfg"))
+def ssd(x, dt, A, B, C, *, chunk=128, kcfg: KernelConfig = DEFAULT):
+    """Grouped-head SSD: x:(B,S,H,P), dt:(B,S,H), A:(H,), B/C:(B,S,G,N).
+
+    Returns (y:(B,S,H,P), state:(B,H,N,P))."""
+    bsz, s, hh, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = hh // g
+    Bh = jnp.repeat(B, rep, axis=2) if g != hh else B
+    Ch = jnp.repeat(C, rep, axis=2) if g != hh else C
+    xf = x.transpose(0, 2, 1, 3).reshape(bsz * hh, s, p)
+    dtf = dt.transpose(0, 2, 1).reshape(bsz * hh, s)
+    Af = jnp.tile(A, bsz)
+    Bf = Bh.transpose(0, 2, 1, 3).reshape(bsz * hh, s, n)
+    Cf = Ch.transpose(0, 2, 1, 3).reshape(bsz * hh, s, n)
+    if kcfg.use_pallas:
+        y, hf = _ssd(xf, dtf, Af, Bf, Cf, chunk=chunk,
+                     interpret=kcfg.resolved_interpret())
+    else:
+        y, hf = ref.ssd_scan_ref(xf, dtf, Af, Bf, Cf)
+    y = y.reshape(bsz, hh, s, p).transpose(0, 2, 1, 3)
+    return y, hf.reshape(bsz, hh, n, p)

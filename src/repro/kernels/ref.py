@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each kernel's tests sweep shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x, w, a, b, scale: float):
+    """x:(M,K) @ w:(K,N) + scale * (x@a):(M,r) @ b:(r,N), f32 accumulation."""
+    base = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    delta = jnp.dot(
+        jnp.dot(x.astype(jnp.float32), a.astype(jnp.float32)),
+        b.astype(jnp.float32),
+    )
+    return (base + scale * delta).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None):
+    """q,k,v:(B,H,S,D) -> (B,H,S,D); f32 softmax."""
+    d = q.shape[-1]
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(d)
+    sq, sk = q.shape[2], k.shape[2]
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    s = jnp.where(ok[None, None], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, B, C, h0=None):
+    """Sequential SSD recurrence oracle.
+
+    x:(BH, S, P), dt:(BH, S), A:(BH,), B,C:(BH, S, N).
+    h_t = exp(dt_t A) h_{t-1} + dt_t * outer(B_t, x_t);  y_t = C_t @ h_t.
+    Returns (y:(BH,S,P), h_final:(BH,N,P))."""
+    bh, s, p = x.shape
+    n = B.shape[-1]
+
+    def one(xh, dth, Ah, Bh, Ch, h0h):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            decay = jnp.exp(dtt * Ah)
+            h = decay * h + dtt * jnp.outer(bt, xt)  # (N, P)
+            y = ct @ h  # (P,)
+            return h, y
+
+        h, ys = jax.lax.scan(
+            step, h0h, (xh.astype(jnp.float32), dth.astype(jnp.float32),
+                        Bh.astype(jnp.float32), Ch.astype(jnp.float32))
+        )
+        return ys, h
+
+    if h0 is None:
+        h0 = jnp.zeros((bh, n, p), jnp.float32)
+    ys, hf = jax.vmap(one)(x, dt, A, B, C, h0)
+    return ys.astype(x.dtype), hf

@@ -1,0 +1,113 @@
+"""Mamba2 SSD chunk-scan Pallas TPU kernel.
+
+One grid step processes one (head, chunk) tile: the quadratic intra-chunk
+part runs as two MXU matmuls ((C Bᵀ ⊙ L-mask) and @x), and the (N x P)
+recurrent state lives in VMEM scratch across the *sequential* chunk grid
+dimension — the inter-chunk recurrence never leaves the core. This is the
+TPU-native shape of the SSD algorithm [arXiv:2405.21060]: no warp shuffles,
+the chunk length rides the MXU sublane dim and (N, P) the lane dim.
+
+Layout: x:(BH, S, P), dt:(BH, S), A:(BH, 1), B,C:(BH, S, N), S = nc * cs.
+Oracle: repro.kernels.ref.ssd_scan_ref (step-by-step recurrence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hfin_ref, state_ref, *,
+            cs: int, nc: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)        # (cs, P)
+    dt = dt_ref[0].astype(jnp.float32)      # (cs,)
+    a = a_ref[0, 0]                         # scalar
+    b = b_ref[0].astype(jnp.float32)        # (cs, N)
+    c = c_ref[0].astype(jnp.float32)        # (cs, N)
+
+    da = dt * a                             # (cs,) negative
+    cum = jnp.cumsum(da)                    # inclusive
+
+    # ---- intra-chunk: (C Bᵀ ⊙ mask ⊙ decay ⊙ dt_j) @ x ----
+    gb = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                       # (cs_i, cs_j)
+    li = jax.lax.broadcasted_iota(jnp.int32, (cs, cs), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (cs, cs), 1)
+    dec = jnp.exp(jnp.clip(cum[:, None] - cum[None, :], -60.0, 0.0))
+    m = jnp.where(li >= lj, gb * dec, 0.0) * dt[None, :]
+    y_intra = jax.lax.dot_general(
+        m, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                       # (cs, P)
+
+    # ---- inter-chunk: contribution of the incoming state ----
+    decay_in = jnp.exp(jnp.clip(cum, -60.0, 0.0))  # (cs,)
+    y_inter = jax.lax.dot_general(
+        c, state_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * decay_in[:, None]                   # (cs, N)@(N, P) -> (cs, P)
+
+    y_ref[0, ...] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # ---- state update: h <- exp(sum da) h + sum_j exp(cum_l - cum_j) dt_j B_j x_jᵀ
+    decay_to_end = jnp.exp(jnp.clip(cum[-1] - cum, -60.0, 0.0)) * dt  # (cs,)
+    chunk_state = jax.lax.dot_general(
+        b * decay_to_end[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                       # (N, P)
+    chunk_decay = jnp.exp(jnp.clip(cum[-1], -60.0, 0.0))
+    state_ref[...] = state_ref[...] * chunk_decay + chunk_state
+
+    @pl.when(ci == nc - 1)
+    def _done():
+        hfin_ref[0, ...] = state_ref[...]
+
+
+def ssd_scan(
+    x: jnp.ndarray,   # (BH, S, P)
+    dt: jnp.ndarray,  # (BH, S)
+    A: jnp.ndarray,   # (BH,) negative per-head decay
+    B: jnp.ndarray,   # (BH, S, N)
+    C: jnp.ndarray,   # (BH, S, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    """Returns (y:(BH,S,P), h_final:(BH,N,P))."""
+    bh, s, p = x.shape
+    n = B.shape[-1]
+    cs = min(chunk, s)
+    assert s % cs == 0, (s, cs)
+    nc = s // cs
+    a2 = A.reshape(bh, 1)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, cs=cs, nc=nc),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, cs, p), lambda h, c_: (h, c_, 0)),  # x
+            pl.BlockSpec((1, cs), lambda h, c_: (h, c_)),        # dt
+            pl.BlockSpec((1, 1), lambda h, c_: (h, 0)),          # A
+            pl.BlockSpec((1, cs, n), lambda h, c_: (h, c_, 0)),  # B
+            pl.BlockSpec((1, cs, n), lambda h, c_: (h, c_, 0)),  # C
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cs, p), lambda h, c_: (h, c_, 0)),  # y
+            pl.BlockSpec((1, n, p), lambda h, c_: (h, 0, 0)),    # h_final
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+            jax.ShapeDtypeStruct((bh, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a2, B, C)

@@ -1,0 +1,251 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import: jax locks the device
+# count at first initialization (see spec — dry-run only; tests/benches see
+# the real single CPU device because they never import this module).
+# REPRO_DRYRUN_DEVICES (used by the subprocess mini-dryrun test) may shrink
+# the placeholder device count; the production default stays 512.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        + os.environ["REPRO_DRYRUN_DEVICES"]
+    )
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import functools  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    ASSIGNED_ARCHS,
+    INPUT_SHAPES,
+    TrainConfig,
+    get_config,
+    shape_applicable,
+)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import batch_axes, input_specs  # noqa: E402
+from repro.models import transformer as tf  # noqa: E402
+from repro.sharding import split_params, tree_shardings, use_sharding  # noqa: E402
+from repro.train.step import (  # noqa: E402
+    init_opt_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.utils.partition import is_lora_path, partition_by_path  # noqa: E402
+
+from repro.launch.hlo_analysis import analyze as analyze_hlo  # noqa: E402
+
+
+def build_step(cfg, shape, mesh, microbatches=None, rules=None):
+    """Returns (jitted_fn, example_args_as_SDS) for the shape's mode.
+
+    ``microbatches`` / ``rules`` override the defaults for §Perf hillclimb
+    experiments (launch/perf.py)."""
+    rng = jax.random.PRNGKey(0)
+    abs_params = jax.eval_shape(lambda: tf.init_params(rng, cfg))
+    values, axes = split_params(abs_params)
+    p_shard = tree_shardings(values, axes, mesh, rules)
+    batch_spec, cache_spec = input_specs(cfg, shape)
+    b_shard = tree_shardings(batch_spec, batch_axes(batch_spec), mesh, rules)
+    repl = NamedSharding(mesh, P())
+
+    if shape.mode == "train":
+        # microbatch so each accumulation step carries 1 sequence per device:
+        # keeps the 80-layer scan residuals inside v5e HBM (DESIGN.md §5)
+        axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        batch_shards = axis_sizes.get("data", 1) * axis_sizes.get("pod", 1)
+        mb = microbatches or max(1, shape.global_batch // batch_shards)
+        tcfg = TrainConfig(remat="full", seq_len=shape.seq_len,
+                           global_batch=shape.global_batch, microbatches=mb)
+        step = make_train_step(cfg, tcfg)
+        opt_spec = jax.eval_shape(functools.partial(init_opt_state), values)
+        lora_shards, _ = partition_by_path(p_shard, is_lora_path)
+        opt_shard = type(opt_spec)(step=repl, m=list(lora_shards), v=list(lora_shards))
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, opt_shard, b_shard),
+            out_shardings=(p_shard, opt_shard, None),
+        )
+        return jitted, (values, opt_spec, batch_spec)
+
+    if shape.mode == "prefill":
+        if cfg.encoder_only:
+            # encoder inference over the full window: no cache to build
+            from repro.models import transformer as _tf
+
+            pstep = lambda p, b: _tf.forward(cfg, p, b)[0]
+        else:
+            pstep = make_prefill_step(cfg, max_len=shape.seq_len)
+        jitted = jax.jit(pstep, in_shardings=(p_shard, b_shard), out_shardings=None)
+        return jitted, (values, batch_spec)
+
+    if shape.mode == "decode":
+        dstep = make_decode_step(cfg)
+        c_shard = tree_shardings(cache_spec, tf.cache_axes(cfg), mesh, rules)
+        jitted = jax.jit(
+            dstep,
+            in_shardings=(p_shard, c_shard, b_shard),
+            out_shardings=(None, c_shard),
+        )
+        return jitted, (values, cache_spec, batch_spec)
+
+    raise ValueError(shape.mode)
+
+
+_SMOKE_SHAPES = {
+    "train_4k": ("train_4k", 128, 8, "train"),
+    "prefill_32k": ("prefill_32k", 256, 4, "prefill"),
+    "decode_32k": ("decode_32k", 256, 8, "decode"),
+    "long_500k": ("long_500k", 512, 1, "decode"),
+}
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, verbose=True,
+            smoke: bool = False, hlo_dir: str = "", microbatches=None,
+            rules=None, variant: str = "", cfg_overrides=None):
+    if smoke:
+        from repro.configs import get_smoke_config
+        from repro.configs.base import ShapeConfig
+
+        cfg = get_smoke_config(arch)
+        shape = ShapeConfig(*_SMOKE_SHAPES[shape_name])
+    else:
+        cfg = get_config(arch)
+        shape = INPUT_SHAPES[shape_name]
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    ok, reason = shape_applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if smoke:
+        mesh_name = "2x2x2" if multi_pod else "2x2"
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "mode": shape.mode, "status": "skipped", "reason": reason,
+    }
+    if not ok:
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: SKIP ({reason})")
+        return rec
+
+    t0 = time.time()
+    if smoke:
+        mesh = jax.make_mesh(
+            (2, 2, 2) if multi_pod else (2, 2),
+            ("pod", "data", "model") if multi_pod else ("data", "model"),
+        )
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    if variant:
+        rec["variant"] = variant
+    with use_sharding(mesh, rules):
+        jitted, args = build_step(cfg, shape, mesh, microbatches=microbatches,
+                                  rules=rules)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    hlo = analyze_hlo(hlo_text)
+    n_dev = mesh.devices.size
+    if hlo_dir:
+        import zstandard
+
+        os.makedirs(hlo_dir, exist_ok=True)
+        fname = f"{arch}_{shape_name}_{mesh_name}.hlo.zst".replace("/", "-")
+        with open(os.path.join(hlo_dir, fname), "wb") as f:
+            f.write(zstandard.ZstdCompressor(level=6).compress(hlo_text.encode()))
+
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        devices=int(n_dev),
+        # loop-aware accounting (per device); raw cost_analysis kept as cross-check
+        flops_per_device=float(hlo["dot_flops"]),
+        bytes_per_device=float(hlo["traffic_bytes"]),
+        xla_cost_flops=float(cost.get("flops", -1.0)),
+        xla_cost_bytes=float(cost.get("bytes accessed", -1.0)),
+        collectives=hlo["collectives"],
+        collective_bytes=float(hlo["collective_bytes_total"]),
+        collective_bytes_bf16eq=float(hlo["collective_bytes_bf16eq"]),
+        bytes_per_device_bf16eq=float(hlo["traffic_bytes_bf16eq"]),
+        while_trips=hlo["while_trips"],
+        unknown_trip_whiles=hlo["unknown_trip_whiles"],
+        memory={
+            k: int(getattr(mem, k))
+            for k in (
+                "temp_size_in_bytes",
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        },
+    )
+    if verbose:
+        gb = rec["memory"].get("argument_size_in_bytes", 0) / 2**30
+        tmp = rec["memory"].get("temp_size_in_bytes", 0) / 2**30
+        print(
+            f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+            f"lower={t_lower:.1f}s compile={t_compile:.1f}s "
+            f"args={gb:.2f}GiB/dev temp={tmp:.2f}GiB/dev "
+            f"flops/dev={rec['flops_per_device']:.3e} "
+            f"coll={rec['collective_bytes']/2**20:.1f}MiB/dev "
+            f"trips={rec['while_trips']}"
+        )
+        print(f"[dryrun]   memory_analysis: {rec['memory']}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs + tiny mesh (subprocess tests)")
+    ap.add_argument("--hlo-dir", default="",
+                    help="also save zstd-compressed compiled HLO per combo")
+    args = ap.parse_args()
+
+    archs = list(ASSIGNED_ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    rec = run_one(arch, shape, mp, smoke=args.smoke,
+                                  hlo_dir=args.hlo_dir)
+                except Exception as e:  # a failure here is a bug in the system
+                    rec = {
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": "FAILED", "error": repr(e)[:2000],
+                    }
+                    n_fail += 1
+                    print(f"[dryrun] {arch} x {shape} FAILED: {e!r}")
+                fname = f"{arch}_{shape}_{rec['mesh']}.json".replace("/", "-")
+                with open(os.path.join(args.out, fname), "w") as f:
+                    json.dump(rec, f, indent=2)
+    print(f"[dryrun] done, failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

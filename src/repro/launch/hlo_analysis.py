@@ -1,0 +1,396 @@
+"""Loop-aware HLO accounting for the roofline analysis.
+
+``compiled.cost_analysis()`` on the CPU backend counts each ``while`` body
+once, but our models scan over layers (and blockwise attention scans over KV
+blocks), so naive numbers undercount by the trip counts. This module parses
+the optimized HLO text into computations, extracts while-loop trip counts
+from their condition computations, and walks the call graph accumulating:
+
+  * dot FLOPs            (2 * result_elems * contracted_size, x multiplier)
+  * kernel HBM traffic   (operand+result bytes of top-level ops, x multiplier)
+  * collective bytes     (result-shape bytes per collective kind, x multiplier)
+
+Fusion-internal ops contribute FLOPs (dots inside fusions) but not traffic
+(fusion = one kernel: only its operands/results touch HBM).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# ops that move no real data / are free (while/conditional: their bodies'
+# ops are counted; the op itself is control flow, not a kernel)
+_SKIP_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while", "conditional",
+}
+
+_SLICING_OPS = {"dynamic-slice", "gather", "slice"}
+
+
+def type_bytes(type_str: str, f32_as: int = 4) -> int:
+    """Bytes of an HLO type. ``f32_as=2`` gives the bf16-equivalent count:
+    the XLA *CPU* backend float-normalizes bf16 ops to f32 (converts inserted
+    around dots/collectives), so raw byte counts are ~2x what the TPU target
+    would move. The roofline reports both (EXPERIMENTS.md §Roofline)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        sz = f32_as if dt == "f32" else _DTYPE_BYTES.get(dt, 4)
+        total += n * sz
+    return total
+
+
+def type_shape(type_str: str) -> Optional[Tuple[int, ...]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return tuple(int(d) for d in dims.split(",")) if dims else ()
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    args: List[str]
+    attrs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    entry: bool = False
+    instrs: List[Instr] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)
+
+
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*\([^)]*\)?.*->.*\{\s*$")
+_HEADER_RE2 = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+
+def _split_type_op(rest: str) -> Optional[Tuple[str, str, str, str]]:
+    """'f32[2,3]{1,0} dot(%a, %b), attrs' -> (type, opcode, args, attrs)."""
+    rest = rest.strip()
+    if rest.startswith("("):  # tuple type: balanced parens
+        depth, i = 0, 0
+        while i < len(rest):
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            i += 1
+        type_str, tail = rest[: i + 1], rest[i + 1 :].strip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, tail = rest[:sp], rest[sp + 1 :].strip()
+    p = tail.find("(")
+    if p < 0:
+        return None
+    opcode = tail[:p].strip()
+    depth, i = 0, p
+    while i < len(tail):
+        if tail[i] == "(":
+            depth += 1
+        elif tail[i] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        i += 1
+    args, attrs = tail[p + 1 : i], tail[i + 1 :]
+    return type_str, opcode, args, attrs
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            if line.endswith("{") and "->" in line and not line.lstrip().startswith("//"):
+                m = _HEADER_RE2.match(line.strip())
+                if m:
+                    cur = Computation(name=m.group(2), entry=bool(m.group(1)))
+                    comps[cur.name] = cur
+                    if cur.entry:
+                        entry_name = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        parsed = _split_type_op(rest)
+        if parsed is None:
+            continue
+        type_str, opcode, args, attrs = parsed
+        arg_names = re.findall(r"%([\w.\-]+)", args)
+        cur.types[name] = type_str
+        cur.instrs.append(Instr(name, type_str, opcode, arg_names, attrs))
+    return comps, entry_name
+
+
+_COND_CONST_RE = re.compile(r"s32\[\]\{?\}?\s+constant\((\d+)\)")
+
+
+def extract_trip_counts(text: str, comps: Dict[str, Computation]) -> Dict[str, int]:
+    """cond-computation-name -> trip count, parsed from raw text blocks."""
+    trips: Dict[str, int] = {}
+    cur = None
+    block: List[str] = []
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            if line.endswith("{") and "->" in line:
+                m = _HEADER_RE2.match(line.strip())
+                if m and m.group(2) in comps:
+                    cur = m.group(2)
+                    block = []
+            continue
+        if line.startswith("}"):
+            vals = [int(v) for v in _COND_CONST_RE.findall("\n".join(block))]
+            if vals:
+                trips[cur] = max(vals)
+            cur = None
+            continue
+        block.append(line)
+    return trips
+
+
+def _attr_comp(attrs: str, key: str) -> List[str]:
+    m = re.search(key + r"=\{([^}]*)\}", attrs)
+    if m:
+        return re.findall(r"%?([\w.\-]+)", m.group(1))
+    m = re.search(key + r"=%?([\w.\-]+)", attrs)
+    return [m.group(1)] if m else []
+
+
+def analyze(text: str, top_k: int = 0) -> dict:
+    """Set top_k > 0 to also return the top traffic-contributing
+    instructions (hypothesis formation for §Perf)."""
+    comps, entry = parse_module(text)
+    trips = extract_trip_counts(text, comps)
+    contrib: Dict[tuple, float] = {}
+    if entry is None:
+        # entry computation conventionally named 'main' or marked ENTRY
+        entry = "main" if "main" in comps else next(iter(comps))
+
+    acc = {
+        "dot_flops": 0.0,
+        "traffic_bytes": 0.0,
+        "traffic_bytes_bf16eq": 0.0,
+        "collectives": {
+            k: {"bytes": 0.0, "bytes_bf16eq": 0.0, "count": 0.0}
+            for k in COLLECTIVE_KINDS
+        },
+        "while_trips": [],
+        "unknown_trip_whiles": 0,
+    }
+
+    def fusion_traffic(fused: Computation, f32_as: int) -> float:
+        """HBM bytes of one fusion kernel: parameter reads (sliced params
+        count at their slice size — the dominant over-count otherwise is a
+        loop-invariant stacked weight array read in full every scan step)
+        plus the write (in-place dynamic-update-slice roots count at the
+        update size, not the full aliased buffer)."""
+        instr_of = {i.name: i for i in fused.instrs}
+
+        _TRANSPARENT = ("bitcast", "reshape", "copy", "transpose", "convert")
+        # 'convert' is transparent for ALIASING purposes: the CPU backend's
+        # float normalization wraps in-place DUS updates in full-buffer
+        # convert chains (convert(dus(convert(x), convert(u)))) that the TPU
+        # simplifier folds away — counting them would charge a full
+        # checkpoint-buffer rewrite per scan step (found on qwen1.5-110b).
+
+        def resolve(name: str) -> str:
+            """Follow alias-transparent chains to the underlying value."""
+            seen = 0
+            while name in instr_of and instr_of[name].opcode in _TRANSPARENT \
+                    and instr_of[name].args and seen < 16:
+                name = instr_of[name].args[0]
+                seen += 1
+            return name
+
+        # how much of each parameter is actually read
+        param_read: Dict[str, float] = {}
+        param_sliced: Dict[str, bool] = {}
+        param_aliased: set = set()
+        dus_updates: Dict[str, str] = {}  # dus instr name -> update operand
+        for ins in fused.instrs:
+            if ins.opcode == "parameter":
+                param_read.setdefault(ins.name, 0.0)
+                param_sliced.setdefault(ins.name, True)
+            if ins.opcode == "dynamic-update-slice" and len(ins.args) >= 2:
+                dus_updates[ins.name] = ins.args[1]
+                tgt = resolve(ins.args[0])
+                if tgt in param_read:
+                    param_aliased.add(tgt)  # in-place buffer: not re-read
+        for ins in fused.instrs:
+            if ins.opcode == "parameter":
+                continue
+            for pos, a in enumerate(ins.args):
+                ar = resolve(a)
+                if ar not in param_read:
+                    continue
+                if ins.opcode in _SLICING_OPS and pos == 0:
+                    param_read[ar] += type_bytes(ins.type_str, f32_as)
+                elif ins.opcode == "dynamic-update-slice" and pos == 0:
+                    pass  # aliased above
+                elif ins.opcode in _TRANSPARENT:
+                    pass  # transparent; real consumer accounted separately
+                else:
+                    param_sliced[ar] = False
+        reads = 0.0
+        for ins in fused.instrs:
+            if ins.opcode != "parameter":
+                continue
+            if ins.name in param_aliased and param_read[ins.name] == 0:
+                continue
+            full = type_bytes(ins.type_str, f32_as)
+            if param_sliced.get(ins.name) and param_read[ins.name] > 0:
+                reads += min(full, param_read[ins.name])
+            else:
+                reads += full
+        # write size: root DUS (or tuple of DUS) writes only its updates
+        root = fused.instrs[-1] if fused.instrs else None
+        write = 0.0
+        if root is not None:
+            def _write_of(name: str) -> float:
+                name = resolve(name)
+                if name in dus_updates:
+                    upd = dus_updates[name]
+                    return type_bytes(fused.types.get(upd, ""), f32_as)
+                return type_bytes(fused.types.get(name, ""), f32_as)
+
+            if root.opcode == "tuple":
+                write = sum(_write_of(a) for a in root.args)
+            else:
+                write = _write_of(root.name)
+        return reads + write
+
+    def dot_flops(comp: Computation, ins: Instr) -> float:
+        out_shape = type_shape(ins.type_str) or ()
+        out_elems = 1
+        for d in out_shape:
+            out_elems *= d
+        lhs = ins.args[0] if ins.args else None
+        lhs_shape = type_shape(comp.types.get(lhs, "")) if lhs else None
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+        contracted = 1
+        if lhs_shape and m and m.group(1):
+            for d in m.group(1).split(","):
+                contracted *= lhs_shape[int(d)]
+        return 2.0 * out_elems * contracted
+
+    seen_stack = set()
+
+    def walk(comp_name: str, mult: float, in_fusion: bool):
+        if comp_name not in comps or mult == 0:
+            return
+        key = (comp_name, in_fusion)
+        comp = comps[comp_name]
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "dot":
+                acc["dot_flops"] += mult * dot_flops(comp, ins)
+            for kind in COLLECTIVE_KINDS:
+                if op == kind or op == kind + "-start":
+                    acc["collectives"][kind]["bytes"] += mult * type_bytes(ins.type_str)
+                    acc["collectives"][kind]["bytes_bf16eq"] += mult * type_bytes(
+                        ins.type_str, f32_as=2
+                    )
+                    acc["collectives"][kind]["count"] += mult
+            if not in_fusion and op not in _SKIP_TRAFFIC and not op.endswith("-done"):
+                if op == "fusion":
+                    called = _attr_comp(ins.attrs, "calls")
+                    fc = comps.get(called[0]) if called else None
+                    if fc is not None:
+                        b, b2 = fusion_traffic(fc, 4), fusion_traffic(fc, 2)
+                    else:
+                        b = type_bytes(ins.type_str)
+                        b2 = type_bytes(ins.type_str, 2)
+                elif op in _SLICING_OPS:
+                    # reads only the sliced region (~= result), writes result
+                    b = 2 * type_bytes(ins.type_str)
+                    b2 = 2 * type_bytes(ins.type_str, 2)
+                elif op == "dynamic-update-slice":
+                    upd = comp.types.get(ins.args[1], "") if len(ins.args) > 1 else ""
+                    b = 2 * type_bytes(upd)
+                    b2 = 2 * type_bytes(upd, 2)
+                else:
+                    b = type_bytes(ins.type_str)
+                    b2 = type_bytes(ins.type_str, f32_as=2)
+                    for a in ins.args:
+                        b += type_bytes(comp.types.get(a, ""))
+                        b2 += type_bytes(comp.types.get(a, ""), f32_as=2)
+                acc["traffic_bytes"] += mult * b
+                acc["traffic_bytes_bf16eq"] += mult * b2
+                if top_k:
+                    key = (comp_name, ins.name, op, ins.type_str[:48])
+                    contrib[key] = contrib.get(key, 0.0) + mult * b2
+            # descend
+            if op == "while":
+                bodies = _attr_comp(ins.attrs, "body")
+                conds = _attr_comp(ins.attrs, "condition")
+                trip = trips.get(conds[0], -1) if conds else -1
+                if trip < 0:
+                    trip = 1
+                    acc["unknown_trip_whiles"] += 1
+                else:
+                    acc["while_trips"].append(trip)
+                for b_ in bodies:
+                    walk(b_, mult * trip, in_fusion)
+                for c_ in conds:
+                    walk(c_, mult * trip, True)  # cond is tiny; no traffic
+            elif op == "fusion":
+                for c_ in _attr_comp(ins.attrs, "calls"):
+                    walk(c_, mult, True)
+            elif op in ("call", "async-start"):
+                for c_ in _attr_comp(ins.attrs, "to_apply") + _attr_comp(ins.attrs, "calls"):
+                    walk(c_, mult, in_fusion)
+            elif op == "conditional":
+                branches = _attr_comp(ins.attrs, "branch_computations")
+                branches += _attr_comp(ins.attrs, "true_computation")
+                branches += _attr_comp(ins.attrs, "false_computation")
+                for b_ in branches:
+                    walk(b_, mult, in_fusion)
+
+    walk(entry, 1.0, False)
+    acc["collective_bytes_total"] = sum(
+        v["bytes"] for v in acc["collectives"].values()
+    )
+    acc["collective_bytes_bf16eq"] = sum(
+        v["bytes_bf16eq"] for v in acc["collectives"].values()
+    )
+    if top_k:
+        acc["top_traffic"] = sorted(
+            ((v, k) for k, v in contrib.items()), reverse=True
+        )[:top_k]
+    return acc

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant — importing this module never touches jax
+device state (the dry-run forces 512 host devices *before* first jax init).
+
+Production topology (TPU v5e):
+  single-pod:  (data=16, model=16)            = 256 chips
+  multi-pod:   (pod=2, data=16, model=16)     = 512 chips
+One scheduler "instance" (paper's n_t) maps to one data-axis shard; the
+16-way model axis is the intra-instance tensor parallelism held fixed.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip) used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_cpu_mesh():
+    """1-device mesh with the production axis names (tests / examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,55 @@
+"""Re-run the loop-aware HLO accounting over saved compiled modules
+(experiments/hlo/*.hlo.zst) and refresh the dry-run JSON records — analyzer
+improvements then don't require recompiling 80 combos.
+
+    PYTHONPATH=src python -m repro.launch.reanalyze
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import zstandard
+
+from repro.launch.hlo_analysis import analyze
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hlo-dir", default="experiments/hlo")
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    n = 0
+    for f in sorted(os.listdir(args.hlo_dir)):
+        if not f.endswith(".hlo.zst"):
+            continue
+        base = f[: -len(".hlo.zst")]
+        jpath = os.path.join(args.dryrun_dir, base + ".json")
+        if not os.path.exists(jpath):
+            print(f"skip {base}: no JSON record")
+            continue
+        txt = zstandard.ZstdDecompressor().decompress(
+            open(os.path.join(args.hlo_dir, f), "rb").read()
+        ).decode()
+        acc = analyze(txt)
+        rec = json.load(open(jpath))
+        rec.update(
+            flops_per_device=float(acc["dot_flops"]),
+            bytes_per_device=float(acc["traffic_bytes"]),
+            bytes_per_device_bf16eq=float(acc["traffic_bytes_bf16eq"]),
+            collectives=acc["collectives"],
+            collective_bytes=float(acc["collective_bytes_total"]),
+            collective_bytes_bf16eq=float(acc["collective_bytes_bf16eq"]),
+            while_trips=acc["while_trips"],
+            unknown_trip_whiles=acc["unknown_trip_whiles"],
+        )
+        with open(jpath, "w") as fo:
+            json.dump(rec, fo, indent=2)
+        n += 1
+    print(f"re-analyzed {n} records")
+
+
+if __name__ == "__main__":
+    main()

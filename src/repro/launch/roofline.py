@@ -1,0 +1,139 @@
+"""Roofline analysis over the dry-run artifacts (spec §ROOFLINE ANALYSIS).
+
+Per (arch x shape x mesh) record:
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)    [s, per step]
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+All three are derived from the loop-aware HLO accounting (hlo_analysis.py)
+of the compiled SPMD module; HLO numbers are already per-device, so the
+per-chip terms divide by the peak rates only. Byte terms use the
+bf16-equivalent counts (the CPU backend f32-promotes bf16; DESIGN.md §4).
+
+MODEL_FLOPS = 6 N D (dense train) / 6 N_active D (MoE), 2 N D for inference
+prefill and 2 N D_step for decode; the MODEL/HLO ratio flags remat and
+dispatch waste.
+
+Usage:  PYTHONPATH=src python -m repro.launch.roofline [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Optional
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def model_flops_per_device(arch: str, shape_name: str, devices: int) -> float:
+    """Useful (algorithmic) matmul FLOPs per device per step."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        # LoRA train: fwd (2ND) + remat fwd (2ND) + activation-grad bwd (2ND)
+        total = 6.0 * n_active * tokens
+    elif shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: ONE token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / devices
+
+
+def analyze_record(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    dev = rec["devices"]
+    flops = rec["flops_per_device"]
+    mem_bytes = rec.get("bytes_per_device_bf16eq", rec["bytes_per_device"])
+    coll_bytes = rec.get("collective_bytes_bf16eq", rec["collective_bytes"])
+
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = mem_bytes / HBM_BW
+    t_collective = coll_bytes / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_collective}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec["shape"], dev)
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "devices": dev,
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_collective,
+        "dominant": dominant,
+        "model_flops_per_device": mf,
+        "useful_flops_ratio": mf / flops if flops else 0.0,
+        "step_bound_s": max(terms.values()),
+        "mfu_upper_bound": (mf / PEAK_FLOPS_BF16) / max(terms.values())
+        if max(terms.values()) > 0
+        else 0.0,
+    }
+
+
+def suggest(row: dict) -> str:
+    """One sentence on what would move the dominant term down."""
+    d = row["dominant"]
+    if d == "collective":
+        return ("reduce TP-activation all-reduces: sequence-parallel "
+                "(reduce-scatter+all-gather) or a narrower model axis")
+    if d == "memory":
+        return ("raise arithmetic intensity: larger per-step tile/batch, "
+                "fuse elementwise chains, or cast f32 paths to bf16")
+    return ("compute-bound: shave redundant FLOPs (remat policy, capacity "
+            "factor) or accept — near roofline")
+
+
+def load_dir(path: str):
+    recs = []
+    for f in sorted(os.listdir(path)):
+        if f.endswith(".json"):
+            recs.append(json.load(open(os.path.join(path, f))))
+    return recs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16", help="mesh filter (16x16 | 2x16x16 | all)")
+    ap.add_argument("--json-out", default="experiments/roofline.json")
+    args = ap.parse_args()
+
+    rows = []
+    skipped = []
+    for rec in load_dir(args.dir):
+        if args.mesh != "all" and rec.get("mesh") != args.mesh:
+            continue
+        r = analyze_record(rec)
+        if r is None:
+            skipped.append((rec["arch"], rec["shape"], rec.get("reason", rec.get("error", ""))))
+            continue
+        r["suggestion"] = suggest(r)
+        rows.append(r)
+
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    hdr = f"{'arch':22s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s} {'dominant':>10s} {'useful':>7s} {'MFU_ub':>7s}"
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(
+            f"{r['arch']:22s} {r['shape']:12s} {r['compute_s']:10.4f} "
+            f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} {r['dominant']:>10s} "
+            f"{r['useful_flops_ratio']:7.3f} {r['mfu_upper_bound']:7.3f}"
+        )
+    for a, s, why in skipped:
+        print(f"{a:22s} {s:12s} SKIPPED: {why}")
+
+    if args.json_out:
+        os.makedirs(os.path.dirname(args.json_out), exist_ok=True)
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"\nwrote {args.json_out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

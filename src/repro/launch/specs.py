@@ -1,0 +1,60 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run; no allocation).
+
+``input_specs(cfg, shape)`` mirrors what the data pipeline / serving frontend
+would feed the jitted step for that (architecture, input-shape) pair:
+  train    -> the training batch (tokens or stub embeddings + targets)
+  prefill  -> the prompt batch
+  decode   -> ONE new token plus a KV/state cache of seq_len
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tf
+
+
+def _token_batch(cfg: ModelConfig, b: int, s: int, with_targets: bool):
+    dt = jnp.dtype(cfg.dtype)
+    out = {}
+    if cfg.embed_inputs:
+        out["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+        if with_targets:
+            out["targets"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.m_rope:
+        out["positions"] = jax.ShapeDtypeStruct((b, s, 3), jnp.int32)
+    if cfg.encoder_only and with_targets:
+        out["loss_mask"] = jax.ShapeDtypeStruct((b, s), jnp.bool_)
+    return out
+
+
+def batch_axes(batch_spec):
+    """Logical axes for a batch dict (string leaves, see sharding.axes_to_str)."""
+    from repro.sharding import axes_to_str as a2s
+
+    ax = {}
+    for k, v in batch_spec.items():
+        if k == "embeds":
+            ax[k] = a2s(("batch", "seq", "embed"))
+        elif k == "positions":
+            ax[k] = a2s(("batch", "seq", None))
+        else:
+            ax[k] = a2s(("batch", "seq"))
+    return ax
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Returns (batch_spec, cache_spec_or_None)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.mode == "train":
+        return _token_batch(cfg, b, s, with_targets=True), None
+    if shape.mode == "prefill":
+        return _token_batch(cfg, b, s, with_targets=False), None
+    if shape.mode == "decode":
+        one = _token_batch(cfg, b, 1, with_targets=False)
+        cache = jax.eval_shape(lambda: tf.init_cache(cfg, b, s))
+        return one, cache
+    raise ValueError(shape.mode)

@@ -1,0 +1,9 @@
+from repro.models.transformer import (
+    cache_axes,
+    decode_step,
+    forward,
+    init_cache,
+    init_model,
+    init_params,
+    prefill,
+)

@@ -1,0 +1,268 @@
+"""GQA attention: full / causal / sliding-window, train+prefill+decode paths.
+
+Long sequences (prefill_32k) never materialize the full score matrix: the
+XLA path switches to a blockwise online-softmax formulation (lax.scan over KV
+blocks inside a lax.map over Q blocks) — the same tiling the Pallas TPU
+kernel (`repro/kernels/flash_attention.py`) uses, which keeps the dry-run
+memory analysis honest.
+
+Sliding-window decode uses a ring-buffer KV cache of size ``window`` so that
+`long_500k` decode is O(window), not O(seq) (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lora as lora_lib
+from repro.models.common import normal_param, zeros_param
+from repro.models.rope import apply_m_rope, apply_rope
+from repro.sharding import shard
+
+_NEG_INF = -2.0e38  # f32-safe mask value
+
+# switch to blockwise attention above this many score elements per (b,h)
+_BLOCKWISE_THRESHOLD = 4096 * 4096
+_Q_BLOCK = 512
+_KV_BLOCK = 1024
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": normal_param(ks[0], (d, h, hd), ("fsdp", "heads", None), dtype),
+        "wk": normal_param(ks[1], (d, kv, hd), ("fsdp", "kv_heads", None), dtype),
+        "wv": normal_param(ks[2], (d, kv, hd), ("fsdp", "kv_heads", None), dtype),
+        "wo": normal_param(
+            ks[3], (h, hd, d), ("heads", None, "fsdp"), dtype, stddev=1.0 / math.sqrt(h * hd)
+        ),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_param((h, hd), ("heads", None), dtype)
+        p["bk"] = zeros_param((kv, hd), ("kv_heads", None), dtype)
+        p["bv"] = zeros_param((kv, hd), ("kv_heads", None), dtype)
+    if cfg.o_bias:
+        p["bo"] = zeros_param((d,), (None,), dtype)
+    lora_tree = {}
+    r = cfg.lora.rank
+    lk = jax.random.split(ks[4], 4)
+    if "q" in cfg.lora.targets:
+        lora_tree["q"] = lora_lib.init_lora_pair(lk[0], d, (h, hd), r)
+    if "k" in cfg.lora.targets:
+        lora_tree["k"] = lora_lib.init_lora_pair(lk[1], d, (kv, hd), r)
+    if "v" in cfg.lora.targets:
+        lora_tree["v"] = lora_lib.init_lora_pair(lk[2], d, (kv, hd), r)
+    if "o" in cfg.lora.targets:
+        lora_tree["o"] = lora_lib.init_lora_pair(lk[3], h * hd, (d,), r)
+    if lora_tree:
+        p["lora"] = lora_tree
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Projections
+# ---------------------------------------------------------------------------
+
+def qkv_project(cfg, p, x, positions):
+    """x:(B,S,d) -> q:(B,S,h,hd), k,v:(B,S,kv,hd), with RoPE applied."""
+    scale = cfg.lora.alpha / cfg.lora.rank
+    lt = p.get("lora", {})
+    q = lora_lib.proj(x, p["wq"], p.get("bq"), lt.get("q"), scale)
+    k = lora_lib.proj(x, p["wk"], p.get("bk"), lt.get("k"), scale)
+    v = lora_lib.proj(x, p["wv"], p.get("bv"), lt.get("v"), scale)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    if cfg.m_rope:
+        q = apply_m_rope(q, positions, cfg.rope_theta, cfg.m_rope_sections)
+        k = apply_m_rope(k, positions, cfg.rope_theta, cfg.m_rope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def out_project(cfg, p, attn_out):
+    """attn_out:(B,S,h,hd) -> (B,S,d)."""
+    scale = cfg.lora.alpha / cfg.lora.rank
+    y = jnp.einsum("bsnh,nhd->bsd", attn_out, p["wo"])
+    if "bo" in p:
+        y = y + p["bo"]
+    lt = p.get("lora", {})
+    if "o" in lt:
+        b, s, n, hd = attn_out.shape
+        y = y + lora_lib.lora_delta(
+            attn_out.reshape(b, s, n * hd), lt["o"], scale
+        )
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Core attention (plain + blockwise)
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """(Sq, Sk) additive mask bias in f32."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, _NEG_INF)
+
+
+def _plain_attn(q, k, v, q_pos, k_pos, causal, window):
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    qf = q.astype(jnp.float32) * (1.0 / math.sqrt(hd))
+    qf = qf.reshape(b, sq, kvh, rep, hd)
+    scores = jnp.einsum("bqkrh,bskh->bkrqs", qf, k.astype(jnp.float32))
+    scores = scores + _mask_bias(q_pos, k_pos, causal, window)[None, None, None]
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkrqs,bskh->bqkrh", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def _blockwise_attn(q, k, v, q_pos, k_pos, causal, window):
+    """Online-softmax attention; never materializes more than a block pair."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    rep = h // kvh
+    qb, kb = min(_Q_BLOCK, sq), min(_KV_BLOCK, sk)
+    assert sq % qb == 0 and sk % kb == 0, (sq, qb, sk, kb)
+    nq, nk = sq // qb, sk // kb
+    sm = 1.0 / math.sqrt(hd)
+
+    kc = k.astype(jnp.float32).reshape(b, nk, kb, kvh, hd)
+    vc = v.astype(jnp.float32).reshape(b, nk, kb, kvh, hd)
+    k_pos_c = k_pos.reshape(nk, kb)
+
+    def per_q_block(args):
+        qi, q_blk, qp = args  # q_blk: (b, qb, h, hd)
+        qf = (q_blk.astype(jnp.float32) * sm).reshape(b, qb, kvh, rep, hd)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            k_blk, v_blk, kp = inp  # (b, kb, kvh, hd), (kb,)
+            s = jnp.einsum("bqkrh,bskh->bkrqs", qf, k_blk)
+            s = s + _mask_bias(qp, kp, causal, window)[None, None, None]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bkrqs,bskh->bkrqh", p, v_blk)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, rep, qb), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, rep, qb), jnp.float32)
+        a0 = jnp.zeros((b, kvh, rep, qb, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kc.swapaxes(0, 1), vc.swapaxes(0, 1), k_pos_c)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, qb, h, hd)
+
+    q_blocks = q.reshape(b, nq, qb, h, hd).swapaxes(0, 1)
+    q_pos_c = q_pos.reshape(nq, qb)
+    outs = jax.lax.map(per_q_block, (jnp.arange(nq), q_blocks, q_pos_c))
+    return outs.swapaxes(0, 1).reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def attend(q, k, v, q_pos, k_pos, causal: bool, window: Optional[int]):
+    """Dispatch: plain einsum for small S, blockwise for long sequences."""
+    if q.shape[1] * k.shape[1] <= _BLOCKWISE_THRESHOLD:
+        return _plain_attn(q, k, v, q_pos, k_pos, causal, window)
+    return _blockwise_attn(q, k, v, q_pos, k_pos, causal, window)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (full + sliding-window ring buffer)
+# ---------------------------------------------------------------------------
+
+def cache_width(cfg, max_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype, n_layers: int):
+    w = cache_width(cfg, max_len)
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    shape = (n_layers, batch, w, kv, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def kv_cache_specs(cfg, batch: int, max_len: int, n_layers: int):
+    """Logical axes for the cache pytree (for pjit shardings)."""
+    axes = ("layers", "batch", "kv_seq", "kv_heads", None)
+    return {"k": axes, "v": axes}
+
+
+def write_prefill(cfg, cache_k, cache_v, k, v):
+    """Write a full prefix (B,S,kv,hd) into one layer's cache (B,W,kv,hd)."""
+    w = cache_k.shape[1]
+    s = k.shape[1]
+    if s >= w:
+        kw, vw = k[:, -w:], v[:, -w:]
+        shift = s % w
+        return jnp.roll(kw, shift, axis=1), jnp.roll(vw, shift, axis=1)
+    return (
+        jax.lax.dynamic_update_slice_in_dim(cache_k, k, 0, axis=1),
+        jax.lax.dynamic_update_slice_in_dim(cache_v, v, 0, axis=1),
+    )
+
+
+def write_decode(cache_k, cache_v, k1, v1, index):
+    """Write one token (B,1,kv,hd) at ring slot index % W."""
+    w = cache_k.shape[1]
+    slot = index % w
+    return (
+        jax.lax.dynamic_update_slice_in_dim(cache_k, k1, slot, axis=1),
+        jax.lax.dynamic_update_slice_in_dim(cache_v, v1, slot, axis=1),
+    )
+
+
+def ring_positions(width: int, index):
+    """Position held by each ring slot after `index` tokens written; -1 = empty.
+
+    Slot j holds the largest position p < index with p % width == j.
+    """
+    j = jnp.arange(width, dtype=jnp.int32)
+    last = index - 1
+    p = last - ((last - j) % width)
+    return jnp.where((index > 0) & (p >= 0), p, -1)
+
+
+def decode_attend(cfg, q1, cache_k, cache_v, index):
+    """q1:(B,1,h,hd) against one layer's ring cache; returns (B,1,h,hd)."""
+    b, _, h, hd = q1.shape
+    w = cache_k.shape[1]
+    k_pos = ring_positions(w, index)
+    q_pos = jnp.full((1,), index, jnp.int32)
+    kvh = cache_k.shape[2]
+    rep = h // kvh
+    qf = q1.astype(jnp.float32).reshape(b, 1, kvh, rep, hd) * (1.0 / math.sqrt(hd))
+    s = jnp.einsum("bqkrh,bskh->bkrqs", qf, cache_k.astype(jnp.float32))
+    ok = k_pos >= 0
+    if cfg.sliding_window is not None:
+        # query position is index-1 (index = tokens written incl. current):
+        # valid keys satisfy k_pos > q_pos - window
+        ok &= k_pos > index - 1 - cfg.sliding_window
+    # causal w.r.t. current index is implied: all cached positions < index
+    s = jnp.where(ok[None, None, None, None, :], s, _NEG_INF)
+    wgt = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkrqs,bskh->bqkrh", wgt, cache_v.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q1.dtype)

@@ -1,0 +1,112 @@
+"""Decoder blocks: pre-norm transformer (dense/MoE) and Mamba2 residual blocks,
+with full-sequence, prefill and decode variants.
+
+All block functions are written to be scanned over stacked layer params
+(`transformer.py`), so each returns pytrees with static structure.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.common import apply_norm, init_norm
+from repro.models.mlp import apply_mlp, init_mlp
+from repro.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# Transformer block (attention + MLP/MoE)
+# ---------------------------------------------------------------------------
+
+def init_transformer_block(key, cfg, dtype, use_moe: Optional[bool] = None) -> dict:
+    if use_moe is None:
+        use_moe = cfg.arch_type == "moe"
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": init_norm(cfg, dtype),
+        "attn": attn.init_attention(k1, cfg, dtype),
+        "mlp_norm": init_norm(cfg, dtype),
+    }
+    if use_moe:
+        p["moe"] = moe_lib.init_moe(k2, cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(k2, cfg, dtype)
+    return p
+
+
+def transformer_block_full(cfg, p, h, positions, want_cache: bool = False):
+    """Full-sequence (train / forward / prefill).
+
+    Returns (h, aux_loss) or, when ``want_cache``, (h, aux_loss, (k, v)).
+    """
+    x = apply_norm(cfg, p["attn_norm"], h)
+    q, k, v = attn.qkv_project(cfg, p["attn"], x, positions)
+    if cfg.m_rope:
+        q_pos = positions[..., 0][0]  # (S,) temporal stream for masking
+    else:
+        q_pos = positions[0]
+    out = attn.attend(
+        q, k, v, q_pos, q_pos, causal=cfg.causal, window=cfg.sliding_window
+    )
+    h = h + attn.out_project(cfg, p["attn"], out)
+    h = shard(h, "batch", "seq", "embed")
+
+    x = apply_norm(cfg, p["mlp_norm"], h)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        y, aux = moe_lib.apply_moe(cfg, p["moe"], x)
+    else:
+        y = apply_mlp(cfg, p["mlp"], x)
+    h = h + y
+    h = shard(h, "batch", "seq", "embed")
+    if want_cache:
+        return h, aux, (k, v)
+    return h, aux
+
+
+def transformer_block_decode(cfg, p, h1, cache_k, cache_v, index, positions):
+    """One-token decode. h1:(B,1,d). Returns (h1, new_k, new_v)."""
+    x = apply_norm(cfg, p["attn_norm"], h1)
+    q, k, v = attn.qkv_project(cfg, p["attn"], x, positions)
+    cache_k, cache_v = attn.write_decode(cache_k, cache_v, k, v, index)
+    out = attn.decode_attend(cfg, q, cache_k, cache_v, index + 1)
+    h1 = h1 + attn.out_project(cfg, p["attn"], out)
+
+    x = apply_norm(cfg, p["mlp_norm"], h1)
+    if "moe" in p:
+        y, _ = moe_lib.apply_moe(cfg, p["moe"], x)
+    else:
+        y = apply_mlp(cfg, p["mlp"], x)
+    return h1 + y, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def init_mamba_block(key, cfg, dtype) -> dict:
+    return {
+        "norm": init_norm(cfg, dtype),
+        "mamba": ssm_lib.init_mamba(key, cfg, dtype),
+    }
+
+
+def mamba_block_full(cfg, p, h, return_cache=False):
+    x = apply_norm(cfg, p["norm"], h)
+    if return_cache:
+        y, cache = ssm_lib.apply_mamba(cfg, p["mamba"], x, return_cache=True)
+        return h + y, cache
+    y = ssm_lib.apply_mamba(cfg, p["mamba"], x)
+    h = h + y
+    return shard(h, "batch", "seq", "embed")
+
+
+def mamba_block_decode(cfg, p, h1, cache):
+    x = apply_norm(cfg, p["norm"], h1)
+    y, new_cache = ssm_lib.apply_mamba_decode(cfg, p["mamba"], x, cache)
+    return h1 + y, new_cache

@@ -1,0 +1,102 @@
+"""Shared building blocks: initializers, norms, activations."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import Param
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def normal_param(key, shape, axes, dtype, stddev: Optional[float] = None) -> Param:
+    if stddev is None:
+        stddev = 1.0 / np.sqrt(shape[0])  # fan-in
+    v = (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+    return Param(v, tuple(axes))
+
+
+def zeros_param(shape, axes, dtype) -> Param:
+    return Param(jnp.zeros(shape, dtype), tuple(axes))
+
+
+def ones_param(shape, axes, dtype) -> Param:
+    return Param(jnp.ones(shape, dtype), tuple(axes))
+
+
+def const_param(value, axes) -> Param:
+    return Param(jnp.asarray(value), tuple(axes))
+
+
+# ---------------------------------------------------------------------------
+# Norms (computed in f32, cast back)
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, scale: Optional[jnp.ndarray], eps: float) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def layernorm(
+    x: jnp.ndarray,
+    scale: Optional[jnp.ndarray],
+    bias: Optional[jnp.ndarray],
+    eps: float,
+) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def init_norm(cfg, dtype) -> dict:
+    """Norm params per config.norm_type. layernorm_np (OLMo) has no params."""
+    d = cfg.d_model
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": ones_param((d,), (None,), dtype)}
+    if cfg.norm_type == "layernorm":
+        return {
+            "scale": ones_param((d,), (None,), dtype),
+            "bias": zeros_param((d,), (None,), dtype),
+        }
+    if cfg.norm_type == "layernorm_np":
+        return {}
+    raise ValueError(cfg.norm_type)
+
+
+def apply_norm(cfg, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.norm_type == "rmsnorm":
+        return rmsnorm(x, params["scale"], cfg.norm_eps)
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, params["scale"], params["bias"], cfg.norm_eps)
+    if cfg.norm_type == "layernorm_np":
+        return layernorm(x, None, None, cfg.norm_eps)
+    raise ValueError(cfg.norm_type)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def softplus(x):
+    return jax.nn.softplus(x)

@@ -1,0 +1,52 @@
+"""Modality frontend STUBS (the one allowed carve-out, see spec/DESIGN.md).
+
+For [vlm] and [audio] architectures, the vision encoder / conv audio codec is
+not implemented; ``make_frontend_embeddings`` fabricates patch/frame
+embeddings of the right shape and ``input_specs`` (launch/dryrun.py) emits
+matching ShapeDtypeStructs. Positions for M-RoPE get a synthetic image span
+whose (t, h, w) streams differ, so the multimodal rotary path is exercised.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_frontend_embeddings(rng, cfg, batch: int, seq: int) -> jnp.ndarray:
+    """Fabricated patch/frame embeddings (B, S, d_model)."""
+    return jax.random.normal(rng, (batch, seq, cfg.d_model), jnp.float32).astype(
+        jnp.dtype(cfg.dtype)
+    ) * 0.02
+
+
+def make_mrope_positions(batch: int, seq: int, image_span=None) -> np.ndarray:
+    """(B, S, 3) positions: text positions identical across streams; an
+    optional image span [start, start+h*w) gets 2-D (h, w) coordinates with a
+    constant temporal index — the Qwen2-VL M-RoPE layout."""
+    t = np.arange(seq, dtype=np.int32)
+    pos = np.stack([t, t, t], axis=-1)  # (S, 3)
+    if image_span is not None:
+        start, h, w = image_span
+        n = h * w
+        assert start + n <= seq
+        hh, ww = np.meshgrid(np.arange(h), np.arange(w), indexing="ij")
+        pos[start : start + n, 0] = start  # constant temporal index
+        pos[start : start + n, 1] = start + hh.reshape(-1)
+        pos[start : start + n, 2] = start + ww.reshape(-1)
+        # subsequent text resumes after max position
+        nxt = start + max(h, w)
+        tail = seq - (start + n)
+        if tail > 0:
+            cont = nxt + np.arange(tail, dtype=np.int32)
+            pos[start + n :, :] = cont[:, None]
+    return np.broadcast_to(pos[None], (batch, seq, 3)).copy()
+
+
+def make_masked_prediction_batch(rng, cfg, batch: int, seq: int, mask_prob=0.08):
+    """HuBERT-style batch: frame embeddings + codebook targets + mask."""
+    k1, k2, k3 = jax.random.split(rng, 3)
+    embeds = make_frontend_embeddings(k1, cfg, batch, seq)
+    targets = jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size, jnp.int32)
+    mask = jax.random.bernoulli(k3, mask_prob, (batch, seq))
+    return {"embeds": embeds, "targets": targets, "loss_mask": mask}

@@ -1,0 +1,68 @@
+"""LoRA (Hu et al., ICLR'22) — the paper's fine-tuning method (Sec. II-A).
+
+Base weights stay frozen; each adapted projection W gets a low-rank update
+W + (alpha/r) * A @ B with A:(in, r), B:(r, *out). LoRA params live in a
+separate ``params["lora"]`` subtree so the optimizer/train_step only ever
+touches adapters (the paper's memory argument for N^min).
+
+Kernel note: the fused base+LoRA projection has a Pallas TPU kernel
+(`repro/kernels/lora_matmul.py`); this module is the XLA path and the
+semantics oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import normal_param, zeros_param
+from repro.sharding import Param
+
+
+def init_lora_pair(key, in_dim: int, out_shape: Tuple[int, ...], rank: int):
+    """A:(in, r) gaussian, B:(r, *out) zeros  (standard LoRA init: AB = 0)."""
+    a = normal_param(key, (in_dim, rank), ("fsdp", "lora_rank"), jnp.float32)
+    out_axes = ("lora_rank",) + ("tensor",) + (None,) * (len(out_shape) - 1)
+    b = zeros_param((rank,) + tuple(out_shape), out_axes[: 1 + len(out_shape)], jnp.float32)
+    return {"a": a, "b": b}
+
+
+def lora_delta(x: jnp.ndarray, lora: dict, scale: float) -> jnp.ndarray:
+    """(..., in) -> (..., *out): scale * (x @ A) @ B.
+
+    Computed in the model dtype (adapters keep f32 master copies but are cast
+    for the matmul): computing in f32 here would make every upstream
+    activation cotangent f32 and double the FSDP all-gather traffic — found
+    via the dry-run HLO (EXPERIMENTS.md §Perf)."""
+    a = lora["a"].astype(x.dtype)
+    b = lora["b"].astype(x.dtype)
+    xa = jnp.einsum("...d,dr->...r", x, a)
+    out_dims = "efg"[: b.ndim - 1]
+    y = jnp.einsum(f"...r,r{out_dims}->...{out_dims}", xa, b)
+    return (scale * y).astype(x.dtype)
+
+
+def proj(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: Optional[jnp.ndarray] = None,
+    lora: Optional[dict] = None,
+    scale: float = 0.0,
+) -> jnp.ndarray:
+    """y = x @ W (+bias) (+ LoRA delta). W may be (in, out) or (in, h, hd)."""
+    out_dims = "efg"[: w.ndim - 1]
+    y = jnp.einsum(f"...d,d{out_dims}->...{out_dims}", x, w)
+    if bias is not None:
+        y = y + bias
+    if lora is not None:
+        y = y + lora_delta(x, lora, scale)
+    return y
+
+
+def merge_lora(w: jnp.ndarray, lora: dict, scale: float) -> jnp.ndarray:
+    """Materialize W + scale*A@B (checkpoint export / serving)."""
+    b = lora["b"]
+    out_dims = "efg"[: b.ndim - 1]
+    delta = scale * jnp.einsum(f"dr,r{out_dims}->d{out_dims}", lora["a"], b)
+    return (w.astype(jnp.float32) + delta).astype(w.dtype)

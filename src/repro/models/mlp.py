@@ -1,0 +1,41 @@
+"""Dense MLP: SwiGLU (llama-style, 3 matrices) or plain act (2 matrices, opt bias)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lora as lora_lib
+from repro.models.common import act_fn, normal_param, zeros_param
+from repro.sharding import shard
+
+
+def init_mlp(key, cfg, dtype, d_ff=None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 4)
+    p = {
+        "w1": normal_param(ks[0], (d, f), ("fsdp", "tensor"), dtype),
+        "w2": normal_param(ks[1], (f, d), ("tensor", "fsdp"), dtype),
+    }
+    if cfg.mlp_act == "silu":  # SwiGLU gate
+        p["w3"] = normal_param(ks[2], (d, f), ("fsdp", "tensor"), dtype)
+    if cfg.mlp_bias:
+        p["b1"] = zeros_param((f,), ("tensor",), dtype)
+        p["b2"] = zeros_param((d,), (None,), dtype)
+    if "mlp" in cfg.lora.targets:
+        p["lora"] = lora_lib.init_lora_pair(ks[3], d, (f,), cfg.lora.rank)
+    return p
+
+
+def apply_mlp(cfg, p, x):
+    act = act_fn(cfg.mlp_act)
+    scale = cfg.lora.alpha / cfg.lora.rank
+    h = lora_lib.proj(x, p["w1"], p.get("b1"), p.get("lora"), scale)
+    if "w3" in p:  # SwiGLU
+        h = act(h) * jnp.einsum("...d,df->...f", x, p["w3"])
+    else:
+        h = act(h)
+    h = shard(h, "batch", "seq", "tensor")
+    y = jnp.einsum("...f,fd->...d", h, p["w2"])
+    if "b2" in p:
+        y = y + p["b2"]
+    return y

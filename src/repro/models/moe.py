@@ -1,0 +1,115 @@
+"""Mixture-of-Experts layer (Mixtral-style: top-k softmax router, SwiGLU experts).
+
+Dispatch is *sort-based with capacity buckets* (MegaBlocks/MaxText style), not
+one-hot-einsum (GShard dispatch tensors): tokens are argsorted by expert id
+and scattered into an (E, C, d) buffer, each expert runs one dense GEMM, and
+outputs are combined back with the router weights. Compiled FLOPs are
+``capacity_factor x active`` rather than the ~E/k x blow-up of dense routing.
+
+Routing is GROUPED per sequence (vmap over the batch dim): groups align with
+the batch sharding, so dispatch stays local to a data shard and the compiler
+never materializes a global token permutation — routing a global flat token
+list produced 222 GiB/device temps in the dry-run (EXPERIMENTS.md §Perf).
+
+Overflowing tokens (beyond expert capacity) are dropped for that expert —
+standard capacity semantics; the Switch-style aux loss discourages overflow.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import act_fn, normal_param
+from repro.sharding import shard
+
+
+def init_moe(key, cfg, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": normal_param(ks[0], (d, e), ("fsdp", None), jnp.float32, stddev=0.02),
+        "w1": normal_param(ks[1], (e, d, f), ("experts", "fsdp", "tensor"), dtype),
+        "w3": normal_param(ks[2], (e, d, f), ("experts", "fsdp", "tensor"), dtype),
+        "w2": normal_param(ks[3], (e, f, d), ("experts", "tensor", "fsdp"), dtype),
+    }
+
+
+def expert_capacity(cfg, group_tokens: int) -> int:
+    m = cfg.moe
+    cap = int(group_tokens * m.top_k * m.capacity_factor / m.num_experts)
+    cap = max(m.top_k, cap)
+    if cap >= 128:  # MXU-align large buckets
+        cap = (cap + 127) // 128 * 128
+    return cap
+
+
+def route(cfg, router_w, x_flat):
+    """x_flat:(T,d) -> (idx:(T,k), weights:(T,k), aux scalar)."""
+    m = cfg.moe
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), router_w)
+    gates = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    weights, idx = jax.lax.top_k(gates, m.top_k)  # (T, k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance auxiliary loss (per group; averaged by caller)
+    me = gates.mean(axis=0)
+    ce = jax.nn.one_hot(idx[:, 0], m.num_experts).mean(axis=0)
+    aux = m.num_experts * jnp.sum(me * ce) * m.aux_loss_coef
+    return idx, weights.astype(x_flat.dtype), aux
+
+
+def _dispatch_one(cfg, x, idx, wts, cap):
+    """One group. x:(T,d), idx/wts:(T,k) -> (buf:(E,C,d), combine info)."""
+    t, d = x.shape
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    flat_expert = idx.reshape(-1)  # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    counts = jnp.bincount(flat_expert, length=e)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_expert].astype(jnp.int32)
+    keep = pos < cap
+    dest = jnp.where(keep, sorted_expert * cap + pos, e * cap)
+    src_tok = flat_token[order]
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[dest].set(x[src_tok], mode="drop")
+    return buf[: e * cap].reshape(e, cap, d), (order, src_tok, dest, keep)
+
+
+def _combine_one(cfg, out_ecd, info, wts, t):
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    order, src_tok, dest, keep = info
+    cap = out_ecd.shape[1]
+    d = out_ecd.shape[2]
+    flat = out_ecd.reshape(e * cap, d)
+    gathered = jnp.where(keep[:, None], flat[jnp.clip(dest, 0, e * cap - 1)], 0.0)
+    w_sorted = wts.reshape(-1)[order]
+    y = jnp.zeros((t, d), jnp.float32)
+    y = y.at[src_tok].add(gathered.astype(jnp.float32) * w_sorted[:, None].astype(jnp.float32))
+    return y
+
+
+def apply_moe(cfg, p, x):
+    """x:(B,S,d) -> (y:(B,S,d), aux_loss). Routing grouped per batch row."""
+    b, s, d = x.shape
+    cap = expert_capacity(cfg, s)
+    act = act_fn(cfg.mlp_act)
+
+    def one_group(xs):
+        idx, wts, aux = route(cfg, p["router"], xs)
+        buf, info = _dispatch_one(cfg, xs, idx, wts, cap)  # (E,C,d)
+        return buf, info, wts, aux
+
+    buf, info, wts, aux = jax.vmap(one_group)(x)
+    # keep the dispatch buffer batch-sharded: scatter output sharding is
+    # undecidable for XLA and silently replicates otherwise (dry-run showed
+    # 17.9 GiB/layer all-reduces; EXPERIMENTS.md §Perf)
+    buf = shard(buf, "batch", "experts", None, "embed")
+    h = act(jnp.einsum("becd,edf->becf", buf, p["w1"]))
+    if cfg.mlp_act == "silu":
+        h = h * jnp.einsum("becd,edf->becf", buf, p["w3"])
+    h = shard(h, "batch", "experts", None, "tensor")
+    out = jnp.einsum("becf,efd->becd", h, p["w2"])
+    out = shard(out, "batch", "experts", None, "embed")
+    y = jax.vmap(lambda o, i, w: _combine_one(cfg, o, i, w, s))(out, info, wts)
+    y = shard(y.astype(x.dtype), "batch", "seq", "embed")
+    return y, aux.mean()

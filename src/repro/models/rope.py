@@ -1,0 +1,69 @@
+"""Rotary position embeddings, including Qwen2-VL M-RoPE.
+
+M-RoPE splits the rotary frequency dimensions into (temporal, height, width)
+sections, each rotated by its own position stream. For text tokens all three
+streams carry the same position, which makes M-RoPE coincide with standard
+RoPE — the property ``test_rope.py`` checks.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def _rotate(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    # x: (..., head_dim); rotate-half convention
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(
+    x: jnp.ndarray,  # (B, S, n_heads, head_dim)
+    positions: jnp.ndarray,  # (B, S) int32
+    theta: float,
+) -> jnp.ndarray:
+    if theta <= 0:  # arch without RoPE (e.g. hubert: positional info in frontend)
+        return x
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_m_rope(
+    x: jnp.ndarray,  # (B, S, n_heads, head_dim)
+    positions: jnp.ndarray,  # (B, S, 3) int32 -- (t, h, w) streams
+    theta: float,
+    sections: Tuple[int, int, int],
+) -> jnp.ndarray:
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    # angle per stream: (B, S, 3, half)
+    ang_all = positions[..., None].astype(jnp.float32) * freqs
+    # pick section s for frequency indices in that section
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=half
+    )  # (half,)
+    ang = ang_all[:, :, sec_id, jnp.arange(half)]  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def default_positions(batch: int, seq: int, offset=0) -> jnp.ndarray:
+    return jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+
+
+def default_m_positions(batch: int, seq: int, offset=0) -> jnp.ndarray:
+    p = default_positions(batch, seq, offset)
+    p = jnp.broadcast_to(p, (batch, seq))
+    return jnp.stack([p, p, p], axis=-1)

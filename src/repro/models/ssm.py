@@ -1,0 +1,282 @@
+"""Mamba2 block — SSD (state-space duality) with chunked computation
+[arXiv:2405.21060].
+
+Recurrence per head h (A scalar-per-head, state (P, N)):
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t  (outer) x_t
+    y_t = C_t . h_t + D * x_t
+
+The chunked algorithm computes, per chunk of length ``cs``:
+  * intra-chunk (quadratic in cs): mask L_ij = exp(cum_i - cum_j), i >= j
+  * chunk-end states + an inter-chunk lax.scan (linear in #chunks)
+matching the reference recurrence exactly (test_ssm.py checks vs a step-by-
+step scan oracle). The chunk-state stage is the TPU Pallas kernel target
+(`repro/kernels/ssd_scan.py`).
+
+Decode keeps O(1) state: depthwise-conv ring (width-1 frames) + (H, P, N)
+SSD state — this is why SSM/hybrid archs run `long_500k` natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lora as lora_lib
+from repro.models.common import normal_param, ones_param, zeros_param
+from repro.sharding import Param, shard
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    H = s.heads(d)
+    G, N, wc = s.n_groups, s.state_size, s.conv_width
+    ks = jax.random.split(key, 10)
+    p = {
+        "wz": normal_param(ks[0], (d, di), ("fsdp", "tensor"), dtype),
+        "wx": normal_param(ks[1], (d, di), ("fsdp", "tensor"), dtype),
+        "wB": normal_param(ks[2], (d, G, N), ("fsdp", None, None), dtype),
+        "wC": normal_param(ks[3], (d, G, N), ("fsdp", None, None), dtype),
+        "wdt": normal_param(ks[4], (d, H), ("fsdp", "ssm_heads"), dtype),
+        "conv_w": normal_param(ks[5], (di + 2 * G * N, wc), ("tensor", None), dtype, stddev=0.3),
+        "conv_b": zeros_param((di + 2 * G * N,), ("tensor",), dtype),
+        # A in (-inf, 0): A = -exp(A_log); init A in [-1, -e]
+        "A_log": Param(
+            jnp.log(jnp.linspace(1.0, jnp.e, H, dtype=jnp.float32)), ("ssm_heads",)
+        ),
+        "D": ones_param((H,), ("ssm_heads",), jnp.float32),
+        "dt_bias": Param(
+            jnp.log(jnp.expm1(jnp.full((H,), 0.01, jnp.float32))), ("ssm_heads",)
+        ),
+        "norm_scale": ones_param((di,), ("tensor",), dtype),
+        "out_proj": normal_param(ks[6], (di, d), ("tensor", "fsdp"), dtype),
+    }
+    # LoRA on the in/out projections (attention-free arch; DESIGN.md §3)
+    r = cfg.lora.rank
+    p["lora"] = {
+        "in": lora_lib.init_lora_pair(ks[7], d, (di,), r),
+        "out": lora_lib.init_lora_pair(ks[8], di, (d,), r),
+    }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv
+# ---------------------------------------------------------------------------
+
+def _causal_conv(xbc, w, b):
+    """xbc:(B,S,C), w:(C,wc) depthwise causal conv + silu."""
+    wc = w.shape[1]
+    pad = jnp.pad(xbc, ((0, 0), (wc - 1, 0), (0, 0)))
+    # stack the wc shifted views: (B,S,C,wc)
+    views = jnp.stack([pad[:, i : i + xbc.shape[1]] for i in range(wc)], axis=-1)
+    y = jnp.einsum("bscw,cw->bsc", views, w.astype(views.dtype)) + b
+    return jax.nn.silu(y)
+
+
+def _conv_step(state, xbc_t, w, b):
+    """state:(B,wc-1,C), xbc_t:(B,1,C) -> (new_state, y:(B,1,C))."""
+    window = jnp.concatenate([state, xbc_t], axis=1)  # (B, wc, C)
+    y = jnp.einsum("bwc,cw->bc", window, w.astype(window.dtype)) + b
+    return window[:, 1:], jax.nn.silu(y)[:, None]
+
+
+# ---------------------------------------------------------------------------
+# SSD core (chunked)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, h0=None):
+    """SSD scan.
+
+    x: (B,S,H,P) inputs, dt: (B,S,H) positive step sizes, A: (H,) negative,
+    B, C: (B,S,G,N); returns y:(B,S,H,P) and final state (B,H,P,N).
+    """
+    b, s, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    cs = min(chunk, s)
+    orig_s = s
+    if s % cs:
+        # zero-pad the tail: dt=0 steps are identities (decay=1, no input)
+        pad = cs - s % cs
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    nc = s // cs
+
+    xf = x.astype(jnp.float32).reshape(b, nc, cs, H, P)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, cs, H)
+    Bf = B.astype(jnp.float32).reshape(b, nc, cs, G, N)
+    Cf = C.astype(jnp.float32).reshape(b, nc, cs, G, N)
+
+    da = dtf * A  # (b, nc, cs, H), negative
+    cum = jnp.cumsum(da, axis=2)  # inclusive
+
+    # ---- intra-chunk (quadratic in cs) ----
+    # scores over matching groups: (b,nc,i,j,G)
+    gb = jnp.einsum("bcign,bcjgn->bcijg", Cf, Bf)
+    # expand groups to heads
+    gb = jnp.repeat(gb, rep, axis=-1)  # (b,nc,i,j,H)
+    L = jnp.exp(
+        jnp.clip(cum[:, :, :, None, :] - cum[:, :, None, :, :], -60.0, 0.0)
+    )  # (b,nc,i,j,H); >0 only meaningful for i>=j
+    causal = jnp.tril(jnp.ones((cs, cs), bool))
+    m = gb * L * jnp.where(causal[None, None, :, :, None], 1.0, 0.0)
+    m = m * dtf[:, :, None, :, :]  # dt_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, xf)
+
+    # ---- chunk-end states ----
+    decay_to_end = jnp.exp(jnp.clip(cum[:, :, -1:, :] - cum, -60.0, 0.0))  # (b,nc,cs,H)
+    Bh = jnp.repeat(Bf, rep, axis=3) if G != H else Bf  # (b,nc,cs,H,N)
+    states = jnp.einsum(
+        "bcjh,bcjhn,bcjhp->bchpn", decay_to_end * dtf, Bh, xf
+    )  # (b,nc,H,P,N)
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(jnp.clip(cum[:, :, -1, :], -60.0, 0.0))  # (b,nc,H)
+
+    def step(h, inp):
+        dec, st = inp  # (b,H), (b,H,P,N)
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h  # emit state *entering* the chunk
+
+    init = h0 if h0 is not None else jnp.zeros((b, H, P, N), jnp.float32)
+    h_final, h_prev = jax.lax.scan(
+        step, init, (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1))
+    )
+    h_prev = h_prev.swapaxes(0, 1)  # (b,nc,H,P,N) state entering each chunk
+
+    # ---- inter-chunk contribution ----
+    Ch = jnp.repeat(Cf, rep, axis=3) if G != H else Cf  # (b,nc,cs,H,N)
+    decay_in = jnp.exp(jnp.clip(cum, -60.0, 0.0))  # (b,nc,cs,H)
+    y_inter = jnp.einsum("bcihn,bchpn,bcih->bcihp", Ch, h_prev, decay_in)
+
+    y = (y_intra + y_inter).reshape(b, s, H, P)[:, :orig_s]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_step(state, x_t, dt_t, A, B_t, C_t):
+    """One decode step. state:(B,H,P,N); x_t:(B,H,P); dt_t:(B,H); B_t,C_t:(B,G,N)."""
+    H = x_t.shape[1]
+    G = B_t.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B_t, rep, axis=1)  # (B,H,N)
+    Ch = jnp.repeat(C_t, rep, axis=1)
+    da = jnp.exp(jnp.clip(dt_t.astype(jnp.float32) * A, -60.0, 0.0))  # (B,H)
+    new = state * da[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt_t.astype(jnp.float32), Bh.astype(jnp.float32), x_t.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(jnp.float32), new)
+    return new, y
+
+
+# ---------------------------------------------------------------------------
+# Full block
+# ---------------------------------------------------------------------------
+
+def _gated_norm(y, z, scale, eps):
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    return (g * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def _project_inputs(cfg, p, x):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    H, G, N = s.heads(d), s.n_groups, s.state_size
+    scale = cfg.lora.alpha / cfg.lora.rank
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    xin = lora_lib.proj(x, p["wx"], None, p["lora"]["in"], scale)
+    Braw = jnp.einsum("bsd,dgn->bsgn", x, p["wB"])
+    Craw = jnp.einsum("bsd,dgn->bsgn", x, p["wC"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["wdt"])
+    return z, xin, Braw, Craw, dt_raw
+
+
+def apply_mamba(cfg, p, x, h0=None, return_cache=False):
+    """x:(B,S,d) -> (B,S,d). Training/prefill path (chunked SSD)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    H, G, N, P = s.heads(d), s.n_groups, s.state_size, s.head_dim
+    bsz, S, _ = x.shape
+
+    z, xin, Braw, Craw, dt_raw = _project_inputs(cfg, p, x)
+    xbc_raw = jnp.concatenate(
+        [xin, Braw.reshape(bsz, S, G * N), Craw.reshape(bsz, S, G * N)], axis=-1
+    )
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :di].reshape(bsz, S, H, P)
+    B = xbc[..., di : di + G * N].reshape(bsz, S, G, N)
+    C = xbc[..., di + G * N :].reshape(bsz, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    xs = shard(xs, "batch", "seq", "ssm_heads", None)
+    y, h_final = ssd_chunked(xs, dt, A, B, C, s.chunk_size, h0=h0)
+    y = y + xs.astype(jnp.float32).astype(y.dtype) * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(bsz, S, di)
+
+    out = _gated_norm(y, z, p["norm_scale"], cfg.norm_eps)
+    scale = cfg.lora.alpha / cfg.lora.rank
+    res = lora_lib.proj(out, p["out_proj"], None, p["lora"]["out"], scale)
+    if return_cache:
+        # conv cache stores the *raw* (pre-conv) last width-1 frames
+        wc = s.conv_width
+        conv_tail = xbc_raw[:, S - (wc - 1) :] if S >= wc - 1 else jnp.pad(
+            xbc_raw, ((0, 0), (wc - 1 - S, 0), (0, 0))
+        )
+        return res, {"conv": conv_tail, "ssd": h_final}
+    return res
+
+
+def init_mamba_cache(cfg, batch: int, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    H, G, N, P = s.heads(d), s.n_groups, s.state_size, s.head_dim
+    conv_dim = di + 2 * G * N
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        "ssd": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+def mamba_cache_specs():
+    return {"conv": ("batch", None, "tensor"), "ssd": ("batch", "ssm_heads", None, None)}
+
+
+def apply_mamba_decode(cfg, p, x_t, cache):
+    """x_t:(B,1,d), cache {conv, ssd} -> (y:(B,1,d), new cache)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    H, G, N, P = s.heads(d), s.n_groups, s.state_size, s.head_dim
+    bsz = x_t.shape[0]
+
+    z, xin, Braw, Craw, dt_raw = _project_inputs(cfg, p, x_t)
+    xbc = jnp.concatenate(
+        [xin, Braw.reshape(bsz, 1, G * N), Craw.reshape(bsz, 1, G * N)], axis=-1
+    )
+    conv_state, xbc = _conv_step(cache["conv"], xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :di].reshape(bsz, H, P)
+    B = xbc[..., di : di + G * N].reshape(bsz, G, N)
+    C = xbc[..., di + G * N :].reshape(bsz, G, N)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+
+    new_ssd, y = ssd_step(cache["ssd"], xs.astype(jnp.float32), dt, A, B, C)
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(bsz, 1, di).astype(x_t.dtype)
+
+    out = _gated_norm(y, z, p["norm_scale"], cfg.norm_eps)
+    scale = cfg.lora.alpha / cfg.lora.rank
+    res = lora_lib.proj(out, p["out_proj"], None, p["lora"]["out"], scale)
+    return res, {"conv": conv_state, "ssd": new_ssd}

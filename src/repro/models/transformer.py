@@ -1,0 +1,370 @@
+"""Composable model assembly: init / forward / prefill / decode for every
+assigned architecture family (dense, moe, ssm, hybrid, vlm, audio).
+
+Layers are *scanned* (stacked params, lax.scan) to keep HLO size independent
+of depth — essential for compiling 80-layer models on the 512-device dry-run.
+Hybrid (zamba2) scans super-blocks: ``hybrid_period`` Mamba2 layers + one
+*shared* transformer block whose weights are closed over (weight-tied), each
+application carrying its own KV cache slot.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import blocks as blk
+from repro.models import ssm as ssm_lib
+from repro.models.common import init_norm, apply_norm, normal_param
+from repro.models.rope import default_m_positions, default_positions
+from repro.sharding import Param, is_param, shard, split_params
+
+
+def model_dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Param stacking for scanned layers
+# ---------------------------------------------------------------------------
+
+def stack_param_trees(trees):
+    def _stack(*ps):
+        vals = jnp.stack([p.value for p in ps])
+        return Param(vals, ("layers",) + tuple(ps[0].axes))
+
+    return jax.tree.map(_stack, *trees, is_leaf=is_param)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(rng, cfg):
+    """Returns a tree with Param leaves (value + logical axes)."""
+    dt = model_dtype(cfg)
+    keys = jax.random.split(rng, cfg.num_layers + 4)
+    p = {}
+    if not cfg.embed_inputs:
+        # vocab dim deliberately NOT sharded: gathers from a vocab-sharded
+        # table trigger involuntary replication in SPMD (dry-run warning);
+        # the table is small once d_model is FSDP-sharded.
+        p["embed"] = normal_param(
+            keys[-1], (cfg.vocab_size, cfg.d_model), (None, "fsdp"), dt, stddev=0.02
+        )
+    p["final_norm"] = init_norm(cfg, dt)
+    if not cfg.tie_embeddings:
+        p["head"] = normal_param(
+            keys[-2], (cfg.d_model, cfg.vocab_size), ("fsdp", "vocab"), dt, stddev=0.02
+        )
+    elif cfg.embed_inputs:
+        # tied embeddings impossible without an input table; emit a head
+        p["head"] = normal_param(
+            keys[-2], (cfg.d_model, cfg.vocab_size), ("fsdp", "vocab"), dt, stddev=0.02
+        )
+
+    if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        layers = [
+            blk.init_transformer_block(keys[i], cfg, dt) for i in range(cfg.num_layers)
+        ]
+        p["layers"] = stack_param_trees(layers)
+    elif cfg.arch_type == "ssm":
+        layers = [blk.init_mamba_block(keys[i], cfg, dt) for i in range(cfg.num_layers)]
+        p["layers"] = stack_param_trees(layers)
+    elif cfg.arch_type == "hybrid":
+        per = cfg.hybrid_period
+        ns = cfg.num_layers // per
+        supers = []
+        for si in range(ns):
+            inner = [
+                blk.init_mamba_block(keys[si * per + j], cfg, dt) for j in range(per)
+            ]
+            supers.append(stack_param_trees(inner))
+        p["layers"] = stack_param_trees(supers)
+        p["shared"] = blk.init_transformer_block(keys[-3], cfg, dt, use_moe=False)
+    else:
+        raise ValueError(cfg.arch_type)
+    return p
+
+
+def init_model(rng, cfg):
+    """Convenience: (param values, logical axes) trees."""
+    return split_params(init_params(rng, cfg))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg, params, batch):
+    dt = model_dtype(cfg)
+    if cfg.embed_inputs:
+        h = batch["embeds"].astype(dt)
+    else:
+        h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+    return shard(h, "batch", "seq", "embed")
+
+
+def unembed(cfg, params, h):
+    if "head" in params:
+        logits = jnp.einsum("bsd,dv->bsv", h, params["head"])
+    else:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"])
+    logits = shard(logits, "batch", "seq", "vocab")
+    return logits.astype(jnp.float32)
+
+
+def _positions(cfg, batch, seq: int, offset=0):
+    if "positions" in batch:
+        return batch["positions"]
+    b = (batch.get("tokens") if "tokens" in batch else batch["embeds"]).shape[0]
+    if cfg.m_rope:
+        return default_m_positions(b, seq, offset)
+    return jnp.broadcast_to(default_positions(b, seq, offset), (b, seq))
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / full sequence)
+# ---------------------------------------------------------------------------
+
+def forward(cfg, params, batch, remat: str = "none"):
+    """-> (logits (B,S,V) f32, aux_loss scalar)."""
+    h = embed_inputs(cfg, params, batch)
+    seq = h.shape[1]
+    positions = _positions(cfg, batch, seq)
+
+    if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        fn = functools.partial(blk.transformer_block_full, cfg, positions=positions)
+        if remat != "none":
+            fn = jax.checkpoint(fn)
+
+        def body(carry, lp):
+            hh, aux = carry
+            hh, a = fn(lp, hh)
+            return (hh, aux + a), None
+
+        (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)), params["layers"])
+    elif cfg.arch_type == "ssm":
+        fn = functools.partial(blk.mamba_block_full, cfg)
+        if remat != "none":
+            fn = jax.checkpoint(fn)
+
+        def body(carry, lp):
+            return fn(lp, carry), None
+
+        h, _ = jax.lax.scan(body, h, params["layers"])
+        aux = jnp.zeros((), jnp.float32)
+    elif cfg.arch_type == "hybrid":
+        shared = params["shared"]
+        mfn = functools.partial(blk.mamba_block_full, cfg)
+        sfn = functools.partial(blk.transformer_block_full, cfg, positions=positions)
+        if remat != "none":
+            mfn = jax.checkpoint(mfn)
+            sfn = jax.checkpoint(sfn)
+
+        def super_body(carry, mp):
+            hh, aux = carry
+
+            def inner(h2, lp):
+                return mfn(lp, h2), None
+
+            hh, _ = jax.lax.scan(inner, hh, mp)
+            hh, a = sfn(shared, hh)
+            return (hh, aux + a), None
+
+        (h, aux), _ = jax.lax.scan(
+            super_body, (h, jnp.zeros((), jnp.float32)), params["layers"]
+        )
+    else:
+        raise ValueError(cfg.arch_type)
+
+    h = apply_norm(cfg, params["final_norm"], h)
+    return unembed(cfg, params, h), aux
+
+
+# ---------------------------------------------------------------------------
+# KV / state cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int):
+    dt = model_dtype(cfg)
+    c = {"index": jnp.zeros((), jnp.int32)}
+    if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        c["kv"] = attn.init_kv_cache(cfg, batch, max_len, dt, cfg.num_layers)
+    elif cfg.arch_type == "ssm":
+        one = ssm_lib.init_mamba_cache(cfg, batch, dt)
+        c["mamba"] = jax.tree.map(
+            lambda x: jnp.zeros((cfg.num_layers,) + x.shape, x.dtype), one
+        )
+    elif cfg.arch_type == "hybrid":
+        per = cfg.hybrid_period
+        ns = cfg.num_layers // per
+        one = ssm_lib.init_mamba_cache(cfg, batch, dt)
+        c["mamba"] = jax.tree.map(
+            lambda x: jnp.zeros((ns, per) + x.shape, x.dtype), one
+        )
+        c["kv"] = attn.init_kv_cache(cfg, batch, max_len, dt, ns)
+    return c
+
+
+def cache_axes(cfg):
+    """Logical axes tree matching init_cache structure (string leaves, see
+    repro.sharding.axes_to_str — keeps the tree mappable against values)."""
+    from repro.sharding import axes_to_str as a2s
+
+    c = {"index": a2s(())}
+    kv_ax = a2s(("layers", "batch", "kv_seq", "kv_heads", None))
+    m_ax = {
+        "conv": a2s(("layers", "batch", None, "tensor")),
+        "ssd": a2s(("layers", "batch", "ssm_heads", None, None)),
+    }
+    if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        c["kv"] = {"k": kv_ax, "v": kv_ax}
+    elif cfg.arch_type == "ssm":
+        c["mamba"] = m_ax
+    elif cfg.arch_type == "hybrid":
+        c["mamba"] = {
+            "conv": a2s(("layers", "layers", "batch", None, "tensor")),
+            "ssd": a2s(("layers", "layers", "batch", "ssm_heads", None, None)),
+        }
+        c["kv"] = {"k": kv_ax, "v": kv_ax}
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def prefill(cfg, params, batch, max_len: int):
+    """Full-prefix pass building the cache. -> (last-token logits (B,1,V), cache)."""
+    assert cfg.supports_decode, "encoder-only arch has no prefill/decode"
+    h = embed_inputs(cfg, params, batch)
+    bsz, seq = h.shape[0], h.shape[1]
+    positions = _positions(cfg, batch, seq)
+    cache = init_cache(cfg, bsz, max_len)
+    cache["index"] = jnp.asarray(seq, jnp.int32)
+
+    if cfg.arch_type in ("dense", "moe", "vlm"):
+        def body(carry, xs):
+            hh = carry
+            lp, ck, cv = xs
+            hh, _, (k, v) = blk.transformer_block_full(
+                cfg, lp, hh, positions, want_cache=True
+            )
+            nk, nv = attn.write_prefill(cfg, ck, cv, k, v)
+            return hh, (nk, nv)
+
+        h, (nk, nv) = jax.lax.scan(
+            body, h, (params["layers"], cache["kv"]["k"], cache["kv"]["v"])
+        )
+        cache["kv"] = {"k": nk, "v": nv}
+    elif cfg.arch_type == "ssm":
+        def body(carry, lp):
+            hh, mc = blk.mamba_block_full(cfg, lp, carry, return_cache=True)
+            return hh, mc
+
+        h, mc = jax.lax.scan(body, h, params["layers"])
+        cache["mamba"] = mc
+    elif cfg.arch_type == "hybrid":
+        shared = params["shared"]
+
+        def super_body(carry, xs):
+            hh = carry
+            mp, ck, cv = xs
+
+            def inner(h2, lp):
+                h2, mc = blk.mamba_block_full(cfg, lp, h2, return_cache=True)
+                return h2, mc
+
+            hh, mcs = jax.lax.scan(inner, hh, mp)
+            hh, _, (k, v) = blk.transformer_block_full(
+                cfg, shared, hh, positions, want_cache=True
+            )
+            nk, nv = attn.write_prefill(cfg, ck, cv, k, v)
+            return hh, (mcs, nk, nv)
+
+        h, (mcs, nk, nv) = jax.lax.scan(
+            super_body, h, (params["layers"], cache["kv"]["k"], cache["kv"]["v"])
+        )
+        cache["mamba"] = mcs
+        cache["kv"] = {"k": nk, "v": nv}
+    else:
+        raise ValueError(cfg.arch_type)
+
+    h = apply_norm(cfg, params["final_norm"], h[:, -1:])
+    return unembed(cfg, params, h), cache
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg, params, batch, cache):
+    """One-token step. batch: tokens (B,1) or embeds (B,1,d). -> (logits, cache)."""
+    assert cfg.supports_decode
+    h = embed_inputs(cfg, params, batch)
+    index = cache["index"]
+    bsz = h.shape[0]
+    if "positions" in batch:
+        positions = batch["positions"]
+    elif cfg.m_rope:
+        positions = jnp.broadcast_to(index[None, None, None], (bsz, 1, 3)).astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(index[None, None], (bsz, 1)).astype(jnp.int32)
+
+    new_cache = dict(cache)
+    if cfg.arch_type in ("dense", "moe", "vlm"):
+        def body(carry, xs):
+            hh = carry
+            lp, ck, cv = xs
+            hh, nk, nv = blk.transformer_block_decode(
+                cfg, lp, hh, ck, cv, index, positions
+            )
+            return hh, (nk, nv)
+
+        h, (nk, nv) = jax.lax.scan(
+            body, h, (params["layers"], cache["kv"]["k"], cache["kv"]["v"])
+        )
+        new_cache["kv"] = {"k": nk, "v": nv}
+    elif cfg.arch_type == "ssm":
+        def body(carry, xs):
+            lp, mc = xs
+            hh, nmc = blk.mamba_block_decode(cfg, lp, carry, mc)
+            return hh, nmc
+
+        h, nmc = jax.lax.scan(body, h, (params["layers"], cache["mamba"]))
+        new_cache["mamba"] = nmc
+    elif cfg.arch_type == "hybrid":
+        shared = params["shared"]
+
+        def super_body(carry, xs):
+            hh = carry
+            mp, mc, ck, cv = xs
+
+            def inner(h2, xs2):
+                lp, c2 = xs2
+                h2, nc2 = blk.mamba_block_decode(cfg, lp, h2, c2)
+                return h2, nc2
+
+            hh, nmc = jax.lax.scan(inner, hh, (mp, mc))
+            hh, nk, nv = blk.transformer_block_decode(
+                cfg, shared, hh, ck, cv, index, positions
+            )
+            return hh, (nmc, nk, nv)
+
+        h, (nmc, nk, nv) = jax.lax.scan(
+            super_body,
+            h,
+            (params["layers"], cache["mamba"], cache["kv"]["k"], cache["kv"]["v"]),
+        )
+        new_cache["mamba"] = nmc
+        new_cache["kv"] = {"k": nk, "v": nv}
+    else:
+        raise ValueError(cfg.arch_type)
+
+    new_cache["index"] = index + 1
+    h = apply_norm(cfg, params["final_norm"], h)
+    return unembed(cfg, params, h), new_cache

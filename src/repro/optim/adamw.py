@@ -1,0 +1,64 @@
+"""AdamW over a pytree (built from scratch — optax is not in this env).
+
+State and updates operate on any pytree; the trainer passes the *LoRA leaf
+list* so the base model carries no optimizer state (the paper's N^min memory
+argument: base + adapters + optimizer state fit one A100/one v5e shard).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: list
+    v: list
+
+
+def init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda l: l * scale, tree), norm
+
+
+def update(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.999, eps=1e-8,
+           weight_decay=0.0):
+    """Returns (new_params, new_state). ``lr`` may be a scalar or traced value."""
+    step = state.step + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    # three passes keep tree structure handling trivial; XLA CSE dedups under jit
+    new_params = jax.tree.map(lambda g, m, v, p: upd(g, m, v, p)[0], grads, state.m, state.v, params)
+    new_m = jax.tree.map(lambda g, m, v, p: upd(g, m, v, p)[1], grads, state.m, state.v, params)
+    new_v = jax.tree.map(lambda g, m, v, p: upd(g, m, v, p)[2], grads, state.m, state.v, params)
+    return new_params, AdamWState(step=step, m=new_m, v=new_v)

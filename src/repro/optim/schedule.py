@@ -1,0 +1,17 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, base_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = base_lr * jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+    t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, base_lr * cos)
+
+
+def constant(step, *, base_lr: float):
+    return jnp.asarray(base_lr, jnp.float32)

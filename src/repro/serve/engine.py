@@ -1,0 +1,75 @@
+"""Minimal batched serving engine: prefill + greedy/temperature decode.
+
+Used by the decode-shape dry-runs (via repro.train.step factories) and the
+serving example. Requests are batched to a fixed width; the KV cache is the
+ring-buffer/state cache from the model zoo, so SWA and SSM archs serve long
+contexts in O(window)/O(1) memory.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tf
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0    # 0 = greedy
+
+
+class ServingEngine:
+    def __init__(self, cfg, params, max_len: int = 2048, seed: int = 0):
+        assert cfg.supports_decode, "encoder-only arch cannot serve decode"
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.rng = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(
+            lambda p, b: tf.prefill(cfg, p, b, max_len=max_len)
+        )
+        self._decode = jax.jit(lambda p, c, b: tf.decode_step(cfg, p, b, c))
+
+    def generate_batch(self, requests: List[Request]) -> List[np.ndarray]:
+        """Decodes a batch of equal-length prompts in lockstep.
+
+        Production serving would bucket requests by prompt length (padding
+        without pad-attention-masking is incorrect); the bucket width is a
+        deployment knob, not model logic, so the engine just asserts it."""
+        cfg = self.cfg
+        bsz = len(requests)
+        plen = len(requests[0].prompt)
+        assert all(len(r.prompt) == plen for r in requests), (
+            "batch requests must be length-bucketed"
+        )
+        prompts = np.stack([r.prompt for r in requests]).astype(np.int32)
+        batch = {"tokens": jnp.asarray(prompts)}
+        logits, cache = self._prefill(self.params, batch)
+
+        max_new = max(r.max_new_tokens for r in requests)
+        outs = [[] for _ in range(bsz)]
+        tok = self._sample(logits[:, -1], requests)
+        for step in range(max_new):
+            for i in range(bsz):
+                if step < requests[i].max_new_tokens:
+                    outs[i].append(int(tok[i]))
+            logits, cache = self._decode(self.params, cache, {"tokens": tok[:, None]})
+            tok = self._sample(logits[:, -1], requests)
+        return [np.asarray(o, np.int32) for o in outs]
+
+    def _sample(self, logits: jnp.ndarray, requests: List[Request]) -> jnp.ndarray:
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        temps = jnp.asarray([r.temperature for r in requests], jnp.float32)
+        if float(temps.max()) == 0.0:
+            return greedy
+        self.rng, k = jax.random.split(self.rng)
+        sampled = jax.random.categorical(
+            k, logits / jnp.maximum(temps[:, None], 1e-3)
+        ).astype(jnp.int32)
+        return jnp.where(temps > 0, sampled, greedy)

@@ -1,0 +1,196 @@
+"""Logical-axis sharding: MaxText-style rules with divisibility fallback.
+
+Model code annotates parameters and activations with *logical* axis names.
+At launch time a mesh + rule table is installed (``use_sharding``); the
+helpers resolve logical names to mesh axes, dropping any mesh axis that does
+not evenly divide the corresponding dimension (fallback = replicate). Model
+code therefore stays mesh-agnostic and runs unchanged on 1 CPU device (tests)
+and on the (pod, data, model) production mesh (dry-run / TPU).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+
+# logical axis -> tuple of mesh axes (tried in order, divisibility permitting)
+DEFAULT_RULES = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": (),
+    # KV caches are sequence-parallel over the model axis: kv_heads (1..8)
+    # rarely divide a 16-way axis, and replicating a 32k-decode cache costs
+    # ~17 GiB/device (dry-run finding, EXPERIMENTS.md §Perf). Sharding the
+    # cache length instead costs only tiny softmax-combine collectives.
+    "kv_seq": ("model",),
+    "window": (),
+    "embed": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ssm_heads": ("model",),
+    "ssm_state": (),
+    "pos": (),
+    # weights
+    "fsdp": ("data",),
+    "tensor": ("model",),
+    "vocab": ("model",),
+    "experts": (),
+    "layers": (),
+    "lora_rank": (),
+}
+
+
+class ShardingCtx(NamedTuple):
+    mesh: Mesh
+    rules: dict
+
+
+_CTX: list = []  # stack
+
+
+def current_ctx() -> Optional[ShardingCtx]:
+    return _CTX[-1] if _CTX else None
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, rules: Optional[dict] = None):
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    _CTX.append(ShardingCtx(mesh, merged))
+    try:
+        yield
+    finally:
+        _CTX.pop()
+
+
+# ---------------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------------
+
+def resolve_spec(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: dict,
+) -> P:
+    """Logical axes -> PartitionSpec, dropping non-dividing / reused mesh axes."""
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    used = set()
+    out = []
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for name, dim in zip(logical_axes, shape):
+        if name is None:
+            out.append(None)
+            continue
+        mesh_axes = rules.get(name, ())
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        picked = []
+        extent = 1
+        for ax in mesh_axes:
+            if ax in used or ax not in axis_sizes:
+                continue
+            if dim % (extent * axis_sizes[ax]) == 0:
+                picked.append(ax)
+                extent *= axis_sizes[ax]
+        used.update(picked)
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(tuple(picked))
+    return P(*out)
+
+
+def named_sharding(logical_axes, shape, ctx: Optional[ShardingCtx] = None):
+    ctx = ctx or current_ctx()
+    assert ctx is not None
+    return NamedSharding(ctx.mesh, resolve_spec(logical_axes, shape, ctx.mesh, ctx.rules))
+
+
+def shard(x: jnp.ndarray, *logical_axes: Optional[str]) -> jnp.ndarray:
+    """Activation sharding constraint; no-op outside a sharding context."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    sh = named_sharding(logical_axes, x.shape, ctx)
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+# ---------------------------------------------------------------------------
+# Param annotation
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class Param:
+    """A parameter leaf paired with its logical axes.
+
+    Registered as a pytree node with the axes as *static* metadata, so Param
+    trees pass transparently through jit / eval_shape / tree.map (the mapped
+    function sees the value; axes are preserved) — this is what lets the
+    dry-run get both abstract shapes AND sharding axes from one
+    ``jax.eval_shape(init_params)`` without materializing 100B params.
+    """
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes: Tuple[Optional[str], ...]):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+    def __repr__(self):
+        shape = getattr(self.value, "shape", None)
+        return f"Param(shape={shape}, axes={self.axes})"
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+# axes trees use ','-joined string leaves so they stay tree-mappable
+def axes_to_str(axes: Tuple[Optional[str], ...]) -> str:
+    return ",".join("" if a is None else a for a in axes)
+
+
+def str_to_axes(s: str) -> Tuple[Optional[str], ...]:
+    if s == "":
+        return ()
+    return tuple(None if a == "" else a for a in s.split(","))
+
+
+def split_params(tree):
+    """Tree of Param -> (values tree, logical-axes tree with string leaves)."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: axes_to_str(p.axes), tree, is_leaf=is_param)
+    return values, axes
+
+
+def tree_shardings(values_tree, axes_tree, mesh: Mesh, rules: Optional[dict] = None):
+    """Shardings for pjit in/out_shardings, resolved against concrete shapes."""
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+
+    def _one(v, axes):
+        ax = str_to_axes(axes) if isinstance(axes, str) else axes
+        if len(ax) == 0:
+            ax = (None,) * len(v.shape)
+        return NamedSharding(mesh, resolve_spec(ax, v.shape, mesh, merged))
+
+    return jax.tree.map(_one, values_tree, axes_tree)

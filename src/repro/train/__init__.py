@@ -1,0 +1,10 @@
+from repro.train.losses import cross_entropy, lm_loss, masked_prediction_loss, task_loss
+from repro.train.step import (
+    apply_grads,
+    init_opt_state,
+    make_decode_step,
+    make_eval_step,
+    make_grad_step,
+    make_prefill_step,
+    make_train_step,
+)

@@ -1,0 +1,37 @@
+"""Losses: causal LM cross-entropy and masked prediction (HuBERT-style)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits, targets, loss_mask=None, z_loss: float = 0.0):
+    """logits (B,S,V) f32, targets (B,S) int32. Mean over unmasked tokens."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(logz)
+    if loss_mask is not None:
+        w = loss_mask.astype(jnp.float32)
+        return (nll * w).sum() / jnp.maximum(w.sum(), 1.0)
+    return nll.mean()
+
+
+def lm_loss(cfg, logits, batch):
+    """Next-token prediction: shift inside unless explicit targets given."""
+    if "targets" in batch:
+        return cross_entropy(logits, batch["targets"], batch.get("loss_mask"))
+    toks = batch["tokens"]
+    return cross_entropy(logits[:, :-1], toks[:, 1:])
+
+
+def masked_prediction_loss(cfg, logits, batch):
+    """Encoder masked-prediction (audio): CE only on masked frames."""
+    return cross_entropy(logits, batch["targets"], batch["loss_mask"])
+
+
+def task_loss(cfg, logits, batch):
+    if cfg.encoder_only:
+        return masked_prediction_loss(cfg, logits, batch)
+    return lm_loss(cfg, logits, batch)

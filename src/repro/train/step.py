@@ -1,0 +1,132 @@
+"""jit-able train / prefill / decode step factories.
+
+``train_step`` differentiates ONLY the LoRA leaves (path-partitioned), so the
+frozen base model never gets gradients or optimizer state — faithful to the
+paper's LoRA fine-tuning setting and what makes 100B-scale dry-runs fit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.optim import adamw, warmup_cosine
+from repro.train.losses import task_loss
+from repro.utils.partition import is_lora_path, partition_by_path
+
+
+class TrainMetrics(NamedTuple):
+    loss: jnp.ndarray
+    grad_norm: jnp.ndarray
+    lr: jnp.ndarray
+
+
+def init_opt_state(params):
+    lora_leaves, _ = partition_by_path(params, is_lora_path)
+    return adamw.init(lora_leaves)
+
+
+def make_train_step(cfg, tcfg):
+    """-> train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    from repro.sharding import shard
+
+    def train_step(params, opt_state, batch):
+        lora0, merge = partition_by_path(params, is_lora_path)
+
+        def loss_fn(lora_leaves, mb):
+            full = merge(lora_leaves)
+            logits, aux = tf.forward(cfg, full, mb, remat=tcfg.remat)
+            return task_loss(cfg, logits, mb) + aux
+
+        a = tcfg.microbatches
+        if a > 1:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((a, x.shape[0] // a) + x.shape[1:]), batch
+            )
+
+            def mb_step(carry, mb):
+                loss_sum, gsum = carry
+                mb = jax.tree.map(
+                    lambda x: shard(x, "batch", *((None,) * (x.ndim - 1))), mb
+                )
+                l, g = jax.value_and_grad(loss_fn)(lora0, mb)
+                return (loss_sum + l, jax.tree.map(jnp.add, gsum, g)), None
+
+            init = (jnp.zeros((), jnp.float32), jax.tree.map(jnp.zeros_like, lora0))
+            (loss, grads), _ = jax.lax.scan(mb_step, init, mbs)
+            loss = loss / a
+            grads = jax.tree.map(lambda g: g / a, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(lora0, batch)
+        grads, gnorm = adamw.clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = warmup_cosine(
+            opt_state.step,
+            base_lr=tcfg.lr,
+            warmup_steps=tcfg.warmup_steps,
+            total_steps=tcfg.total_steps,
+        )
+        new_lora, new_opt = adamw.update(
+            grads, opt_state, lora0,
+            lr=lr, b1=tcfg.b1, b2=tcfg.b2, eps=tcfg.eps,
+            weight_decay=tcfg.weight_decay,
+        )
+        return merge(new_lora), new_opt, TrainMetrics(loss, gnorm, lr)
+
+    return train_step
+
+
+def make_grad_step(cfg, tcfg):
+    """Gradient-only step for accumulation: (params, batch) -> (loss, grads)."""
+
+    def grad_step(params, batch):
+        lora0, merge = partition_by_path(params, is_lora_path)
+
+        def loss_fn(lora_leaves):
+            full = merge(lora_leaves)
+            logits, aux = tf.forward(cfg, full, batch, remat=tcfg.remat)
+            return task_loss(cfg, logits, batch) + aux
+
+        return jax.value_and_grad(loss_fn)(lora0)
+
+    return grad_step
+
+
+def apply_grads(cfg, tcfg, params, opt_state, grads):
+    """Optimizer apply for externally-accumulated grads (elastic trainer)."""
+    lora0, merge = partition_by_path(params, is_lora_path)
+    grads, _ = adamw.clip_by_global_norm(grads, tcfg.grad_clip)
+    lr = warmup_cosine(
+        opt_state.step, base_lr=tcfg.lr,
+        warmup_steps=tcfg.warmup_steps, total_steps=tcfg.total_steps,
+    )
+    new_lora, new_opt = adamw.update(
+        grads, opt_state, lora0, lr=lr,
+        b1=tcfg.b1, b2=tcfg.b2, eps=tcfg.eps, weight_decay=tcfg.weight_decay,
+    )
+    return merge(new_lora), new_opt
+
+
+def make_eval_step(cfg):
+    def eval_step(params, batch):
+        logits, aux = tf.forward(cfg, params, batch)
+        return task_loss(cfg, logits, batch)
+
+    return eval_step
+
+
+def make_prefill_step(cfg, max_len: int):
+    def prefill_step(params, batch):
+        return tf.prefill(cfg, params, batch, max_len=max_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def decode_step(params, cache, batch):
+        logits, new_cache = tf.decode_step(cfg, params, batch, cache)
+        return logits, new_cache
+
+    return decode_step

@@ -1,0 +1,1 @@
+from repro.utils.tree import count_params, tree_bytes, tree_map_with_path_names

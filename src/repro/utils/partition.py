@@ -1,0 +1,48 @@
+"""Path-based pytree partitioning — used to train LoRA params only.
+
+``partition_by_path(tree, pred)`` returns the selected leaves (a flat list,
+itself a valid pytree for grad/optimizer state) plus a merge function that
+reinserts them into the full tree. The base model stays frozen by simply
+never being part of the differentiated pytree.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import jax
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def partition_by_path(tree, pred: Callable[[str], bool]):
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    sel_idx = [i for i, (p, _) in enumerate(paths_leaves) if pred(_path_str(p))]
+    sel_set = set(sel_idx)
+    sel = [paths_leaves[i][1] for i in sel_idx]
+    rest = [l for i, (_, l) in enumerate(paths_leaves) if i not in sel_set]
+
+    def merge(sel_leaves: List):
+        assert len(sel_leaves) == len(sel_idx)
+        out, ri, si = [], 0, 0
+        for i in range(len(paths_leaves)):
+            if i in sel_set:
+                out.append(sel_leaves[si])
+                si += 1
+            else:
+                out.append(rest[ri])
+                ri += 1
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return sel, merge
+
+
+def is_lora_path(path: str) -> bool:
+    return "lora" in path.split("/")
+
+
+def select_paths(tree, pred: Callable[[str], bool]):
+    """Just the selected (path, leaf) pairs."""
+    paths_leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [( _path_str(p), l) for p, l in paths_leaves if pred(_path_str(p))]

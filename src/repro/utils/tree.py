@@ -1,0 +1,28 @@
+"""Small pytree utilities (no flax in this environment)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    total = 0
+    for x in jax.tree.leaves(tree):
+        dt = x.dtype if hasattr(x, "dtype") else jnp.float32
+        total += int(np.prod(x.shape)) * jnp.dtype(dt).itemsize
+    return total
+
+
+def tree_map_with_path_names(fn, tree):
+    """Like tree.map_with_path but paths rendered as '/'-joined strings."""
+
+    def _fn(path, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        return fn(name, leaf)
+
+    return jax.tree_util.tree_map_with_path(_fn, tree)

@@ -1,0 +1,15 @@
+import os
+
+# Tests must see the single real CPU device — the 512-device forcing is
+# strictly dry-run-only (python -m repro.launch.dryrun in a subprocess).
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import jax
+
+    return jax.random.PRNGKey(0)

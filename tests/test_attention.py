@@ -1,0 +1,112 @@
+"""Attention unit tests: blockwise==plain, ring cache, GQA, RoPE/M-RoPE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as attn
+from repro.models.rope import apply_m_rope, apply_rope, default_m_positions
+
+
+def _qkv(rng, b=2, s=256, h=4, kv=2, d=32):
+    ks = jax.random.split(rng, 3)
+    return (
+        jax.random.normal(ks[0], (b, s, h, d)),
+        jax.random.normal(ks[1], (b, s, kv, d)),
+        jax.random.normal(ks[2], (b, s, kv, d)),
+    )
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None), (True, 96)])
+def test_blockwise_matches_plain(rng, causal, window):
+    q, k, v = _qkv(rng, s=512)
+    pos = jnp.arange(512)
+    out_plain = attn._plain_attn(q, k, v, pos, pos, causal, window)
+    out_block = attn._blockwise_attn(q, k, v, pos, pos, causal, window)
+    np.testing.assert_allclose(
+        np.asarray(out_block), np.asarray(out_plain), atol=2e-5, rtol=2e-5
+    )
+
+
+def test_ring_positions():
+    # after 10 tokens in a width-4 ring: slots hold positions 8,9,6,7
+    got = np.asarray(attn.ring_positions(4, jnp.int32(10)))
+    np.testing.assert_array_equal(got, [8, 9, 6, 7])
+    got = np.asarray(attn.ring_positions(4, jnp.int32(2)))
+    np.testing.assert_array_equal(got, [0, 1, -1, -1])
+    got = np.asarray(attn.ring_positions(4, jnp.int32(0)))
+    np.testing.assert_array_equal(got, [-1, -1, -1, -1])
+
+
+def test_ring_decode_matches_full_window(rng):
+    """Decode through a ring cache == windowed attention over full history."""
+    b, h, kv, d, w = 1, 2, 2, 16, 8
+    steps = 20
+
+    class C:  # minimal cfg stand-in
+        sliding_window = w
+        num_kv_heads = kv
+        head_dim = d
+
+    ks = jax.random.split(rng, steps * 3).reshape(steps, 3, -1)
+    ck = jnp.zeros((b, w, kv, d))
+    cv = jnp.zeros((b, w, kv, d))
+    khist, vhist = [], []
+    for t in range(steps):
+        q1 = jax.random.normal(jax.random.PRNGKey(t * 3), (b, 1, h, d))
+        k1 = jax.random.normal(jax.random.PRNGKey(t * 3 + 1), (b, 1, kv, d))
+        v1 = jax.random.normal(jax.random.PRNGKey(t * 3 + 2), (b, 1, kv, d))
+        khist.append(k1)
+        vhist.append(v1)
+        ck, cv = attn.write_decode(ck, cv, k1, v1, jnp.int32(t))
+        out_ring = attn.decode_attend(C, q1, ck, cv, jnp.int32(t + 1))
+        kfull = jnp.concatenate(khist, axis=1)
+        vfull = jnp.concatenate(vhist, axis=1)
+        pos = jnp.arange(t + 1)
+        ref = attn._plain_attn(q1, kfull, vfull, jnp.array([t]), pos, True, w)
+        np.testing.assert_allclose(
+            np.asarray(out_ring), np.asarray(ref), atol=2e-5, rtol=2e-5
+        )
+
+
+def test_write_prefill_ring_layout(rng):
+    b, kv, d, w, s = 1, 1, 4, 8, 20
+    k = jnp.arange(s, dtype=jnp.float32).reshape(1, s, 1, 1) * jnp.ones((b, s, kv, d))
+    ck = jnp.zeros((b, w, kv, d))
+    nk, _ = attn.write_prefill(type("C", (), {"sliding_window": w})(), ck, ck, k, k)
+    slot_pos = np.asarray(attn.ring_positions(w, jnp.int32(s)))
+    for j, p in enumerate(slot_pos):
+        assert float(nk[0, j, 0, 0]) == float(p)
+
+
+def test_gqa_equals_repeated_mha(rng):
+    q, k, v = _qkv(rng, s=64, h=4, kv=2)
+    pos = jnp.arange(64)
+    out = attn._plain_attn(q, k, v, pos, pos, True, None)
+    k2 = jnp.repeat(k, 2, axis=2)
+    v2 = jnp.repeat(v, 2, axis=2)
+    out2 = attn._plain_attn(q, k2, v2, pos, pos, True, None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=2e-5, rtol=2e-5)
+
+
+def test_mrope_equals_rope_for_text(rng):
+    x = jax.random.normal(rng, (2, 32, 4, 64))
+    pos = jnp.broadcast_to(jnp.arange(32)[None], (2, 32))
+    r1 = apply_rope(x, pos, 10000.0)
+    r2 = apply_m_rope(x, default_m_positions(2, 32), 10000.0, (8, 12, 12))
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), atol=1e-5)
+
+
+def test_rope_relative_shift_invariance(rng):
+    """Attention logits depend only on relative positions under RoPE."""
+    q = jax.random.normal(rng, (1, 8, 1, 64))
+    k = jax.random.normal(jax.random.PRNGKey(9), (1, 8, 1, 64))
+    p0 = jnp.arange(8)[None]
+    s0 = jnp.einsum(
+        "bqhd,bkhd->bqk", apply_rope(q, p0, 1e4), apply_rope(k, p0, 1e4)
+    )
+    p1 = p0 + 100
+    s1 = jnp.einsum(
+        "bqhd,bkhd->bqk", apply_rope(q, p1, 1e4), apply_rope(k, p1, 1e4)
+    )
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=2e-3, rtol=1e-3)

@@ -1,0 +1,75 @@
+"""Config registry + assigned-architecture invariants."""
+import pytest
+
+from repro.configs import (
+    ASSIGNED_ARCHS,
+    INPUT_SHAPES,
+    get_config,
+    get_smoke_config,
+    shape_applicable,
+)
+
+EXPECTED_PARAMS_B = {  # coarse (±20%) match to the public model sizes
+    "qwen2-vl-7b": 7.1,
+    "mamba2-370m": 0.37,
+    "olmo-1b": 1.2,
+    "zamba2-2.7b": 2.6,
+    "qwen1.5-110b": 111.0,
+    "mixtral-8x7b": 46.7,
+    "mixtral-8x22b": 141.0,
+    "granite-20b": 25.0,
+    "command-r-plus-104b": 104.0,
+    "hubert-xlarge": 0.96,
+}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_counts_match_public_sizes(arch):
+    cfg = get_config(arch)
+    got = cfg.param_count() / 1e9
+    want = EXPECTED_PARAMS_B[arch]
+    assert abs(got - want) / want < 0.20, (arch, got, want)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_configs_are_reduced(arch):
+    s = get_smoke_config(arch)
+    assert s.num_layers <= 2
+    assert s.d_model <= 512
+    if s.moe is not None:
+        assert s.moe.num_experts <= 4
+    assert s.arch_type == get_config(arch).arch_type
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_head_dims_consistent(arch):
+    cfg = get_config(arch)
+    if cfg.num_heads:
+        assert cfg.num_heads % cfg.num_kv_heads == 0
+        assert cfg.head_dim * cfg.num_heads >= cfg.d_model // 2
+
+
+def test_shape_skip_rules():
+    # encoder-only: no decode shapes
+    hub = get_config("hubert-xlarge")
+    assert not shape_applicable(hub, INPUT_SHAPES["decode_32k"])[0]
+    assert not shape_applicable(hub, INPUT_SHAPES["long_500k"])[0]
+    assert shape_applicable(hub, INPUT_SHAPES["train_4k"])[0]
+    # long_500k: sub-quadratic only
+    assert shape_applicable(get_config("mamba2-370m"), INPUT_SHAPES["long_500k"])[0]
+    assert shape_applicable(get_config("zamba2-2.7b"), INPUT_SHAPES["long_500k"])[0]
+    assert shape_applicable(get_config("mixtral-8x7b"), INPUT_SHAPES["long_500k"])[0]  # SWA
+    assert not shape_applicable(get_config("olmo-1b"), INPUT_SHAPES["long_500k"])[0]
+    assert not shape_applicable(get_config("command-r-plus-104b"), INPUT_SHAPES["long_500k"])[0]
+
+
+def test_moe_active_params():
+    cfg = get_config("mixtral-8x7b")
+    assert cfg.active_param_count() < cfg.param_count()
+    assert 12.0e9 < cfg.active_param_count() < 14.5e9  # ~12.9B active
+
+
+def test_lora_params_tiny():
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        assert cfg.lora_param_count() < 0.02 * cfg.param_count()

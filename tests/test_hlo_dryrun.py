@@ -1,0 +1,100 @@
+"""HLO accounting unit tests + subprocess mini dry-run (8 forced devices).
+
+The full 512-device production dry-run is exercised via
+``python -m repro.launch.dryrun`` (EXPERIMENTS.md §Dry-run); here we prove
+the machinery end-to-end at test-friendly scale.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze, type_bytes
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_dot_flops_simple_matmul():
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 64), jnp.float32)
+    acc = analyze(_hlo(lambda x, y: x @ y, a, b))
+    assert acc["dot_flops"] == pytest.approx(2 * 128 * 256 * 64, rel=0.01)
+
+
+def test_scan_trip_count_multiplies():
+    a = jnp.zeros((64, 64), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            return c @ c * 0.5, None
+
+        out, _ = jax.lax.scan(body, x, None, length=9)
+        return out
+
+    acc = analyze(_hlo(f, a))
+    assert 9 in acc["while_trips"]
+    assert acc["dot_flops"] == pytest.approx(9 * 2 * 64**3, rel=0.05)
+
+
+def test_type_bytes():
+    assert type_bytes("f32[4,8]{1,0}") == 128
+    assert type_bytes("bf16[10]") == 20
+    assert type_bytes("(f32[2]{0}, s32[3]{0})") == 20
+    assert type_bytes("f32[4,8]{1,0}", f32_as=2) == 64
+    assert type_bytes("pred[]") == 1
+
+
+def test_traffic_counts_something():
+    a = jnp.zeros((256, 256), jnp.float32)
+    acc = analyze(_hlo(lambda x: jax.nn.relu(x @ x), a))
+    assert acc["traffic_bytes"] >= 3 * 256 * 256 * 4  # two reads + one write
+
+
+@pytest.mark.slow
+def test_subprocess_mini_dryrun(tmp_path):
+    """Real dry-run flow on a 2x2(x2) mesh with 8 forced host devices."""
+    env = dict(os.environ, REPRO_DRYRUN_DEVICES="8",
+               PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    out = str(tmp_path / "dryrun")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--smoke",
+         "--arch", "mixtral-8x7b", "--shape", "train_4k", "--mesh", "both",
+         "--out", out],
+        env=env, capture_output=True, text=True, timeout=420,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    recs = [json.load(open(os.path.join(out, f))) for f in sorted(os.listdir(out))]
+    assert len(recs) == 2
+    for r in recs:
+        assert r["status"] == "ok", r
+        assert r["flops_per_device"] > 0
+        assert r["collective_bytes"] > 0
+        assert r["while_trips"], r
+
+
+@pytest.mark.slow
+def test_subprocess_mini_dryrun_decode_and_skip(tmp_path):
+    env = dict(os.environ, REPRO_DRYRUN_DEVICES="8",
+               PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    out = str(tmp_path / "dryrun2")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--smoke",
+         "--arch", "hubert-xlarge", "--shape", "all", "--mesh", "single",
+         "--out", out],
+        env=env, capture_output=True, text=True, timeout=420,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    recs = {f: json.load(open(os.path.join(out, f))) for f in os.listdir(out)}
+    by_shape = {r["shape"]: r for r in recs.values()}
+    assert by_shape["train_4k"]["status"] == "ok"
+    assert by_shape["decode_32k"]["status"] == "skipped"   # encoder-only
+    assert by_shape["long_500k"]["status"] == "skipped"

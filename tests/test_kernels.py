@@ -1,0 +1,158 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes the real kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.lora_matmul import lora_matmul
+from repro.kernels.ref import flash_attention_ref, lora_matmul_ref, ssd_scan_ref
+from repro.kernels.ssd_scan import ssd_scan
+
+
+# ---------------------------------------------------------------------------
+# lora_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n,r", [(128, 128, 128, 16), (256, 384, 128, 8), (128, 256, 256, 64)])
+def test_lora_matmul_sweep(rng, m, k, n, r, dtype):
+    ks = jax.random.split(rng, 4)
+    x = jax.random.normal(ks[0], (m, k), dtype)
+    w = jax.random.normal(ks[1], (k, n), dtype) * 0.05
+    a = jax.random.normal(ks[2], (k, r), dtype) * 0.05
+    b = jax.random.normal(ks[3], (r, n), dtype) * 0.05
+    y = lora_matmul(x, w, a, b, 2.0, interpret=True)
+    yr = lora_matmul_ref(x, w, a, b, 2.0)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(yr, np.float32), atol=tol, rtol=tol
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    mi=st.integers(1, 3), ki=st.integers(1, 3), ni=st.integers(1, 3),
+    r=st.sampled_from([8, 16, 32]), scale=st.floats(0.1, 4.0),
+)
+def test_lora_matmul_property(mi, ki, ni, r, scale):
+    m, k, n = mi * 128, ki * 128, ni * 128
+    keys = jax.random.split(jax.random.PRNGKey(m * 7 + k * 3 + n), 4)
+    x = jax.random.normal(keys[0], (m, k))
+    w = jax.random.normal(keys[1], (k, n)) * 0.05
+    a = jax.random.normal(keys[2], (k, r)) * 0.05
+    b = jax.random.normal(keys[3], (r, n)) * 0.05
+    y = lora_matmul(x, w, a, b, scale, interpret=True)
+    yr = lora_matmul_ref(x, w, a, b, scale)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-4, rtol=2e-4)
+
+
+def test_lora_matmul_zero_b_equals_base(rng):
+    ks = jax.random.split(rng, 3)
+    x = jax.random.normal(ks[0], (128, 128))
+    w = jax.random.normal(ks[1], (128, 128)) * 0.05
+    a = jax.random.normal(ks[2], (128, 16)) * 0.05
+    b = jnp.zeros((16, 128))
+    y = lora_matmul(x, w, a, b, 2.0, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None), (True, 100)])
+@pytest.mark.parametrize("bh,sq,sk,d", [(4, 256, 256, 64), (2, 128, 512, 128)])
+def test_flash_attention_sweep(rng, bh, sq, sk, d, causal, window):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (bh, sq, d))
+    k = jax.random.normal(ks[1], (bh, sk, d))
+    v = jax.random.normal(ks[2], (bh, sk, d))
+    y = flash_attention(q, k, v, causal=causal, window=window, interpret=True)
+    yr = flash_attention_ref(
+        q[:, None].swapaxes(0, 1), k[:, None].swapaxes(0, 1), v[:, None].swapaxes(0, 1),
+        causal=causal, window=window,
+    )[0]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16(rng):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (2, 128, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (2, 128, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (2, 128, 64), jnp.bfloat16)
+    y = flash_attention(q, k, v, interpret=True)
+    yr = flash_attention_ref(q[None].swapaxes(0, 1), k[None].swapaxes(0, 1),
+                             v[None].swapaxes(0, 1))[:, 0]
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(yr, np.float32), atol=3e-2, rtol=3e-2
+    )
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bh,s,p,n,cs", [(4, 256, 64, 32, 64), (2, 256, 32, 128, 128)])
+def test_ssd_scan_sweep(rng, bh, s, p, n, cs):
+    ks = jax.random.split(rng, 5)
+    x = jax.random.normal(ks[0], (bh, s, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bh, s))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (bh,))) * 0.5
+    B = jax.random.normal(ks[3], (bh, s, n)) * 0.3
+    C = jax.random.normal(ks[4], (bh, s, n)) * 0.3
+    y, hf = ssd_scan(x, dt, A, B, C, chunk=cs, interpret=True)
+    yr, hr = ssd_scan_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=3e-4, rtol=3e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hr), atol=3e-4, rtol=3e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000), cs=st.sampled_from([32, 64, 128]))
+def test_ssd_scan_property(seed, cs):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    bh, s, p, n = 2, 128, 32, 16
+    x = jax.random.normal(ks[0], (bh, s, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bh, s))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (bh,))) * 0.5
+    B = jax.random.normal(ks[3], (bh, s, n)) * 0.3
+    C = jax.random.normal(ks[4], (bh, s, n)) * 0.3
+    y, hf = ssd_scan(x, dt, A, B, C, chunk=cs, interpret=True)
+    yr, hr = ssd_scan_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=5e-4, rtol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# ops wrappers vs model XLA paths (kernel == oracle == model triangle)
+# ---------------------------------------------------------------------------
+
+def test_ops_attention_gqa_matches_model_path(rng):
+    from repro.models.attention import _plain_attn
+
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (2, 128, 8, 64))
+    k = jax.random.normal(ks[1], (2, 128, 2, 64))
+    v = jax.random.normal(ks[2], (2, 128, 2, 64))
+    o1 = ops.attention(q, k, v, causal=True)
+    o2 = _plain_attn(q, k, v, jnp.arange(128), jnp.arange(128), True, None)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5, rtol=2e-5)
+
+
+def test_ops_ssd_matches_model_path(rng):
+    from repro.models.ssm import ssd_chunked
+
+    ks = jax.random.split(rng, 5)
+    x = jax.random.normal(ks[0], (2, 128, 4, 32))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (2, 128, 4))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (4,))) * 0.5
+    B = jax.random.normal(ks[3], (2, 128, 2, 16)) * 0.3
+    C = jax.random.normal(ks[4], (2, 128, 2, 16)) * 0.3
+    y1, h1 = ops.ssd(x, dt, A, B, C, chunk=64)
+    y2, h2 = ssd_chunked(x, dt, A, B, C, 64)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=3e-4, rtol=3e-4)
+    np.testing.assert_allclose(
+        np.asarray(h1.transpose(0, 1, 3, 2)), np.asarray(h2), atol=3e-4, rtol=3e-4
+    )

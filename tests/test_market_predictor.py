@@ -1,0 +1,89 @@
+"""Market trace calibration (paper Fig. 2) and predictor behavior (Fig. 3)."""
+import numpy as np
+import pytest
+
+from repro.core.market import TraceStats, vast_like_trace
+from repro.core.predictor import (
+    ARIMAPredictor,
+    NOISE_KINDS,
+    NoisyPredictor,
+    PerfectPredictor,
+    forecast_errors,
+    mape,
+)
+
+
+def test_trace_calibration():
+    stats = [TraceStats.of(vast_like_trace(seed=s, days=10)) for s in range(5)]
+    m_over_p90 = np.mean([s.median_over_p90 for s in stats])
+    # paper Fig. 2(b): median ~= 60% of P90
+    assert 0.5 < m_over_p90 < 0.75, m_over_p90
+    for s in stats:
+        assert 0 <= s.avail_mean <= 16
+        # diurnal cycle: nights have less availability
+        assert s.avail_day_night_ratio > 1.1
+
+
+def test_trace_bounds():
+    tr = vast_like_trace(seed=1, days=10)
+    assert tr.avail.min() >= 0 and tr.avail.max() <= 16
+    assert np.all(tr.prices > 0)
+    assert len(tr) == 480
+
+
+def test_perfect_predictor_exact():
+    tr = vast_like_trace(seed=2, days=2)
+    M = PerfectPredictor(tr).matrix(5)
+    for j in range(6):
+        t = 10
+        assert M[t, j, 0] == pytest.approx(tr.prices[t + j])
+        assert M[t, j, 1] == pytest.approx(tr.avail[t + j])
+
+
+@pytest.mark.parametrize("kind", NOISE_KINDS)
+def test_noise_grows_with_horizon(kind):
+    tr = vast_like_trace(seed=3, days=4)
+    pred = NoisyPredictor(tr, kind, level=0.3, seed=0)
+    errs = forecast_errors(tr, pred, horizon=5)["price"]
+    assert errs[-1] > errs[0] * 0.8  # roughly increasing
+    # present is observed exactly
+    M = pred.matrix(5)
+    np.testing.assert_allclose(M[:, 0, 0], tr.prices, atol=1e-9)
+
+
+def test_noise_level_ordering():
+    tr = vast_like_trace(seed=4, days=4)
+    e_small = np.mean(forecast_errors(tr, NoisyPredictor(tr, "fixed_uniform", 0.1, 0), 5)["price"])
+    e_big = np.mean(forecast_errors(tr, NoisyPredictor(tr, "fixed_uniform", 0.5, 0), 5)["price"])
+    assert e_big > e_small
+
+
+def test_heavytail_has_outliers():
+    tr = vast_like_trace(seed=5, days=4)
+    u = NoisyPredictor(tr, "fixed_uniform", 0.3, 0).matrix(5)
+    h = NoisyPredictor(tr, "fixed_heavytail", 0.3, 0).matrix(5)
+    du = np.abs(u[:, 1:, 0] - PerfectPredictor(tr).matrix(5)[:, 1:, 0])
+    dh = np.abs(h[:, 1:, 0] - PerfectPredictor(tr).matrix(5)[:, 1:, 0])
+    assert np.percentile(dh, 99.5) > np.percentile(du, 99.5)
+
+
+def test_arima_beats_persistence_on_seasonal_trace():
+    tr = vast_like_trace(seed=6, days=6)
+    horizon = 4
+    arima_err = np.mean(forecast_errors(tr, ARIMAPredictor(tr), horizon)["price"][1:])
+    # persistence: predict current value for all future steps
+    T = len(tr)
+    pers = []
+    for j in range(2, horizon + 1):
+        pred = tr.prices[: T - j]
+        true = tr.prices[j:]
+        pers.append(mape(pred, true))
+    assert arima_err < np.mean(pers) * 1.15, (arima_err, np.mean(pers))
+
+
+def test_arima_availability_integer_capped():
+    tr = vast_like_trace(seed=7, days=4)
+    M = ARIMAPredictor(tr).matrix(3)
+    av = M[:, 1:, 1]
+    assert np.all(av >= 0) and np.all(av <= 16)
+    assert np.allclose(av, np.round(av))

@@ -1,0 +1,125 @@
+"""Per-architecture smoke tests (spec deliverable f): REDUCED variant of each
+family runs one forward + one train step on CPU; output shapes + finiteness.
+Plus prefill/decode parity — the core serving invariant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, TrainConfig, get_smoke_config
+from repro.models import decode_step, forward, init_model, prefill
+from repro.models.transformer import init_params
+from repro.train.step import init_opt_state, make_train_step
+from repro.utils.partition import is_lora_path, partition_by_path
+
+B, S = 2, 64
+
+
+def _batch(cfg, rng, batch=B, seq=S, targets=True):
+    out = {}
+    if cfg.embed_inputs:
+        out["embeds"] = jax.random.normal(rng, (batch, seq, cfg.d_model), jnp.float32) * 0.1
+        if targets:
+            out["targets"] = jax.random.randint(rng, (batch, seq), 0, cfg.vocab_size)
+    else:
+        out["tokens"] = jax.random.randint(rng, (batch, seq), 0, cfg.vocab_size)
+    if cfg.encoder_only and targets:
+        out["loss_mask"] = jax.random.bernoulli(rng, 0.2, (batch, seq))
+    return out
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_forward_shapes_finite(arch, rng):
+    cfg = get_smoke_config(arch)
+    params, _ = init_model(rng, cfg)
+    batch = _batch(cfg, rng, targets=False)
+    logits, aux = jax.jit(lambda p, b: forward(cfg, p, b))(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_train_step(arch, rng):
+    cfg = get_smoke_config(arch)
+    params, _ = init_model(rng, cfg)
+    tcfg = TrainConfig(total_steps=10, lr=1e-3)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    opt = init_opt_state(params)
+    batch = _batch(cfg, rng)
+    p2, opt2, m = step(params, opt, batch)
+    assert bool(jnp.isfinite(m.loss)) and float(m.loss) > 0
+    assert bool(jnp.isfinite(m.grad_norm))
+    # LoRA-only training: base frozen, adapters move
+    l0, _ = partition_by_path(params, is_lora_path)
+    l2, _ = partition_by_path(p2, is_lora_path)
+    b0, _ = partition_by_path(params, lambda p: not is_lora_path(p))
+    b2, _ = partition_by_path(p2, lambda p: not is_lora_path(p))
+    assert any(bool(jnp.any(a != b)) for a, b in zip(l0, l2))
+    assert all(bool(jnp.all(a == b)) for a, b in zip(b0, b2))
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["olmo-1b", "granite-20b", "mixtral-8x7b", "mamba2-370m", "zamba2-2.7b", "qwen2-vl-7b"],
+)
+def test_prefill_decode_parity(arch, rng):
+    cfg = get_smoke_config(arch)
+    if cfg.moe is not None:
+        # capacity-based MoE drops differ between prefill groups (S tokens)
+        # and decode groups (1 token); ample capacity removes drops so the
+        # parity check tests the cache machinery, not drop noise
+        import dataclasses
+
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0)
+        )
+    params, _ = init_model(rng, cfg)
+    full = _batch(cfg, rng, seq=S, targets=False)
+    key = "embeds" if cfg.embed_inputs else "tokens"
+    pre = {key: full[key][:, : S - 4]}
+    logits_full, _ = forward(cfg, params, full)
+    lg, cache = prefill(cfg, params, pre, max_len=S)
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0]), np.asarray(logits_full[:, S - 5]), atol=2e-4, rtol=2e-3
+    )
+    for i in range(S - 4, S):
+        stepin = {key: full[key][:, i : i + 1]}
+        lg, cache = decode_step(cfg, params, stepin, cache)
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0]), np.asarray(logits_full[:, -1]), atol=2e-4, rtol=2e-3
+    )
+
+
+def test_tiny_model_learns(rng):
+    """End-to-end learning signal: loss strictly decreases on repeated batch."""
+    cfg = get_smoke_config("olmo-1b")
+    params, _ = init_model(rng, cfg)
+    tcfg = TrainConfig(total_steps=40, lr=5e-3, warmup_steps=2)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    opt = init_opt_state(params)
+    batch = _batch(cfg, rng)
+    first = last = None
+    for i in range(30):
+        params, opt, m = step(params, opt, batch)
+        if i == 0:
+            first = float(m.loss)
+        last = float(m.loss)
+    assert last < first - 0.05, (first, last)
+
+
+def test_sliding_window_limits_context(rng):
+    """With SWA, tokens beyond the window cannot influence the output."""
+    cfg = get_smoke_config("mixtral-8x7b")
+    assert cfg.sliding_window == 64
+    cfg = cfg.reduced(sliding_window=16, num_layers=1)
+    params, _ = init_model(rng, cfg)
+    toks = jax.random.randint(rng, (1, 48), 0, cfg.vocab_size)
+    l1, _ = forward(cfg, params, {"tokens": toks})
+    toks2 = toks.at[:, :16].set((toks[:, :16] + 7) % cfg.vocab_size)
+    l2, _ = forward(cfg, params, {"tokens": toks2})
+    # last position attends only to the final 16 tokens -> unchanged
+    np.testing.assert_allclose(
+        np.asarray(l1[:, -1]), np.asarray(l2[:, -1]), atol=1e-4, rtol=1e-4
+    )
+    assert bool(jnp.any(jnp.abs(l1[:, 8] - l2[:, 8]) > 1e-3))  # early pos changed

@@ -1,0 +1,87 @@
+"""Multi-job scheduling extension (paper Sec. III-A: "readily extended")."""
+import numpy as np
+import pytest
+
+from repro.configs.base import JobConfig, ThroughputConfig
+from repro.core.market import constant_trace, from_arrays, vast_like_trace
+from repro.core.multi_job import MultiJobScheduler
+from repro.core.policies import AHAP, AHAPParams, UP
+from repro.core.predictor import PerfectPredictor
+from repro.core.simulator import simulate
+
+TPUT = ThroughputConfig(mu1=0.9, mu2=0.95)
+JOB = JobConfig(workload=40, deadline=8, n_min=1, n_max=10, value=80.0)
+
+
+def test_single_job_matches_reference_simulator():
+    """With one job, the multi-job scheduler == the single-job simulator."""
+    tr = vast_like_trace(seed=1, days=1).window(0, 12)
+    sched = MultiJobScheduler(TPUT, tr)
+    sched.submit(0, JOB, UP())
+    res = sched.run(10)[0]
+    ref = simulate(UP(), JOB, TPUT, tr)
+    assert res.utility == pytest.approx(ref.utility, abs=1e-6)
+    assert res.cost == pytest.approx(ref.cost, abs=1e-6)
+    assert res.completion_time == pytest.approx(ref.completion_time, abs=1e-6)
+
+
+def test_capacity_is_shared_not_duplicated():
+    """Two greedy jobs on a 6-unit pool can never take more than 6 spot."""
+    tr = constant_trace(0.4, 6, 20)
+    sched = MultiJobScheduler(TPUT, tr)
+    sched.submit(0, JOB, UP())
+    sched.submit(0, JOB, UP())
+    spot_by_slot = np.zeros(20)
+    for t in range(16):
+        if not sched.active:
+            break
+        active_before = list(sched.active)
+        sched.step(t)
+        for aj in active_before:
+            if aj.alloc_spot and len(aj.alloc_spot) - 1 == t - aj.arrival:
+                spot_by_slot[t] += aj.alloc_spot[-1]
+    assert np.all(spot_by_slot <= 6 + 1e-9)
+    assert spot_by_slot[:3].sum() > 0  # the pool is actually used
+
+
+def test_least_slack_gets_spot_first():
+    """A nearly-late job outranks a fresh one for scarce cheap spot."""
+    tr = constant_trace(0.3, 4, 30)
+    sched = MultiJobScheduler(TPUT, tr)
+    tight = JobConfig(workload=40, deadline=5, n_min=1, n_max=10, value=80.0)
+    loose = JobConfig(workload=10, deadline=12, n_min=1, n_max=10, value=80.0)
+    a = sched.submit(0, tight, UP())
+    b = sched.submit(0, loose, UP())
+    aj_tight = next(j for j in sched.active if j.job_id == a)
+    aj_loose = next(j for j in sched.active if j.job_id == b)
+    sched.step(0)
+    assert aj_tight.alloc_spot[0] >= aj_loose.alloc_spot[0]
+    results = {r.job_id: r for r in sched.run(25)}
+    assert results[a].completed_by_deadline or results[a].completion_time < 7
+    assert results[b].completed_by_deadline
+
+
+def test_contention_costs_utility():
+    """Sharing a scarce pool can only hurt (vs having it alone)."""
+    tr = from_arrays(np.full(20, 0.4), np.full(20, 5))
+    solo = simulate(UP(), JOB, TPUT, tr)
+    sched = MultiJobScheduler(TPUT, tr)
+    sched.submit(0, JOB, UP())
+    sched.submit(0, JOB, UP())
+    rs = sched.run(18)
+    for r in rs:
+        assert r.utility <= solo.utility + 1e-6
+    assert min(r.utility for r in rs) < solo.utility  # someone paid for od
+
+
+def test_ahap_jobs_with_forecasts():
+    tr = vast_like_trace(seed=3, days=1)
+    pred = PerfectPredictor(tr).matrix(5)
+    sched = MultiJobScheduler(TPUT, tr)
+    sched.submit(0, JOB, AHAP(AHAPParams(3, 1, 0.7)), pred=pred)
+    sched.submit(2, JOB, AHAP(AHAPParams(3, 1, 0.7)), pred=pred)
+    rs = sched.run(30)
+    assert len(rs) == 2
+    for r in rs:
+        assert np.isfinite(r.utility)
+        assert r.cost >= 0

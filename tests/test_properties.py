@@ -1,0 +1,129 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import JobConfig, ThroughputConfig
+from repro.core.job import normalize_utility, tilde_value, value_fn
+from repro.core.market import from_arrays
+from repro.core.policies import AHANP, AHANPParams, AHAP, AHAPParams, MSU, ODOnly, UP
+from repro.core.predictor import NoisyPredictor, PerfectPredictor
+from repro.core.simulator import simulate
+from repro.core.throughput import mu_factor
+from repro.core.window_opt import solve_window_numpy
+
+job_st = st.builds(
+    JobConfig,
+    workload=st.floats(5.0, 150.0),
+    deadline=st.integers(2, 12),
+    n_min=st.integers(1, 3),
+    n_max=st.integers(4, 16),
+    value=st.floats(10.0, 300.0),
+    gamma=st.floats(1.1, 3.0),
+)
+
+tput_st = st.builds(
+    ThroughputConfig,
+    alpha=st.floats(0.5, 2.0),
+    beta=st.just(0.0),
+    mu1=st.floats(0.5, 1.0),
+    mu2=st.floats(0.5, 1.0),
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(job=job_st, tput=tput_st, seed=st.integers(0, 10_000),
+       kind=st.integers(0, 4))
+def test_simulation_invariants(job, tput, seed, kind):
+    if tput.mu1 > tput.mu2:
+        tput = ThroughputConfig(tput.alpha, tput.beta, tput.mu2, tput.mu1)
+    rng = np.random.default_rng(seed)
+    d = job.deadline
+    prices = rng.uniform(0.05, 1.5, d)
+    avail = rng.integers(0, 17, d)
+    tr = from_arrays(prices, avail)
+    pol = [AHAP(AHAPParams(3, 2, 0.7)), AHANP(AHANPParams(0.5)), ODOnly(), MSU(), UP()][kind]
+    pred = PerfectPredictor(tr).matrix(5) if kind == 0 else None
+    r = simulate(pol, job, tput, tr, pred)
+
+    # (5b)-(5e): feasibility at every slot
+    assert np.all(r.n_spot <= avail[: len(r.n_spot)])
+    assert np.all(r.n_spot >= 0) and np.all(r.n_od >= 0)
+    assert np.all(r.n_total <= job.n_max)
+    active = r.n_total > 0
+    assert np.all(r.n_total[active] >= job.n_min)
+    # accounting identities (f32 slack on value comparisons)
+    tol = 1e-4 * (1 + job.value)
+    assert abs(r.utility - (r.value - r.cost)) < 1e-5
+    assert 0.0 <= r.value <= job.value + tol
+    assert r.cost >= -1e-9
+    assert 0.0 <= r.z_ddl <= job.workload + 1e-5
+    assert r.completion_time <= job.gamma * job.deadline + job.workload  # finite
+    # normalized utility in [0, 1]
+    u = float(normalize_utility(job, r.utility))
+    assert 0.0 <= u <= 1.0
+    # completing by the deadline <=> full value
+    if r.completed_by_deadline:
+        assert abs(r.value - job.value) < tol
+
+
+@settings(max_examples=40, deadline=None)
+@given(job=job_st, z=st.floats(0.0, 200.0))
+def test_tilde_value_bounds(job, z):
+    tput = ThroughputConfig()
+    tv = float(tilde_value(job, tput, z))
+    assert tv <= job.value + 1e-4 * (1 + job.value)
+    # worst case: finish everything post-deadline at full od burn (f32 slack)
+    worst = -job.on_demand_price * job.n_max * (job.workload / (tput.alpha * job.n_max))
+    assert tv >= worst - 1e-3 * (1 + abs(worst))
+
+
+@settings(max_examples=30, deadline=None)
+@given(job=job_st, t1=st.floats(0, 50), t2=st.floats(0, 50))
+def test_value_fn_monotone_nonincreasing(job, t1, t2):
+    lo, hi = min(t1, t2), max(t1, t2)
+    assert float(value_fn(job, lo)) >= float(value_fn(job, hi)) - 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 99999), w1=st.integers(1, 6),
+    std=st.integers(0, 6), job=job_st,
+)
+def test_window_solver_feasibility(seed, w1, std, job):
+    rng = np.random.default_rng(seed)
+    prices = rng.uniform(0.05, 1.5, w1)
+    avail = rng.integers(0, 17, w1)
+    n_o, n_s, obj = solve_window_numpy(
+        job, ThroughputConfig(), rng.uniform(0, job.workload), std,
+        prices, avail, job.on_demand_price,
+    )
+    tot = n_o + n_s
+    assert np.all(n_s <= avail)
+    assert np.all(tot <= job.n_max)
+    assert np.all((tot == 0) | (tot >= job.n_min))
+    assert np.all(tot[min(std, w1):] == 0)  # nothing scheduled past deadline
+    assert np.isfinite(obj)
+
+
+@settings(max_examples=20, deadline=None)
+@given(a=st.integers(0, 16), b=st.integers(0, 16),
+       mu1=st.floats(0.1, 1.0), mu2=st.floats(0.1, 1.0))
+def test_mu_factor_range(a, b, mu1, mu2):
+    lo, hi = min(mu1, mu2), max(mu1, mu2)
+    t = ThroughputConfig(mu1=lo, mu2=hi)
+    m = float(mu_factor(t, a, b))
+    assert m == 1.0 or lo - 1e-5 <= m <= hi + 1e-5  # f32 slack
+    if a == b:
+        assert m == 1.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 9999), level=st.floats(0.0, 0.5))
+def test_noise_matrix_valid(seed, level):
+    from repro.core.market import vast_like_trace
+
+    tr = vast_like_trace(seed=seed % 7, days=1)
+    M = NoisyPredictor(tr, "magdep_uniform", level, seed=seed).matrix(4)
+    assert np.all(M[..., 0] > 0)
+    assert np.all(M[..., 1] >= 0) and np.all(M[..., 1] <= 16)
+    np.testing.assert_allclose(M[:, 0, 0], tr.prices, atol=1e-9)

@@ -1,0 +1,133 @@
+"""Online policy selection (Alg. 2 / Thm. 2) + fast-sim parity + Thm. 1 trend."""
+import numpy as np
+import pytest
+
+from repro.configs.base import JobConfig, ThroughputConfig
+from repro.core import fast_sim
+from repro.core.job import normalize_utility
+from repro.core.market import vast_like_trace
+from repro.core.offline_opt import solve_offline
+from repro.core.policies import AHAP, AHAPParams
+from repro.core.policy_pool import baseline_specs, paper_pool, specs_to_arrays
+from repro.core.predictor import NoisyPredictor, PerfectPredictor
+from repro.core.selector import (
+    best_policy,
+    init_selector,
+    regret,
+    regret_bound,
+    select,
+    update,
+)
+from repro.core.simulator import simulate
+
+JOB = JobConfig(workload=80, deadline=10, n_min=1, n_max=12, value=120.0)
+TPUT = ThroughputConfig(mu1=0.9, mu2=0.95)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 2: regret bound
+# ---------------------------------------------------------------------------
+
+def test_regret_bound_random_utilities():
+    rng = np.random.default_rng(0)
+    M, K = 20, 400
+    st = init_selector(M, K)
+    means = rng.uniform(0.2, 0.8, M)
+    for _ in range(K):
+        u = np.clip(rng.normal(means, 0.1), 0, 1)
+        st = update(st, u)
+    assert regret(st) <= regret_bound(M, K), (regret(st), regret_bound(M, K))
+    assert best_policy(st) == int(np.argmax(means))
+
+
+def test_regret_bound_adversarial_switching():
+    """Alternating adversary: bound must still hold."""
+    M, K = 8, 300
+    st = init_selector(M, K)
+    for k in range(K):
+        u = np.zeros(M)
+        u[k % M] = 1.0
+        st = update(st, u)
+    assert regret(st) <= regret_bound(M, K) + 1e-9
+
+
+def test_selector_converges_to_best():
+    M, K = 10, 600
+    st = init_selector(M, K)
+    for _ in range(K):
+        u = np.full(M, 0.4)
+        u[3] = 0.6
+        st = update(st, u)
+    assert best_policy(st) == 3
+    assert st.weights[3] > 0.9
+
+
+def test_select_samples_from_weights():
+    st = init_selector(4, 10)
+    st.weights = np.array([0.0, 0.0, 1.0, 0.0])
+    rng = np.random.default_rng(0)
+    assert select(st, rng) == 2
+
+
+# ---------------------------------------------------------------------------
+# fast_sim parity with the reference simulator
+# ---------------------------------------------------------------------------
+
+def test_fast_sim_matches_reference():
+    pool = paper_pool(omegas=(1, 3, 5), sigmas=(0.3, 0.7)) + baseline_specs()
+    arrs = specs_to_arrays(pool)
+    for seed in range(2):
+        tr = vast_like_trace(seed=seed, days=1).window(0, 10)
+        pred = NoisyPredictor(tr, "fixed_uniform", 0.2, seed=seed).matrix(
+            fast_sim.W1MAX - 1
+        )
+        prices, avail, pm = fast_sim.prepare_inputs(tr, pred, JOB.deadline)
+        out = fast_sim.simulate_pool(
+            arrs, fast_sim.JobArrays.of(JOB), TPUT, prices, avail, pm
+        )
+        uj = np.asarray(out["utility"])
+        for i, spec in enumerate(pool):
+            r = simulate(spec.build(), JOB, TPUT, tr,
+                         pred if spec.kind == 0 else None)
+            assert abs(r.utility - uj[i]) < 1e-2, (spec.name, r.utility, uj[i])
+
+
+def test_pool_sizes_match_paper():
+    assert len(paper_pool()) == 112          # 105 AHAP + 7 AHANP
+    assert len(paper_pool(include_ahanp=False)) == 105
+    assert len(paper_pool(fixed_v=1, include_ahanp=False)) == 35  # 5 omegas x 7 sigmas
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1 (empirical): gap to OPT shrinks with prediction error
+# ---------------------------------------------------------------------------
+
+def test_theorem1_gap_decreases_with_accuracy():
+    gaps = {}
+    for level in [0.0, 0.6]:
+        g = []
+        for seed in range(6):
+            tr = vast_like_trace(seed=100 + seed, days=1).window(0, 10)
+            opt = solve_offline(JOB, TPUT, tr)
+            if level == 0.0:
+                pred = PerfectPredictor(tr).matrix(5)
+            else:
+                pred = NoisyPredictor(tr, "magdep_heavytail", level, seed=seed).matrix(5)
+            r = simulate(AHAP(AHAPParams(3, 1, 0.7)), JOB, TPUT, tr, pred)
+            g.append(opt.utility - r.utility)
+        gaps[level] = float(np.mean(g))
+    assert gaps[0.0] <= gaps[0.6] + 1e-6, gaps
+    assert gaps[0.0] >= -0.35  # OPT really is (near-)optimal
+
+
+def test_normalized_utilities_feed_selector():
+    tr = vast_like_trace(seed=0, days=1).window(0, 10)
+    pool = paper_pool(omegas=(2,), sigmas=(0.5,))
+    arrs = specs_to_arrays(pool)
+    pred = PerfectPredictor(tr).matrix(fast_sim.W1MAX - 1)
+    prices, avail, pm = fast_sim.prepare_inputs(tr, pred, JOB.deadline)
+    out = fast_sim.simulate_pool(
+        arrs, fast_sim.JobArrays.of(JOB), TPUT, prices, avail, pm
+    )
+    u = np.asarray(normalize_utility(JOB, out["utility"]))
+    assert np.all((u >= 0) & (u <= 1))

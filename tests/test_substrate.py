@@ -1,0 +1,204 @@
+"""Substrate tests: optimizer, schedules, checkpoint, data, sharding, losses."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    checkpoint_bytes,
+    restore,
+    save,
+    serialize,
+    deserialize,
+    transfer_seconds,
+)
+from repro.configs import get_config
+from repro.data import ShardedLMLoader, lm_batches
+from repro.optim import adamw, warmup_cosine
+from repro.sharding import (
+    Param,
+    axes_to_str,
+    resolve_spec,
+    split_params,
+    str_to_axes,
+    tree_shardings,
+)
+from repro.train.losses import cross_entropy
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def test_adamw_first_step_is_lr_sized():
+    p = [jnp.array([1.0, -2.0])]
+    g = [jnp.array([0.5, -0.5])]
+    st = adamw.init(p)
+    p2, st2 = adamw.update(g, st, p, lr=0.1)
+    # bias-corrected first step ~= lr * sign(g)
+    np.testing.assert_allclose(np.asarray(p2[0]), [0.9, -1.9], atol=1e-4)
+    assert int(st2.step) == 1
+
+
+def test_adamw_converges_quadratic():
+    p = [jnp.array(5.0)]
+    st = adamw.init(p)
+    for _ in range(300):
+        g = [2.0 * p[0]]
+        p, st = adamw.update(g, st, p, lr=0.05)
+    assert abs(float(p[0])) < 0.05
+
+
+def test_clip_by_global_norm():
+    t = [jnp.full((4,), 3.0)]
+    clipped, norm = adamw.clip_by_global_norm(t, 1.0)
+    assert float(norm) == pytest.approx(6.0)
+    assert float(adamw.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_warmup_cosine_shape():
+    lrs = [float(warmup_cosine(jnp.asarray(s), base_lr=1.0, warmup_steps=10,
+                               total_steps=100)) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0
+    assert max(lrs) <= 1.0
+    assert lrs[-1] < 0.2
+    assert lrs[-1] >= 0.1 * 0.99  # final_frac floor
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_exact():
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": {"c": jnp.ones((5,), jnp.bfloat16) * 1.5, "d": jnp.int32(7)},
+    }
+    blob = serialize(tree, {"k": 1})
+    back, meta = deserialize(blob, tree)
+    assert meta == {"k": 1}
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x, np.float32), np.asarray(y, np.float32))
+
+
+def test_checkpoint_file_roundtrip(tmp_path):
+    tree = {"w": jnp.ones((8, 8), jnp.bfloat16)}
+    p = str(tmp_path / "x.ckpt")
+    n = save(p, tree)
+    assert n > 0 and os.path.exists(p)
+    back, _ = restore(p, tree)
+    np.testing.assert_array_equal(
+        np.asarray(back["w"], np.float32), np.ones((8, 8), np.float32)
+    )
+
+
+def test_switching_cost_matches_paper_numbers():
+    """Paper Sec. II-A: LLaMA2-7B checkpoint = 0.58 s @ 200 Gbps RDMA and
+    1152 s @ 100 Mbps."""
+    cfg = get_config("llama2-7b")
+    assert transfer_seconds(cfg, 200e9) == pytest.approx(0.58, rel=0.15)
+    assert transfer_seconds(cfg, 100e6) == pytest.approx(1152.0, rel=0.15)
+    assert checkpoint_bytes(cfg) == pytest.approx(14.0e9, rel=0.15)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+def test_loader_deterministic_restart():
+    l1 = ShardedLMLoader(512, 4, 32, seed=1)
+    l2 = ShardedLMLoader(512, 4, 32, seed=1)
+    b7a = l1.batch_at(7)
+    b7b = l2.batch_at(7)  # fresh instance, same step -> same batch
+    np.testing.assert_array_equal(b7a["tokens"], b7b["tokens"])
+    assert not np.array_equal(l1.batch_at(8)["tokens"], b7a["tokens"])
+
+
+def test_loader_host_slice():
+    l = ShardedLMLoader(512, 8, 16, seed=0)
+    b = l.batch_at(0)
+    s0 = l.host_slice(b, 0, 4)["tokens"]
+    s3 = l.host_slice(b, 3, 4)["tokens"]
+    np.testing.assert_array_equal(s0, b["tokens"][:2])
+    np.testing.assert_array_equal(s3, b["tokens"][6:])
+
+
+def test_lm_batches_shapes():
+    it = lm_batches(100, 2, 16, num_batches=3)
+    bs = list(it)
+    assert len(bs) == 3
+    for b in bs:
+        assert b["tokens"].shape == (2, 16)
+        assert b["tokens"].min() >= 0 and b["tokens"].max() < 100
+
+
+# ---------------------------------------------------------------------------
+# Sharding
+# ---------------------------------------------------------------------------
+
+def test_resolve_spec_divisibility_fallback():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = {"heads": ("model",), "fsdp": ("data",), "batch": ("pod", "data")}
+    # all extents are 1 -> everything resolves (divides trivially)
+    spec = resolve_spec(("fsdp", "heads"), (64, 28), mesh, rules)
+    assert spec == jax.sharding.PartitionSpec("data", "model")
+
+
+def test_resolve_spec_drops_nondividing():
+    import jax.sharding as js
+
+    devs = np.array(jax.devices() * 1)  # 1 device: fake a bigger mesh check via math
+    # use abstract mesh via jax.make_mesh on 1 device won't give 16; test the
+    # arithmetic with a mesh of shape (1,1) but simulated sizes via rules:
+    # instead directly exercise the helper with a real multi-extent mesh is
+    # impossible on 1 CPU device, so check the no-reuse rule:
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    spec = resolve_spec(("batch", "fsdp"), (8, 8), mesh,
+                        {"batch": ("data",), "fsdp": ("data",)})
+    # 'data' must not be used twice
+    assert spec[0] == "data" and spec[1] is None
+
+
+def test_axes_string_roundtrip():
+    # named axes roundtrip exactly
+    for axes in [("vocab", "fsdp"), ("layers", None, "tensor"), (None, "model")]:
+        assert str_to_axes(axes_to_str(axes)) == tuple(axes)
+    # all-None collapses to () — both mean "replicate" (tree_shardings pads)
+    assert str_to_axes(axes_to_str(())) == ()
+    assert str_to_axes(axes_to_str((None,))) == ()
+
+
+def test_param_survives_eval_shape():
+    def init():
+        return {"w": Param(jnp.zeros((4, 8)), ("fsdp", "tensor"))}
+
+    abs_tree = jax.eval_shape(init)
+    vals, axes = split_params(abs_tree)
+    assert vals["w"].shape == (4, 8)
+    assert axes["w"] == "fsdp,tensor"
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def test_cross_entropy_perfect_prediction():
+    logits = jnp.full((1, 3, 5), -20.0).at[0, jnp.arange(3), jnp.array([1, 2, 3])].set(20.0)
+    loss = cross_entropy(logits, jnp.array([[1, 2, 3]]))
+    assert float(loss) < 1e-3
+
+
+def test_cross_entropy_masking():
+    logits = jnp.zeros((1, 4, 5))
+    targets = jnp.array([[0, 1, 2, 3]])
+    mask = jnp.array([[True, True, False, False]])
+    full = cross_entropy(logits, targets)
+    masked = cross_entropy(logits, targets, mask)
+    assert float(full) == pytest.approx(float(masked))  # uniform logits
+    # degenerate all-masked -> finite
+    none = cross_entropy(logits, targets, jnp.zeros_like(mask))
+    assert np.isfinite(float(none))
