@@ -1,0 +1,147 @@
+"""Pool-simulator throughput: the repo's perf trajectory for the hottest path.
+
+Measures slots * policies * jobs / sec over the paper's mixed workload
+(112-policy pool + 3 baselines, Fig. 9 job distribution) for three paths:
+
+  seed         the monolithic simulator (every lane evaluates every decision
+               rule each slot, window DP included, gather-formulated DP) —
+               the state of the repo before the kind-partitioned refactor.
+  partitioned  fast_sim.simulate_pool: AHAP lanes on the DP-bearing scan
+               (shifted-slice XLA DP), AHANP/OD/MSU/UP lanes on the cheap
+               scan, scattered back to pool order.
+  pallas       the partitioned path with the fused Pallas window-DP kernel
+               (interpret mode on CPU, compiled on TPU).
+
+Writes BENCH_pool_sim.json (machine-readable rows + speedups) so successive
+PRs can track the trajectory; also returned as benchmark rows for run.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import PAPER_JOB, PAPER_TPUT, Row, job_stream, paper_market
+
+N_JOBS = 8
+DEADLINE = 10
+REPEAT = 5
+
+_JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                          "BENCH_pool_sim.json")
+
+
+def _workload(n_jobs: int):
+    """Fig. 9-style workload: random jobs on random market windows."""
+    from repro.core import fast_sim
+    from repro.core.predictor import NoisyPredictor
+
+    rng = np.random.default_rng(7)
+    jobs = list(job_stream(rng, n_jobs, deadline=DEADLINE))
+    market = paper_market(seed=13, days=4)
+    traces = [
+        market.window(int(rng.integers(0, len(market) - DEADLINE - 1)), DEADLINE + 1)
+        for _ in range(n_jobs)
+    ]
+    prices = np.stack([t.prices[:DEADLINE] for t in traces]).astype(np.float32)
+    avail = np.stack([t.avail[:DEADLINE] for t in traces]).astype(np.int64)
+    preds = np.stack([
+        NoisyPredictor(t, "fixed_uniform", 0.2, seed=i).matrix(
+            fast_sim.W1MAX - 1
+        )[:DEADLINE]
+        for i, t in enumerate(traces)
+    ]).astype(np.float32)
+    return jobs, prices, avail, preds
+
+
+def _bench(fn, repeat: int = REPEAT) -> float:
+    """Seconds per call at steady state (first call pays compilation)."""
+    jax.block_until_ready(fn()["utility"])
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        jax.block_until_ready(fn()["utility"])
+    return (time.perf_counter() - t0) / repeat
+
+
+def run():
+    from repro.core import fast_sim
+    from repro.core.policy_pool import baseline_specs, paper_pool, specs_to_arrays
+
+    pool = paper_pool() + baseline_specs()   # 112 + 3: mixed AHAP/AHANP/baseline
+    arrs = specs_to_arrays(pool)
+    jobs, prices, avail, preds = _workload(N_JOBS)
+    stacked = fast_sim.stack_jobs(jobs)
+    n_pol = len(pool)
+    work_units = DEADLINE * n_pol * N_JOBS   # slots * policies * jobs per call
+
+    on_tpu = jax.default_backend() == "tpu"
+    pallas_backend = "pallas" if on_tpu else "pallas-interpret"
+
+    kind, omega = jnp.asarray(arrs["kind"]), jnp.asarray(arrs["omega"])
+    v_, sigma = jnp.asarray(arrs["v"]), jnp.asarray(arrs["sigma"])
+    rho = jnp.asarray(arrs["rho"])
+
+    @jax.jit
+    def _seed_jobs(jobs_, pr_, av_, pm_):
+        # the seed simulate_pool_jobs: double vmap of the monolithic lane
+        # (every lane pays the window DP, gather-formulated)
+        def per_job(jr, p_, a_, m_):
+            fn = lambda k, w, vv, s, r: fast_sim.simulate_one(
+                k, w, vv, s, jr, PAPER_TPUT, p_, a_, m_, rho=r,
+                backend="xla-gather",
+            )
+            return jax.vmap(fn)(kind, omega, v_, sigma, rho)
+
+        return jax.vmap(per_job)(jobs_, pr_, av_, pm_)
+
+    def seed_path():
+        return _seed_jobs(stacked, prices, avail, preds)
+
+    paths = {
+        "seed": seed_path,
+        "partitioned": lambda: fast_sim.simulate_pool_jobs(
+            arrs, stacked, PAPER_TPUT, prices, avail, preds, backend="xla"
+        ),
+        "pallas": lambda: fast_sim.simulate_pool_jobs(
+            arrs, stacked, PAPER_TPUT, prices, avail, preds,
+            backend=pallas_backend,
+        ),
+    }
+
+    secs, rows = {}, []
+    for name, fn in paths.items():
+        secs[name] = _bench(fn)
+        rate = work_units / secs[name]
+        rows.append((f"pool_sim_{name}", secs[name] * 1e6, rate))
+
+    speedup = secs["seed"] / secs["partitioned"]
+    rows.append(("pool_sim_partitioned_speedup", 0.0, speedup))
+    rows.append((
+        "pool_sim_pallas_speedup", 0.0, secs["seed"] / secs["pallas"]
+    ))
+
+    payload = {
+        "workload": {
+            "policies": n_pol, "jobs": N_JOBS, "slots": DEADLINE,
+            "pool": "paper_pool(112) + baselines(3)",
+        },
+        "backend": jax.default_backend(),
+        "pallas_mode": pallas_backend,
+        "rows": [
+            {"name": n, "us_per_call": us, "derived": d} for n, us, d in rows
+        ],
+        "speedup_partitioned_vs_seed": speedup,
+    }
+    with open(_JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run())

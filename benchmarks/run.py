@@ -1,11 +1,16 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Run:
-    PYTHONPATH=src python -m benchmarks.run [--only fig5,fig9]
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,fig9] [--json out.json]
+
+``--json <path>`` additionally captures every module's rows as
+machine-readable ``[{module, name, us_per_call, derived}, ...]`` — the
+mechanism behind the repo's ``BENCH_*.json`` perf-trajectory files.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -26,17 +31,21 @@ MODULES = [
     "predictor_value",
     "theorem2",
     "kernels_bench",
+    "pool_sim_bench",
 ]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma-separated module prefixes")
+    ap.add_argument("--json", default="",
+                    help="also write all rows to this path as JSON")
     args = ap.parse_args()
     sel = [s for s in args.only.split(",") if s]
 
     print("name,us_per_call,derived")
     failures = 0
+    json_rows = []
     for mod_name in MODULES:
         if sel and not any(mod_name.startswith(s) for s in sel):
             continue
@@ -46,11 +55,23 @@ def main() -> None:
             rows = mod.run()
             for name, us, derived in rows:
                 print(f"{name},{us:.1f},{derived:.6g}")
+                json_rows.append({
+                    "module": mod_name, "name": name,
+                    "us_per_call": float(us), "derived": float(derived),
+                })
         except Exception:
             failures += 1
             print(f"{mod_name},0.0,nan  # FAILED", flush=True)
+            json_rows.append({
+                "module": mod_name, "name": f"{mod_name}__FAILED",
+                "us_per_call": 0.0, "derived": None,  # null: strict-JSON safe
+            })
             traceback.print_exc(file=sys.stderr)
         print(f"# {mod_name} done in {time.time()-t0:.1f}s", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(json_rows, f, indent=2)
+        print(f"# wrote {len(json_rows)} rows to {args.json}", flush=True)
     if failures:
         raise SystemExit(1)
 

@@ -18,13 +18,20 @@ import io
 import json
 import os
 import tempfile
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional: zstd is the preferred codec but not a hard dependency
+    import zstandard
+except ModuleNotFoundError:  # pragma: no cover - env-dependent
+    zstandard = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
 
 def _pack_leaf(x) -> dict:
@@ -53,11 +60,21 @@ def serialize(tree, meta: Optional[Dict[str, Any]] = None) -> bytes:
         "leaves": [_pack_leaf(l) for l in leaves],
     }
     raw = msgpack.packb(payload, use_bin_type=True)
-    return zstandard.ZstdCompressor(level=3).compress(raw)
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, 6)
 
 
 def deserialize(blob: bytes, tree_like) -> Tuple[Any, Dict[str, Any]]:
-    raw = zstandard.ZstdDecompressor().decompress(blob)
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise ModuleNotFoundError(
+                "checkpoint was written with zstd but the 'zstandard' package "
+                "is not installed (zlib-written checkpoints need no extra deps)"
+            )
+        raw = zstandard.ZstdDecompressor().decompress(blob)
+    else:
+        raw = zlib.decompress(blob)
     payload = msgpack.unpackb(raw, raw=False)
     leaves = [_unpack_leaf(d) for d in payload["leaves"]]
     treedef = jax.tree_util.tree_structure(tree_like)

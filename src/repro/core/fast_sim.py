@@ -3,12 +3,18 @@
 experiments (1000s of jobs x 112 policies) take seconds instead of hours.
 
 Semantics mirror repro.core.simulator.simulate exactly (pinned by
-tests/test_fast_sim.py): same feasibility pipeline, same mu/billing/
+tests/test_selector_fastsim.py): same feasibility pipeline, same mu/billing/
 termination rules, same rounding (jnp.round == python round, half-to-even).
 
-Policies are encoded as arrays (see policy_pool.specs_to_arrays); at every
-slot all five decision rules are evaluated and the right one is selected by
-kind — the wasted lanes are trivially cheap next to the window DP.
+Policies are encoded as arrays (see policy_pool.specs_to_arrays). The pool
+entry points partition the lanes by ``kind``: AHAP lanes run the DP-bearing
+scan (``solve_window`` every slot, with a selectable DP backend — see
+window_opt.BACKENDS), all other kinds (AHANP/OD/MSU/UP) run a cheap scan
+that never touches the window DP, and the results are scattered back to the
+original pool order — the public API and semantics are unchanged.
+``simulate_one`` keeps the seed's monolithic all-kinds step (every decision
+rule evaluated at every slot, DP included) and doubles as the benchmark
+baseline via ``simulate_pool_monolithic``.
 """
 from __future__ import annotations
 
@@ -21,6 +27,7 @@ import numpy as np
 
 from repro.configs.base import JobConfig, ThroughputConfig
 from repro.core.job import value_fn
+from repro.core.policy_pool import KIND_AHAP
 from repro.core.window_opt import solve_window
 
 W1MAX = 6   # max omega + 1
@@ -81,179 +88,182 @@ def _sim_clip(n_o, n_s, avail, j: JobArrays):
     return n_o, n_s
 
 
-def simulate_one(
-    kind, omega, v, sigma,                 # policy encoding (scalars)
-    j: JobArrays,
-    tput: ThroughputConfig,
-    prices, avail, pred,                   # (dmax,), (dmax,), (dmax, W1MAX, 2)
-    rho=jnp.float32(1.0),                  # Robust-AHAP availability discount
-):
-    dmax = prices.shape[0]
-    jcfg = _job_cfg(j)
-    alpha, beta = tput.alpha, tput.beta
-    mu1, mu2 = tput.mu1, tput.mu2
+# ---------------------------------------------------------------------------
+# Decision rules — shared between the monolithic and kind-partitioned scans
+# ---------------------------------------------------------------------------
 
-    def step(carry, xs):
-        z, n_prev, cost, done, T, plans, prev_avail, t = carry
-        price, av, pr = xs  # scalar, scalar, (W1MAX, 2)
-        active = (t < j.deadline) & ~done
+def _ahap_precompute(j: JobArrays, omega, sigma, rho, ts, pred):
+    """Scan-invariant AHAP scaffolding, vectorized over a leading slot axis
+    (or scalar ts/per-slot pred in the monolithic per-step path).
 
-        # Robust-AHAP: discount *predicted* availability (j >= 1 only)
-        disc_av = jnp.floor(rho * pr[:, 1]).at[0].set(pr[0, 1])
-        pr = jnp.stack([pr[:, 0], disc_av], axis=-1)
+    Robust-AHAP discounts *predicted* availability (entries j >= 1 only)."""
+    disc_av = jnp.floor(rho * pred[..., 1]).at[..., 0].set(pred[..., 0, 1])
+    pr = jnp.stack([pred[..., 0], disc_av], axis=-1)
+    in_w = jnp.arange(W1MAX) <= omega
+    z_exp_end = j.workload / j.deadline * jnp.minimum(
+        (ts + 1 + omega).astype(jnp.float32), j.deadline.astype(jnp.float32)
+    )
+    thr_s = jnp.where(
+        in_w
+        & (pr[..., 0] <= sigma * j.p_o)
+        & (pr[..., 1] >= j.n_min),
+        jnp.minimum(pr[..., 1].astype(jnp.int32), j.n_max),
+        0,
+    )
+    eff_slots = jnp.minimum(j.deadline - ts, omega + 1)
+    return pr, thr_s, z_exp_end, eff_slots
 
-        # ---------------- AHAP ----------------
-        jj = jnp.arange(W1MAX)
-        in_w = jj <= omega
-        z_exp_end = j.workload / j.deadline * jnp.minimum(
-            (t + 1 + omega).astype(jnp.float32), j.deadline.astype(jnp.float32)
-        )
-        ahead = z >= z_exp_end
-        thr_s = jnp.where(
-            in_w
-            & (pr[:, 0] <= sigma * j.p_o)
-            & (pr[:, 1] >= j.n_min),
-            jnp.minimum(pr[:, 1].astype(jnp.int32), j.n_max),
+
+def _ahap_rule(jcfg, j: JobArrays, tput, v, backend, z, t, price, av, plans,
+               pr_t, thr_s_t, z_exp_end_t, eff_slots_t):
+    """AHAP (Alg. 1): CHC window solve when behind, threshold plan when
+    ahead, v-step plan averaging. Returns (n_o, n_s, new_plans)."""
+    ahead = z >= z_exp_end_t
+    chc_o, chc_s, _ = solve_window(
+        jcfg, tput, z, eff_slots_t, pr_t[:, 0], pr_t[:, 1].astype(jnp.int32),
+        j.p_o, table_n=NTABLE, backend=backend,
+    )
+    plan = jnp.where(
+        ahead,
+        jnp.stack([jnp.zeros(W1MAX, jnp.int32), thr_s_t], axis=-1),
+        jnp.stack([chc_o, chc_s], axis=-1),
+    ).astype(jnp.float32)  # (W1MAX, 2)
+    plans = jnp.concatenate([plan[None], plans[:-1]], axis=0)  # (VMAX, W1MAX, 2)
+    kk = jnp.arange(VMAX)
+    # a plan only exists if it was actually made (k <= t): matches the
+    # python policy's growing history, not zero-padded averaging
+    valid = ((kk < v) & (kk <= t))[:, None].astype(jnp.float32)
+    diag = plans[kk, jnp.minimum(kk, W1MAX - 1)]  # (VMAX, 2)
+    cnt = jnp.maximum(valid.sum(), 1.0)
+    avg = (diag * valid).sum(axis=0) / cnt
+    # round-half-up, matching the python reference exactly
+    ah_o = jnp.floor(avg[0] + 0.5).astype(jnp.int32)
+    ah_s = jnp.minimum(jnp.floor(avg[1] + 0.5).astype(jnp.int32), av)
+    ah_zero = (ah_o + ah_s) == 0
+    ah_o_f, ah_s_f = _feasible(ah_o, ah_s, price, av, j)
+    ah_o = jnp.where(ah_zero, 0, ah_o_f)
+    ah_s = jnp.where(ah_zero, 0, ah_s_f)
+    return ah_o, ah_s, plans
+
+
+def _ahanp_rule(j: JobArrays, sigma, z, t, price, av, n_prev, prev_avail):
+    """AHANP (Alg. 3): reactive indicators z_hat / p_hat / n_hat."""
+    z_exp_prev = j.workload / j.deadline * t.astype(jnp.float32)
+    z_hat = jnp.where(z_exp_prev > 0, z / z_exp_prev, 1.0)
+    p_hat = price / (sigma * j.p_o)
+    n_hat = jnp.where(
+        av == 0, 0.0,
+        jnp.where(prev_avail == 0, jnp.inf,
+                  av / jnp.maximum(prev_avail, 1).astype(jnp.float32)),
+    )
+    ahead1 = z_hat >= 1.0
+    n_an = jnp.where(
+        ahead1,
+        jnp.where(
+            av == 0,
             0,
-        )
-        eff_slots = jnp.minimum(j.deadline - t, omega + 1)
-        chc_o, chc_s, _ = solve_window(
-            jcfg, tput, z, eff_slots, pr[:, 0], pr[:, 1].astype(jnp.int32),
-            j.p_o, table_n=NTABLE,
-        )
-        plan = jnp.where(
-            ahead,
-            jnp.stack([jnp.zeros(W1MAX, jnp.int32), thr_s], axis=-1),
-            jnp.stack([chc_o, chc_s], axis=-1),
-        ).astype(jnp.float32)  # (W1MAX, 2)
-        plans = jnp.concatenate([plan[None], plans[:-1]], axis=0)  # (VMAX, W1MAX, 2)
-        kk = jnp.arange(VMAX)
-        # a plan only exists if it was actually made (k <= t): matches the
-        # python policy's growing history, not zero-padded averaging
-        valid = ((kk < v) & (kk <= t))[:, None].astype(jnp.float32)
-        diag = plans[kk, jnp.minimum(kk, W1MAX - 1)]  # (VMAX, 2)
-        cnt = jnp.maximum(valid.sum(), 1.0)
-        avg = (diag * valid).sum(axis=0) / cnt
-        # round-half-up, matching the python reference exactly
-        ah_o = jnp.floor(avg[0] + 0.5).astype(jnp.int32)
-        ah_s = jnp.minimum(jnp.floor(avg[1] + 0.5).astype(jnp.int32), av)
-        ah_zero = (ah_o + ah_s) == 0
-        ah_o_f, ah_s_f = _feasible(ah_o, ah_s, price, av, j)
-        ah_o = jnp.where(ah_zero, 0, ah_o_f)
-        ah_s = jnp.where(ah_zero, 0, ah_s_f)
-
-        # ---------------- AHANP ----------------
-        z_exp_prev = j.workload / j.deadline * t.astype(jnp.float32)
-        z_hat = jnp.where(z_exp_prev > 0, z / z_exp_prev, 1.0)
-        p_hat = price / (sigma * j.p_o)
-        n_hat_inf = (prev_avail == 0) & (av > 0)
-        n_hat = jnp.where(
-            av == 0, 0.0,
-            jnp.where(prev_avail == 0, jnp.inf, av / jnp.maximum(prev_avail, 1).astype(jnp.float32)),
-        )
-        ahead1 = z_hat >= 1.0
-        n_an = jnp.where(
-            ahead1,
             jnp.where(
-                av == 0,
-                0,
+                n_hat <= 0.5,
+                jnp.maximum(n_prev // 2, j.n_min),
                 jnp.where(
-                    n_hat <= 0.5,
-                    jnp.maximum(n_prev // 2, j.n_min),
-                    jnp.where(
-                        n_hat <= 1.0,
-                        n_prev,
-                        jnp.where(p_hat > 1.0, n_prev, jnp.maximum(n_prev, av)),
-                    ),
+                    n_hat <= 1.0,
+                    n_prev,
+                    jnp.where(p_hat > 1.0, n_prev, jnp.maximum(n_prev, av)),
                 ),
             ),
-            jnp.maximum(2 * n_prev, j.n_min),
-        )
-        an_zero = n_an <= 0
-        n_an_c = jnp.clip(n_an, j.n_min, j.n_max)
-        an_s = jnp.minimum(av, n_an_c)
-        an_o_f, an_s_f = _feasible(n_an_c - an_s, an_s, price, av, j)
-        an_o = jnp.where(an_zero, 0, an_o_f)
-        an_s = jnp.where(an_zero, 0, an_s_f)
-
-        # ---------------- OD-Only ----------------
-        remaining = jnp.maximum(j.workload - z, 0.0)
-        slots_left = (j.deadline - t).astype(jnp.float32)
-        od_need = jnp.ceil(remaining / jnp.maximum(slots_left, 1.0) / alpha).astype(jnp.int32)
-        od_zero = (remaining <= 0) | (slots_left <= 0)
-        od_o_f, od_s_f = _feasible(jnp.clip(od_need, j.n_min, j.n_max), 0, price, av, j)
-        od_o = jnp.where(od_zero, 0, od_o_f)
-        od_s = jnp.where(od_zero, 0, od_s_f)
-
-        # ---------------- MSU ----------------
-        ms_s = jnp.minimum(av, j.n_max)
-        h_max = alpha * j.n_max.astype(jnp.float32) + beta
-        panic = remaining > h_max * jnp.maximum(slots_left - 1.0, 0.0)
-        ms_o = jnp.where(
-            panic,
-            jnp.maximum(jnp.minimum(od_need, j.n_max) - ms_s, 0),
-            0,
-        )
-        ms_zero = (remaining <= 0) | ((ms_s + ms_o) == 0)
-        ms_o_f, ms_s_f = _feasible(ms_o, ms_s, price, av, j)
-        ms_o = jnp.where(ms_zero, 0, ms_o_f)
-        ms_s = jnp.where(ms_zero, 0, ms_s_f)
-
-        # ---------------- UP ----------------
-        rate = j.workload / j.deadline.astype(jnp.float32)
-        deficit = jnp.maximum(rate * t.astype(jnp.float32) - z, 0.0)
-        up_need = jnp.clip(
-            jnp.ceil((rate + deficit) / alpha).astype(jnp.int32), j.n_min, j.n_max
-        )
-        up_s = jnp.minimum(av, up_need)
-        up_o = jnp.where(deficit > 0, up_need - up_s, 0)
-        up_zero = (remaining <= 0) | ((up_s + up_o) == 0)
-        up_o_f, up_s_f = _feasible(up_o, up_s, price, av, j)
-        up_o = jnp.where(up_zero, 0, up_o_f)
-        up_s = jnp.where(up_zero, 0, up_s_f)
-
-        # ---------------- select & execute ----------------
-        n_o = jnp.select(
-            [kind == 0, kind == 1, kind == 2, kind == 3, kind == 4],
-            [ah_o, an_o, od_o, ms_o, up_o],
-        )
-        n_s = jnp.select(
-            [kind == 0, kind == 1, kind == 2, kind == 3, kind == 4],
-            [ah_s, an_s, od_s, ms_s, up_s],
-        )
-        n_o, n_s = _sim_clip(n_o, n_s, av, j)
-        n_o = jnp.where(active, n_o, 0)
-        n_s = jnp.where(active, n_s, 0)
-        n = n_o + n_s
-
-        mu = jnp.where(
-            n > n_prev, mu1, jnp.where(n < n_prev, mu2, 1.0)
-        )
-        mu = jnp.where((n == 0) & (n_prev == 0), 1.0, mu)
-        work = mu * jnp.where(n > 0, alpha * n.astype(jnp.float32) + beta, 0.0)
-        will_done = active & (work > 0) & (z + work >= j.workload)
-        frac = jnp.where(work > 0, (j.workload - z) / jnp.maximum(work, 1e-9), 0.0)
-        T = jnp.where(will_done, t.astype(jnp.float32) + frac, T)
-        cost = cost + jnp.where(
-            active, n_s.astype(jnp.float32) * price + n_o.astype(jnp.float32) * j.p_o, 0.0
-        )
-        z = jnp.minimum(z + jnp.where(active, work, 0.0), j.workload)
-        n_prev = jnp.where(active, n, n_prev)
-        done = done | will_done
-        prev_avail = jnp.where(active, av, prev_avail)
-        return (z, n_prev, cost, done, T, plans, prev_avail, t + 1), (n_o, n_s)
-
-    init = (
-        jnp.float32(0.0), jnp.int32(0), jnp.float32(0.0),
-        jnp.bool_(False), jnp.float32(0.0),
-        jnp.zeros((VMAX, W1MAX, 2), jnp.float32), avail[0].astype(jnp.int32),
-        jnp.int32(0),
+        ),
+        jnp.maximum(2 * n_prev, j.n_min),
     )
-    (z, n_prev, cost, done, T, _, _, _), (no_hist, ns_hist) = jax.lax.scan(
-        step, init, (prices, avail.astype(jnp.int32), pred)
-    )
+    an_zero = n_an <= 0
+    n_an_c = jnp.clip(n_an, j.n_min, j.n_max)
+    an_s = jnp.minimum(av, n_an_c)
+    an_o_f, an_s_f = _feasible(n_an_c - an_s, an_s, price, av, j)
+    an_o = jnp.where(an_zero, 0, an_o_f)
+    an_s = jnp.where(an_zero, 0, an_s_f)
+    return an_o, an_s
 
-    h_max = alpha * j.n_max.astype(jnp.float32) + beta
+
+def _od_rule(j: JobArrays, tput, z, t, price, av):
+    """OD-Only: constant on-demand sized to finish exactly at the deadline."""
+    remaining = jnp.maximum(j.workload - z, 0.0)
+    slots_left = (j.deadline - t).astype(jnp.float32)
+    od_need = jnp.ceil(
+        remaining / jnp.maximum(slots_left, 1.0) / tput.alpha
+    ).astype(jnp.int32)
+    od_zero = (remaining <= 0) | (slots_left <= 0)
+    od_o_f, od_s_f = _feasible(jnp.clip(od_need, j.n_min, j.n_max), 0, price, av, j)
+    od_o = jnp.where(od_zero, 0, od_o_f)
+    od_s = jnp.where(od_zero, 0, od_s_f)
+    return od_o, od_s
+
+
+def _msu_rule(j: JobArrays, tput, z, t, price, av):
+    """MSU: all spot; on-demand only once N^max can no longer finish."""
+    remaining = jnp.maximum(j.workload - z, 0.0)
+    slots_left = (j.deadline - t).astype(jnp.float32)
+    od_need = jnp.ceil(
+        remaining / jnp.maximum(slots_left, 1.0) / tput.alpha
+    ).astype(jnp.int32)
+    ms_s = jnp.minimum(av, j.n_max)
+    h_max = tput.alpha * j.n_max.astype(jnp.float32) + tput.beta
+    panic = remaining > h_max * jnp.maximum(slots_left - 1.0, 0.0)
+    ms_o = jnp.where(
+        panic,
+        jnp.maximum(jnp.minimum(od_need, j.n_max) - ms_s, 0),
+        0,
+    )
+    ms_zero = (remaining <= 0) | ((ms_s + ms_o) == 0)
+    ms_o_f, ms_s_f = _feasible(ms_o, ms_s, price, av, j)
+    ms_o = jnp.where(ms_zero, 0, ms_o_f)
+    ms_s = jnp.where(ms_zero, 0, ms_s_f)
+    return ms_o, ms_s
+
+
+def _up_rule(j: JobArrays, tput, z, t, price, av):
+    """UP (Wu et al. [16]): track the L/d line, spot-first."""
+    remaining = jnp.maximum(j.workload - z, 0.0)
+    rate = j.workload / j.deadline.astype(jnp.float32)
+    deficit = jnp.maximum(rate * t.astype(jnp.float32) - z, 0.0)
+    up_need = jnp.clip(
+        jnp.ceil((rate + deficit) / tput.alpha).astype(jnp.int32), j.n_min, j.n_max
+    )
+    up_s = jnp.minimum(av, up_need)
+    up_o = jnp.where(deficit > 0, up_need - up_s, 0)
+    up_zero = (remaining <= 0) | ((up_s + up_o) == 0)
+    up_o_f, up_s_f = _feasible(up_o, up_s, price, av, j)
+    up_o = jnp.where(up_zero, 0, up_o_f)
+    up_s = jnp.where(up_zero, 0, up_s_f)
+    return up_o, up_s
+
+
+def _execute(j: JobArrays, tput, z, n_prev, cost, done, T, t, n_o, n_s,
+             price, av):
+    """Mirror of simulate()'s slot execution: hard clip, mu, billing,
+    fractional completion. Returns the updated exec state + (n_o, n_s, active)."""
+    active = (t < j.deadline) & ~done
+    n_o, n_s = _sim_clip(n_o, n_s, av, j)
+    n_o = jnp.where(active, n_o, 0)
+    n_s = jnp.where(active, n_s, 0)
+    n = n_o + n_s
+
+    mu = jnp.where(n > n_prev, tput.mu1, jnp.where(n < n_prev, tput.mu2, 1.0))
+    mu = jnp.where((n == 0) & (n_prev == 0), 1.0, mu)
+    work = mu * jnp.where(n > 0, tput.alpha * n.astype(jnp.float32) + tput.beta, 0.0)
+    will_done = active & (work > 0) & (z + work >= j.workload)
+    frac = jnp.where(work > 0, (j.workload - z) / jnp.maximum(work, 1e-9), 0.0)
+    T = jnp.where(will_done, t.astype(jnp.float32) + frac, T)
+    cost = cost + jnp.where(
+        active, n_s.astype(jnp.float32) * price + n_o.astype(jnp.float32) * j.p_o, 0.0
+    )
+    z = jnp.minimum(z + jnp.where(active, work, 0.0), j.workload)
+    n_prev = jnp.where(active, n, n_prev)
+    done = done | will_done
+    return z, n_prev, cost, done, T, n_o, n_s, active
+
+
+def _finalize(jcfg, j: JobArrays, tput, z, cost, done, T, no_hist, ns_hist):
+    """Termination configuration (N^max on-demand past the deadline)."""
+    h_max = tput.alpha * j.n_max.astype(jnp.float32) + tput.beta
     dt = jnp.maximum(j.workload - z, 0.0) / h_max
     T_final = jnp.where(done, T, j.deadline.astype(jnp.float32) + dt)
     cost_final = cost + jnp.where(done, 0.0, j.p_o * j.n_max.astype(jnp.float32) * dt)
@@ -270,35 +280,278 @@ def simulate_one(
     }
 
 
+# ---------------------------------------------------------------------------
+# Monolithic single-lane scan (seed path; benchmark baseline)
+# ---------------------------------------------------------------------------
+
+def simulate_one(
+    kind, omega, v, sigma,                 # policy encoding (scalars)
+    j: JobArrays,
+    tput: ThroughputConfig,
+    prices, avail, pred,                   # (dmax,), (dmax,), (dmax, W1MAX, 2)
+    rho=jnp.float32(1.0),                  # Robust-AHAP availability discount
+    backend: str = "xla",                  # window-DP backend (static)
+):
+    """All five decision rules at every slot, selected by ``kind`` — the
+    seed formulation. The pool entry points below partition by kind instead
+    and only fall back to this for the monolithic baseline."""
+    dmax = prices.shape[0]
+    jcfg = _job_cfg(j)
+
+    def step(carry, xs):
+        z, n_prev, cost, done, T, plans, prev_avail = carry
+        price, av, pr_raw, t = xs  # scalar, scalar, (W1MAX, 2), scalar
+
+        pr, thr_s, z_exp_end, eff_slots = _ahap_precompute(
+            j, omega, sigma, rho, t, pr_raw
+        )
+        ah_o, ah_s, plans = _ahap_rule(
+            jcfg, j, tput, v, backend, z, t, price, av, plans,
+            pr, thr_s, z_exp_end, eff_slots,
+        )
+        an_o, an_s = _ahanp_rule(j, sigma, z, t, price, av, n_prev, prev_avail)
+        od_o, od_s = _od_rule(j, tput, z, t, price, av)
+        ms_o, ms_s = _msu_rule(j, tput, z, t, price, av)
+        up_o, up_s = _up_rule(j, tput, z, t, price, av)
+
+        n_o = jnp.select(
+            [kind == 0, kind == 1, kind == 2, kind == 3, kind == 4],
+            [ah_o, an_o, od_o, ms_o, up_o],
+        )
+        n_s = jnp.select(
+            [kind == 0, kind == 1, kind == 2, kind == 3, kind == 4],
+            [ah_s, an_s, od_s, ms_s, up_s],
+        )
+        z, n_prev, cost, done, T, n_o, n_s, active = _execute(
+            j, tput, z, n_prev, cost, done, T, t, n_o, n_s, price, av
+        )
+        prev_avail = jnp.where(active, av, prev_avail)
+        return (z, n_prev, cost, done, T, plans, prev_avail), (n_o, n_s)
+
+    init = (
+        jnp.float32(0.0), jnp.int32(0), jnp.float32(0.0),
+        jnp.bool_(False), jnp.float32(0.0),
+        jnp.zeros((VMAX, W1MAX, 2), jnp.float32), avail[0].astype(jnp.int32),
+    )
+    (z, _, cost, done, T, _, _), (no_hist, ns_hist) = jax.lax.scan(
+        step, init,
+        (prices, avail.astype(jnp.int32), pred, jnp.arange(dmax)),
+    )
+    return _finalize(jcfg, j, tput, z, cost, done, T, no_hist, ns_hist)
+
+
+# ---------------------------------------------------------------------------
+# Kind-partitioned lane scans (the hot path)
+# ---------------------------------------------------------------------------
+
+def _simulate_one_ahap(omega, v, sigma, rho, j: JobArrays, tput,
+                       prices, avail, pred, backend: str):
+    """AHAP-only lane: the sole scan that pays the window DP. All
+    scan-invariant scaffolding (rho-discounted forecasts, threshold plans,
+    schedule line, effective window lengths) is hoisted out of the step."""
+    dmax = prices.shape[0]
+    jcfg = _job_cfg(j)
+    ts = jnp.arange(dmax)
+    pr, thr_s, z_exp_end, eff_slots = _ahap_precompute(
+        j, omega, sigma, rho, ts, pred
+    )
+
+    def step(carry, xs):
+        z, n_prev, cost, done, T, plans = carry
+        price, av, pr_t, thr_s_t, zee_t, eff_t, t = xs
+        n_o, n_s, plans = _ahap_rule(
+            jcfg, j, tput, v, backend, z, t, price, av, plans,
+            pr_t, thr_s_t, zee_t, eff_t,
+        )
+        z, n_prev, cost, done, T, n_o, n_s, _ = _execute(
+            j, tput, z, n_prev, cost, done, T, t, n_o, n_s, price, av
+        )
+        return (z, n_prev, cost, done, T, plans), (n_o, n_s)
+
+    init = (
+        jnp.float32(0.0), jnp.int32(0), jnp.float32(0.0),
+        jnp.bool_(False), jnp.float32(0.0),
+        jnp.zeros((VMAX, W1MAX, 2), jnp.float32),
+    )
+    (z, _, cost, done, T, _), (no_hist, ns_hist) = jax.lax.scan(
+        step, init,
+        (prices, avail.astype(jnp.int32), pr, thr_s, z_exp_end, eff_slots, ts),
+    )
+    return _finalize(jcfg, j, tput, z, cost, done, T, no_hist, ns_hist)
+
+
+def _simulate_one_cheap(kind, sigma, j: JobArrays, tput, prices, avail):
+    """Non-AHAP lane (AHANP/OD/MSU/UP): no forecasts, no window DP — the
+    whole step is a handful of VPU ops."""
+    dmax = prices.shape[0]
+    jcfg = _job_cfg(j)
+
+    def step(carry, xs):
+        z, n_prev, cost, done, T, prev_avail = carry
+        price, av, t = xs
+        an_o, an_s = _ahanp_rule(j, sigma, z, t, price, av, n_prev, prev_avail)
+        od_o, od_s = _od_rule(j, tput, z, t, price, av)
+        ms_o, ms_s = _msu_rule(j, tput, z, t, price, av)
+        up_o, up_s = _up_rule(j, tput, z, t, price, av)
+        n_o = jnp.select(
+            [kind == 1, kind == 2, kind == 3, kind == 4],
+            [an_o, od_o, ms_o, up_o],
+        )
+        n_s = jnp.select(
+            [kind == 1, kind == 2, kind == 3, kind == 4],
+            [an_s, od_s, ms_s, up_s],
+        )
+        z, n_prev, cost, done, T, n_o, n_s, active = _execute(
+            j, tput, z, n_prev, cost, done, T, t, n_o, n_s, price, av
+        )
+        prev_avail = jnp.where(active, av, prev_avail)
+        return (z, n_prev, cost, done, T, prev_avail), (n_o, n_s)
+
+    init = (
+        jnp.float32(0.0), jnp.int32(0), jnp.float32(0.0),
+        jnp.bool_(False), jnp.float32(0.0), avail[0].astype(jnp.int32),
+    )
+    (z, _, cost, done, T, _), (no_hist, ns_hist) = jax.lax.scan(
+        step, init, (prices, avail.astype(jnp.int32), jnp.arange(dmax))
+    )
+    return _finalize(jcfg, j, tput, z, cost, done, T, no_hist, ns_hist)
+
+
+# ---------------------------------------------------------------------------
+# Pool entry points: partition by kind, scatter back to pool order
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("tput", "backend"))
+def _pool_ahap(omega, v, sigma, rho, j: JobArrays, tput, prices, avail, pred,
+               backend: str):
+    fn = lambda w, vv, s, r: _simulate_one_ahap(
+        w, vv, s, r, j, tput, prices, avail, pred, backend
+    )
+    return jax.vmap(fn)(omega, v, sigma, rho)
+
+
 @functools.partial(jax.jit, static_argnames=("tput",))
+def _pool_cheap(kind, sigma, j: JobArrays, tput, prices, avail):
+    fn = lambda k, s: _simulate_one_cheap(k, s, j, tput, prices, avail)
+    return jax.vmap(fn)(kind, sigma)
+
+
+@functools.partial(jax.jit, static_argnames=("tput", "backend"))
+def _pool_jobs_ahap(omega, v, sigma, rho, jobs: JobArrays, tput,
+                    prices, avail, pred, backend: str):
+    def per_job(job_row, pr_, av_, pm_):
+        fn = lambda w, vv, s, r: _simulate_one_ahap(
+            w, vv, s, r, job_row, tput, pr_, av_, pm_, backend
+        )
+        return jax.vmap(fn)(omega, v, sigma, rho)
+
+    return jax.vmap(per_job)(jobs, prices, avail, pred)
+
+
+@functools.partial(jax.jit, static_argnames=("tput",))
+def _pool_jobs_cheap(kind, sigma, jobs: JobArrays, tput, prices, avail):
+    def per_job(job_row, pr_, av_):
+        fn = lambda k, s: _simulate_one_cheap(k, s, job_row, tput, pr_, av_)
+        return jax.vmap(fn)(kind, sigma)
+
+    return jax.vmap(per_job)(jobs, prices, avail)
+
+
+def _partition(pool_arrays: dict):
+    """(ahap_idx, other_idx, rho) as concrete numpy — the pool encoding is
+    data, not a tracer, so the split happens once at trace/call time."""
+    kind = np.asarray(pool_arrays["kind"])
+    n = len(kind)
+    rho = pool_arrays.get("rho")
+    rho = np.ones(n, np.float32) if rho is None else np.asarray(rho, np.float32)
+    ahap_idx = np.flatnonzero(kind == KIND_AHAP)
+    other_idx = np.flatnonzero(kind != KIND_AHAP)
+    return ahap_idx, other_idx, rho
+
+
+def _scatter_merge(parts, index_arrays, axis: int):
+    """Stitch per-partition result dicts back into original pool order."""
+    if len(parts) == 1:
+        return parts[0]
+    order = np.argsort(np.concatenate(index_arrays), kind="stable")
+    return {
+        k: jnp.take(
+            jnp.concatenate([p[k] for p in parts], axis=axis), order, axis=axis
+        )
+        for k in parts[0]
+    }
+
+
+def _run_partitioned(pool_arrays, ahap_call, cheap_call, axis: int):
+    """Shared partition -> dispatch -> scatter-back driver for both pool
+    entry points (axis is the policy-lane axis of the result leaves)."""
+    ahap_idx, other_idx, rho = _partition(pool_arrays)
+    arr = lambda k: np.asarray(pool_arrays[k])
+    parts, idxs = [], []
+    if ahap_idx.size:
+        parts.append(ahap_call(
+            jnp.asarray(arr("omega")[ahap_idx]), jnp.asarray(arr("v")[ahap_idx]),
+            jnp.asarray(arr("sigma")[ahap_idx]), jnp.asarray(rho[ahap_idx]),
+        ))
+        idxs.append(ahap_idx)
+    if other_idx.size:
+        parts.append(cheap_call(
+            jnp.asarray(arr("kind")[other_idx]),
+            jnp.asarray(arr("sigma")[other_idx]),
+        ))
+        idxs.append(other_idx)
+    return _scatter_merge(parts, idxs, axis=axis)
+
+
 def simulate_pool(pool_arrays: dict, j: JobArrays, tput: ThroughputConfig,
-                  prices, avail, pred):
-    """vmap over the policy pool. pool_arrays from specs_to_arrays."""
+                  prices, avail, pred, backend: str = "xla"):
+    """Kind-partitioned pool simulation. pool_arrays from specs_to_arrays;
+    results are returned in the original pool order (same leaves/shapes as
+    the seed monolithic path, pinned against simulator.simulate)."""
+    return _run_partitioned(
+        pool_arrays,
+        lambda w, v, s, r: _pool_ahap(
+            w, v, s, r, j, tput, prices, avail, pred, backend
+        ),
+        lambda k, s: _pool_cheap(k, s, j, tput, prices, avail),
+        axis=0,
+    )
+
+
+def simulate_pool_jobs(pool_arrays: dict, jobs: JobArrays, tput: ThroughputConfig,
+                       prices, avail, pred, backend: str = "xla"):
+    """Double vmap: jobs (leading axis) x policy pool -> dict of (J, P, ...).
+
+    ``jobs`` leaves are stacked (J,) arrays; prices/avail: (J, d_max);
+    pred: (J, d_max, W1MAX, 2). One XLA call per kind-partition simulates
+    the paper's whole Fig. 9/10 workload."""
+    return _run_partitioned(
+        pool_arrays,
+        lambda w, v, s, r: _pool_jobs_ahap(
+            w, v, s, r, jobs, tput, prices, avail, pred, backend
+        ),
+        lambda k, s: _pool_jobs_cheap(k, s, jobs, tput, prices, avail),
+        axis=1,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tput", "backend"))
+def simulate_pool_monolithic(pool_arrays: dict, j: JobArrays,
+                             tput: ThroughputConfig, prices, avail, pred,
+                             backend: str = "xla-gather"):
+    """The seed path: every lane runs every rule (window DP included) and
+    selects by kind. Kept as the perf baseline (benchmarks/pool_sim_bench.py)
+    and as a parity cross-check for the partitioned path."""
     n = len(pool_arrays["kind"])
     rho = pool_arrays.get("rho")
     rho = jnp.ones(n, jnp.float32) if rho is None else jnp.asarray(rho)
     fn = lambda k, w, v, s, r: simulate_one(
-        k, w, v, s, j, tput, prices, avail, pred, rho=r
+        k, w, v, s, j, tput, prices, avail, pred, rho=r, backend=backend
     )
     return jax.vmap(fn)(
         jnp.asarray(pool_arrays["kind"]), jnp.asarray(pool_arrays["omega"]),
         jnp.asarray(pool_arrays["v"]), jnp.asarray(pool_arrays["sigma"]), rho,
     )
-
-
-@functools.partial(jax.jit, static_argnames=("tput",))
-def simulate_pool_jobs(pool_arrays: dict, jobs: JobArrays, tput: ThroughputConfig,
-                       prices, avail, pred):
-    """Double vmap: jobs (leading axis) x policy pool -> dict of (J, P, ...).
-
-    ``jobs`` leaves are stacked (J,) arrays; prices/avail: (J, d_max);
-    pred: (J, d_max, W1MAX, 2). One XLA call simulates the paper's whole
-    Fig. 9/10 workload."""
-
-    def per_job(job_row, pr, av, pm):
-        return simulate_pool(pool_arrays, job_row, tput, pr, av, pm)
-
-    return jax.vmap(per_job)(jobs, prices, avail, pred)
 
 
 def stack_jobs(jobs) -> JobArrays:

@@ -7,8 +7,8 @@ on-demand, fractionally billed) which is exactly the Ṽ(Z^ddl) - C^ddl
 objective (Eq. 9). Completion time is fractional within the finishing slot so
 V(T) is evaluated on continuous T (Eq. 4).
 
-The vmapped JAX twin of this loop lives in fast_sim.py; test_fast_sim.py
-pins them against each other.
+The vmapped JAX twin of this loop lives in fast_sim.py;
+tests/test_selector_fastsim.py pins them against each other.
 """
 from __future__ import annotations
 

@@ -16,6 +16,18 @@ Slots beyond the job deadline get infinite price (the paper only schedules
 up to d; the termination configuration handles the rest). An N^min repair
 pass rounds up/zeroes out violating slots (exactness for N^min=1; checked
 against brute force in tests for N^min>1).
+
+Backends (``backend=`` on :func:`solve_window`):
+
+``"xla"``            default; min-plus DP as tn+1 statically-shifted slices
+                     of a padded cost vector (no gathers — much faster on
+                     CPU/TPU than the seed formulation, bitwise-identical
+                     results).
+``"xla-gather"``     the seed formulation (per-step (U+1, tn+1) gather +
+                     argmin). Kept as the benchmark baseline.
+``"pallas"``         fused Pallas kernel (repro.kernels.window_dp): DP,
+                     objective argmax and backtrack in one kernel.
+``"pallas-interpret"`` same kernel through the Pallas interpreter (CPU).
 """
 from __future__ import annotations
 
@@ -31,6 +43,90 @@ from repro.core.job import tilde_value
 
 _BIG = 1.0e9
 
+BACKENDS = ("xla", "xla-gather", "pallas", "pallas-interpret")
+
+
+def _unit_cost_table(job, tput, z0, slots_to_deadline, prices, avail, p_o, tn):
+    """Shared scaffolding for every backend.
+
+    Returns (slot_cost (w1, tn+1), spot_units (w1,), gain (U+1,)) where
+    slot_cost[tau, k] is the cheapest cost of buying k units in slot tau
+    (spot-first split; infeasible k priced out with _BIG) and gain[u] is
+    Ṽ(z0 + alpha * u).
+    """
+    w1 = prices.shape[0]
+    nmax = job.n_max                       # may be a tracer
+
+    in_horizon = jnp.arange(w1) < slots_to_deadline
+    spot_ok = (prices <= p_o) & in_horizon
+    spot_units = jnp.where(spot_ok, jnp.minimum(avail, nmax), 0)  # (w1,)
+
+    ks = jnp.arange(tn + 1)[None, :].astype(jnp.float32)  # (1, tn+1)
+    n_sp = jnp.minimum(ks, spot_units[:, None].astype(jnp.float32))
+    slot_cost = n_sp * prices[:, None] + (ks - n_sp) * p_o
+    feasible_k = (ks == 0) | (
+        (ks >= job.n_min) & (ks <= nmax) & in_horizon[:, None]
+    )
+    slot_cost = jnp.where(feasible_k, slot_cost, _BIG)
+
+    u_grid = jnp.arange(w1 * tn + 1)
+    zs = jnp.asarray(z0, jnp.float32) + tput.alpha * u_grid.astype(jnp.float32)
+    gain = tilde_value(job, tput, zs)
+    return slot_cost, spot_units, gain
+
+
+def _dp_step_shifted(C, row, tn: int, U: int):
+    """One min-plus DP step as tn+1 statically-shifted adds (no gather).
+
+    Bitwise-identical to the gather formulation: the candidate values
+    C[u-k] + row[k] are the same floats, min/argmin are exact, and the
+    running `<` comparison keeps the smallest k on ties exactly like
+    jnp.argmin."""
+    padded = jnp.concatenate([jnp.full((tn,), _BIG, C.dtype), C])
+    best = C + row[0]
+    bestk = jnp.zeros(C.shape, jnp.int32)
+    for k in range(1, tn + 1):
+        cand = jax.lax.slice(padded, (tn - k,), (tn - k + U + 1,)) + row[k]
+        take = cand < best
+        best = jnp.where(take, cand, best)
+        bestk = jnp.where(take, k, bestk)
+    return best, bestk
+
+
+def _dp_step_gather(C, row, tn: int, U: int):
+    """Seed formulation: per-step (U+1, tn+1) candidate matrix via gather."""
+    u_grid = jnp.arange(U + 1)
+    uk = u_grid[:, None] - jnp.arange(tn + 1)[None, :]
+    prevC = jnp.where(uk >= 0, C[jnp.clip(uk, 0, U)], _BIG)
+    cand = prevC + row[None, :]
+    choice = jnp.argmin(cand, axis=1)
+    return jnp.min(cand, axis=1), choice
+
+
+def _solve_xla(slot_cost, gain, tn: int, *, gather: bool):
+    """DP forward + objective argmax + backtrack in plain XLA ops."""
+    w1 = slot_cost.shape[0]
+    U = w1 * tn
+    step = _dp_step_gather if gather else _dp_step_shifted
+
+    def dp_step(C, row):
+        return step(C, row, tn, U)
+
+    C0 = jnp.where(jnp.arange(U + 1) == 0, 0.0, _BIG)
+    C, choices = jax.lax.scan(dp_step, C0, slot_cost)  # choices: (w1, U+1)
+
+    obj = gain - C
+    obj = jnp.where(C < _BIG / 2, obj, -jnp.inf)
+    u_star = jnp.argmax(obj)
+
+    # backtrack: slots in reverse order
+    def back_step(u, choice_row):
+        k = choice_row[u]
+        return u - k, k
+
+    _, k_rev = jax.lax.scan(back_step, u_star, choices, reverse=True)
+    return k_rev.astype(jnp.int32), obj[u_star]
+
 
 def solve_window(
     job: JobConfig,
@@ -41,63 +137,38 @@ def solve_window(
     avail,                      # (w1,) predicted spot availability
     p_o: float,
     table_n: int = 0,           # static unit-table width (0 -> job.n_max)
+    backend: str = "xla",
 ):
     """Returns (n_o (w1,), n_s (w1,), predicted_objective scalar).
 
     jnp-traceable, including *dynamic* job fields (n_max/n_min/L may be
-    tracers inside the vmapped simulator) — only w1 and table_n set shapes.
+    tracers inside the vmapped simulator) — only w1, table_n and backend
+    set shapes / dispatch.
     """
+    assert backend in BACKENDS, backend
     prices = jnp.asarray(prices, jnp.float32)
     avail = jnp.asarray(avail, jnp.int32)
-    w1 = prices.shape[0]
-    nmax = job.n_max                       # may be a tracer
     tn = int(table_n) if table_n else int(job.n_max)
 
-    in_horizon = jnp.arange(w1) < slots_to_deadline
-    spot_ok = (prices <= p_o) & in_horizon
-    spot_units = jnp.where(spot_ok, jnp.minimum(avail, nmax), 0)  # (w1,)
-
-    # cheapest cost of buying k units in slot tau (spot-first split):
-    # slot_cost[tau, k], k = 0..tn; infeasible k (k in (0, n_min) or k > n_max
-    # or slot beyond horizon) priced out with _BIG
-    ks = jnp.arange(tn + 1)[None, :].astype(jnp.float32)  # (1, tn+1)
-    n_sp = jnp.minimum(ks, spot_units[:, None].astype(jnp.float32))
-    slot_cost = n_sp * prices[:, None] + (ks - n_sp) * p_o
-    feasible_k = (ks == 0) | (
-        (ks >= job.n_min) & (ks <= nmax) & in_horizon[:, None]
+    slot_cost, spot_units, gain = _unit_cost_table(
+        job, tput, z0, slots_to_deadline, prices, avail, p_o, tn
     )
-    slot_cost = jnp.where(feasible_k, slot_cost, _BIG)
 
-    # DP over slots: C[u] = min cost to buy u units total (exact for beta=0)
-    U = w1 * tn
-    u_grid = jnp.arange(U + 1)
+    if backend in ("pallas", "pallas-interpret"):
+        from repro.kernels.window_dp import window_dp
 
-    def dp_step(C, row):
-        # cand[u, k] = C[u-k] + row[k]
-        uk = u_grid[:, None] - jnp.arange(tn + 1)[None, :]
-        prevC = jnp.where(uk >= 0, C[jnp.clip(uk, 0, U)], _BIG)
-        cand = prevC + row[None, :]
-        choice = jnp.argmin(cand, axis=1)
-        return jnp.min(cand, axis=1), choice
+        n_tot_b, obj_b = window_dp(
+            slot_cost[None], gain[None], interpret=(backend == "pallas-interpret")
+        )
+        n_tot, obj_star = n_tot_b[0], obj_b[0]
+    else:
+        n_tot, obj_star = _solve_xla(
+            slot_cost, gain, tn, gather=(backend == "xla-gather")
+        )
 
-    C0 = jnp.where(u_grid == 0, 0.0, _BIG)
-    C, choices = jax.lax.scan(dp_step, C0, slot_cost)  # choices: (w1, U+1)
-
-    zs = jnp.asarray(z0, jnp.float32) + tput.alpha * u_grid.astype(jnp.float32)
-    obj = tilde_value(job, tput, zs) - C
-    obj = jnp.where(C < _BIG / 2, obj, -jnp.inf)
-    u_star = jnp.argmax(obj)
-
-    # backtrack: slots in reverse order
-    def back_step(u, choice_row):
-        k = choice_row[u]
-        return u - k, k
-
-    _, k_rev = jax.lax.scan(back_step, u_star, choices, reverse=True)
-    n_tot = k_rev.astype(jnp.int32)  # (w1,) units per slot, in order
     n_s = jnp.minimum(n_tot, spot_units).astype(jnp.int32)
     n_o = n_tot - n_s
-    return n_o, n_s, obj[u_star]
+    return n_o, n_s, obj_star
 
 
 @functools.lru_cache(maxsize=64)

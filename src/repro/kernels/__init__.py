@@ -7,3 +7,4 @@ holds the jit'd public wrappers.
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.lora_matmul import lora_matmul
 from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.window_dp import window_dp

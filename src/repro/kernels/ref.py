@@ -42,6 +42,39 @@ def flash_attention_ref(q, k, v, *, causal: bool = True,
     return out.astype(q.dtype)
 
 
+def window_dp_ref(slot_cost, gain, big: float = 1.0e9):
+    """Batched scan-based min-plus DP oracle for the CHC window kernel.
+
+    slot_cost:(B, w1, tn+1), gain:(B, U+1), U = w1*tn.
+    Returns (n_tot:(B, w1) i32, obj:(B,) f32) — same semantics as
+    window_dp.window_dp (smallest-k / smallest-u tie-breaking)."""
+    _, w1, kw = slot_cost.shape
+    u1 = gain.shape[1]
+
+    def one(cost, g):
+        u_grid = jnp.arange(u1)
+
+        def dp_step(C, row):
+            uk = u_grid[:, None] - jnp.arange(kw)[None, :]
+            prevC = jnp.where(uk >= 0, C[jnp.clip(uk, 0, u1 - 1)], big)
+            cand = prevC + row[None, :]
+            return jnp.min(cand, axis=1), jnp.argmin(cand, axis=1)
+
+        C0 = jnp.where(u_grid == 0, 0.0, big)
+        C, choices = jax.lax.scan(dp_step, C0, cost)
+        obj = jnp.where(C < big / 2, g - C, -jnp.inf)
+        u_star = jnp.argmax(obj)
+
+        def back_step(u, choice_row):
+            k = choice_row[u]
+            return u - k, k
+
+        _, k_rev = jax.lax.scan(back_step, u_star, choices, reverse=True)
+        return k_rev.astype(jnp.int32), obj[u_star]
+
+    return jax.vmap(one)(slot_cost, gain)
+
+
 def ssd_scan_ref(x, dt, A, B, C, h0=None):
     """Sequential SSD recurrence oracle.
 

@@ -1,0 +1,118 @@
+"""Pallas kernel for the CHC window min-plus (tropical) DP (Eq. 10).
+
+Fuses the whole inner solve of ``window_opt.solve_window`` — per-slot
+candidate evaluation, argmin choice tracking, objective argmax and the
+backtrack — into one kernel, batched over policy x job lanes. The DP state
+C (min cost of buying u units so far) lives in a VMEM scratch padded on the
+left with tn BIG entries so the candidate C[u-k] + cost[tau, k] is a
+*statically shifted slice* per k (no gathers; k and tau loops are unrolled —
+w1 <= 6 and tn <= 16 in the paper's pools, so at most ~102 VPU ops over
+(LANE_BLOCK, U+1) tiles). The backtrack resolves the per-lane dynamic
+``choices[tau, u]`` read with a one-hot reduction over the unit axis, which
+vectorizes where a gather would serialize.
+
+Lanes ride the sublane dimension, units the lane dimension: (LB, U+1) tiles
+with LB = 8 (f32 sublane tile). The grid iterates lane blocks; ``jax.vmap``
+composes on top (the policy-pool simulator calls this per-lane under vmap,
+which batches into an extra grid dimension).
+
+Oracle: repro.kernels.ref.window_dp_ref (scan-based min-plus DP); pinned in
+tests/test_window_dp_kernel.py against solve_window and brute_force_window.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_BIG = 1.0e9
+
+LANE_BLOCK = 8  # f32 sublane tile
+
+
+def _kernel(cost_ref, gain_ref, ntot_ref, obj_ref, cpad_ref, choice_ref):
+    lb, w1, kw = cost_ref.shape           # (LB, w1, tn+1)
+    u1 = gain_ref.shape[1]                # U + 1
+    u_iota = jax.lax.broadcasted_iota(jnp.int32, (lb, u1), 1)
+
+    # ---- forward min-plus DP over slots ----
+    cpad_ref[:, :kw] = jnp.full((lb, kw), _BIG, jnp.float32)
+    cpad_ref[:, kw:] = jnp.where(u_iota == 0, 0.0, _BIG)
+    for tau in range(w1):
+        row = cost_ref[:, tau, :]         # (LB, tn+1)
+        best = cpad_ref[:, kw:] + row[:, 0:1]
+        bestk = jnp.zeros((lb, u1), jnp.int32)
+        for k in range(1, kw):
+            # C[u-k] is the padded buffer shifted k to the right
+            cand = cpad_ref[:, kw - k : kw - k + u1] + row[:, k : k + 1]
+            take = cand < best            # keep smallest k on ties (= argmin)
+            best = jnp.where(take, cand, best)
+            bestk = jnp.where(take, k, bestk)
+        choice_ref[tau] = bestk
+        cpad_ref[:, kw:] = best
+
+    # ---- objective argmax over prefix length u ----
+    C = cpad_ref[:, kw:]
+    obj = jnp.where(C < _BIG / 2, gain_ref[:, :] - C, -jnp.inf)
+    obj_ref[:, 0] = jnp.max(obj, axis=1)
+    u_cur = jnp.argmax(obj, axis=1).astype(jnp.int32)  # (LB,)
+
+    # ---- backtrack: one-hot select of choices[tau, u_cur] per lane ----
+    for tau in range(w1 - 1, -1, -1):
+        hit = u_iota == u_cur[:, None]
+        k = jnp.sum(jnp.where(hit, choice_ref[tau], 0), axis=1)
+        ntot_ref[:, tau] = k
+        u_cur = u_cur - k
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_lanes"))
+def window_dp(slot_cost, gain, *, interpret: bool = False,
+              block_lanes: int = LANE_BLOCK):
+    """Solve B independent CHC window DPs in one fused kernel.
+
+    Args:
+      slot_cost: (B, w1, tn+1) f32 — slot_cost[b, tau, k] = cheapest cost of
+        buying k units in slot tau for lane b (infeasible k priced at BIG).
+      gain: (B, U+1) f32 — Ṽ(z0 + alpha * u) per lane, U = w1 * tn.
+      interpret: run through the Pallas interpreter (CPU path).
+
+    Returns:
+      n_tot: (B, w1) i32 — optimal units per slot.
+      obj:   (B,)    f32 — optimal objective value.
+    """
+    b, w1, kw = slot_cost.shape
+    u1 = gain.shape[1]
+    assert u1 == w1 * (kw - 1) + 1, (slot_cost.shape, gain.shape)
+
+    lb = min(block_lanes, b)
+    pad = (-b) % lb
+    if pad:
+        slot_cost = jnp.pad(slot_cost, ((0, pad), (0, 0), (0, 0)))
+        gain = jnp.pad(gain, ((0, pad), (0, 0)))
+    bp = b + pad
+
+    n_tot, obj = pl.pallas_call(
+        _kernel,
+        grid=(bp // lb,),
+        in_specs=[
+            pl.BlockSpec((lb, w1, kw), lambda i: (i, 0, 0)),
+            pl.BlockSpec((lb, u1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((lb, w1), lambda i: (i, 0)),
+            pl.BlockSpec((lb, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, w1), jnp.int32),
+            jax.ShapeDtypeStruct((bp, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((lb, kw + u1), jnp.float32),   # padded DP state
+            pltpu.VMEM((w1, lb, u1), jnp.int32),      # argmin choices
+        ],
+        interpret=interpret,
+    )(slot_cost, gain)
+    return n_tot[:b], obj[:b, 0]

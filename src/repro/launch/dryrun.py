@@ -155,6 +155,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, verbose=True,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax-version drift: list of per-device dicts
+        cost = cost[0] if cost else {}
     hlo_text = compiled.as_text()
     hlo = analyze_hlo(hlo_text)
     n_dev = mesh.devices.size

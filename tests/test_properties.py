@@ -1,6 +1,6 @@
 """Hypothesis property tests on system invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.configs.base import JobConfig, ThroughputConfig
 from repro.core.job import normalize_utility, tilde_value, value_fn

@@ -8,7 +8,12 @@ from repro.core.job import normalize_utility
 from repro.core.market import vast_like_trace
 from repro.core.offline_opt import solve_offline
 from repro.core.policies import AHAP, AHAPParams
-from repro.core.policy_pool import baseline_specs, paper_pool, specs_to_arrays
+from repro.core.policy_pool import (
+    baseline_specs,
+    paper_pool,
+    robust_pool,
+    specs_to_arrays,
+)
 from repro.core.predictor import NoisyPredictor, PerfectPredictor
 from repro.core.selector import (
     best_policy,
@@ -90,6 +95,47 @@ def test_fast_sim_matches_reference():
             r = simulate(spec.build(), JOB, TPUT, tr,
                          pred if spec.kind == 0 else None)
             assert abs(r.utility - uj[i]) < 1e-2, (spec.name, r.utility, uj[i])
+
+
+def test_fast_sim_robust_ahap_matches_reference():
+    """Robust-AHAP (rho < 1.0): the availability-discounted AHAP lanes must
+    match the python AHAP policy (rho passes through AHAPParams) exactly —
+    only the rho == 1.0 paths were cross-checked before."""
+    pool = robust_pool(rhos=(0.5, 0.85), omegas=(3,), sigmas=(0.5, 0.9))
+    assert all(s.rho < 1.0 for s in pool)
+    arrs = specs_to_arrays(pool)
+    for seed in range(2):
+        tr = vast_like_trace(seed=10 + seed, days=1).window(0, 10)
+        pred = NoisyPredictor(tr, "fixed_uniform", 0.3, seed=seed).matrix(
+            fast_sim.W1MAX - 1
+        )
+        prices, avail, pm = fast_sim.prepare_inputs(tr, pred, JOB.deadline)
+        out = fast_sim.simulate_pool(
+            arrs, fast_sim.JobArrays.of(JOB), TPUT, prices, avail, pm
+        )
+        uj = np.asarray(out["utility"])
+        for i, spec in enumerate(pool):
+            r = simulate(spec.build(), JOB, TPUT, tr, pred)
+            assert abs(r.utility - uj[i]) < 1e-2, (spec.name, r.utility, uj[i])
+
+
+def test_fast_sim_partitioned_matches_monolithic():
+    """The kind-partitioned pool path is bitwise-pinned to the seed
+    monolithic path (same lanes, same order, same leaves)."""
+    pool = paper_pool(omegas=(2, 4), sigmas=(0.4, 0.8)) + baseline_specs()
+    arrs = specs_to_arrays(pool)
+    tr = vast_like_trace(seed=5, days=1).window(0, 10)
+    pred = NoisyPredictor(tr, "fixed_uniform", 0.2, seed=5).matrix(
+        fast_sim.W1MAX - 1
+    )
+    prices, avail, pm = fast_sim.prepare_inputs(tr, pred, JOB.deadline)
+    j = fast_sim.JobArrays.of(JOB)
+    mono = fast_sim.simulate_pool_monolithic(arrs, j, TPUT, prices, avail, pm)
+    part = fast_sim.simulate_pool(arrs, j, TPUT, prices, avail, pm)
+    for k in mono:
+        np.testing.assert_array_equal(
+            np.asarray(mono[k]), np.asarray(part[k]), err_msg=k
+        )
 
 
 def test_pool_sizes_match_paper():

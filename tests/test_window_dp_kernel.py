@@ -1,0 +1,154 @@
+"""Pallas window-DP kernel validation: the fused min-plus DP (interpret mode
+executes the real kernel body on CPU) is pinned against the XLA solver paths,
+the pure-jnp oracle, and brute force on randomized windows."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hyp_compat import given, settings, st
+from repro.configs.base import JobConfig, ThroughputConfig
+from repro.core.window_opt import (
+    _unit_cost_table,
+    brute_force_window,
+    solve_window,
+)
+from repro.kernels.ref import window_dp_ref
+from repro.kernels.window_dp import window_dp
+
+TPUT = ThroughputConfig(mu1=0.9, mu2=0.95)
+
+job_st = st.builds(
+    JobConfig,
+    workload=st.floats(5.0, 150.0),
+    deadline=st.integers(2, 12),
+    n_min=st.integers(1, 3),
+    n_max=st.integers(4, 16),
+    value=st.floats(10.0, 300.0),
+    gamma=st.floats(1.1, 3.0),
+)
+
+
+def _random_window(rng, job, w1):
+    prices = rng.uniform(0.05, 1.5, w1).astype(np.float32)
+    avail = rng.integers(0, 17, w1).astype(np.int32)
+    z0 = float(rng.uniform(0, job.workload))
+    std = int(rng.integers(0, w1 + 1))
+    return prices, avail, z0, std
+
+
+def _solve(job, prices, avail, z0, std, backend, table_n=16):
+    n_o, n_s, obj = solve_window(
+        job, TPUT, jnp.float32(z0), jnp.int32(std), prices, avail,
+        job.on_demand_price, table_n=table_n, backend=backend,
+    )
+    return np.asarray(n_o), np.asarray(n_s), float(obj)
+
+
+# ---------------------------------------------------------------------------
+# kernel == XLA solver (exact: same candidates, same tie-breaking)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), w1=st.integers(1, 6), job=job_st)
+def test_window_dp_kernel_matches_xla_solver(seed, w1, job):
+    rng = np.random.default_rng(seed)
+    prices, avail, z0, std = _random_window(rng, job, w1)
+    ref = _solve(job, prices, avail, z0, std, "xla")
+    seed_ref = _solve(job, prices, avail, z0, std, "xla-gather")
+    pallas = _solve(job, prices, avail, z0, std, "pallas-interpret")
+    for got in (seed_ref, pallas):
+        np.testing.assert_array_equal(ref[0], got[0])
+        np.testing.assert_array_equal(ref[1], got[1])
+        assert abs(ref[2] - got[2]) < 1e-5 * (1 + abs(ref[2]))
+
+
+# ---------------------------------------------------------------------------
+# kernel == pure-jnp oracle on raw batched DP inputs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,w1,tn", [(1, 6, 16), (8, 6, 16), (13, 3, 5), (40, 1, 4)])
+def test_window_dp_kernel_matches_oracle_batched(b, w1, tn):
+    rng = np.random.default_rng(b * 131 + w1)
+    kw, u1 = tn + 1, w1 * tn + 1
+    slot_cost = rng.uniform(0.0, 3.0, (b, w1, kw)).astype(np.float32)
+    # price out a random subset of (slot, k) entries like the real table does
+    slot_cost = np.where(rng.random((b, w1, kw)) < 0.3, 1.0e9, slot_cost)
+    slot_cost[:, :, 0] = 0.0  # buying nothing is always free
+    gain = np.cumsum(rng.uniform(0.0, 2.0, (b, u1)), axis=1).astype(np.float32)
+    n_tot, obj = window_dp(jnp.asarray(slot_cost), jnp.asarray(gain),
+                           interpret=True)
+    n_ref, o_ref = window_dp_ref(jnp.asarray(slot_cost), jnp.asarray(gain))
+    np.testing.assert_array_equal(np.asarray(n_tot), np.asarray(n_ref))
+    np.testing.assert_allclose(np.asarray(obj), np.asarray(o_ref), rtol=1e-6)
+
+
+def test_window_dp_kernel_under_vmap():
+    """The pool simulator calls the kernel per-lane under vmap — the batching
+    rule must agree with explicit batching."""
+    rng = np.random.default_rng(3)
+    b, w1, tn = 6, 4, 8
+    slot_cost = rng.uniform(0.0, 3.0, (b, w1, tn + 1)).astype(np.float32)
+    slot_cost[:, :, 0] = 0.0
+    gain = np.cumsum(rng.uniform(0.0, 2.0, (b, w1 * tn + 1)), axis=1).astype(np.float32)
+    direct = window_dp(jnp.asarray(slot_cost), jnp.asarray(gain), interpret=True)
+    vmapped = jax.vmap(
+        lambda c, g: window_dp(c[None], g[None], interpret=True)
+    )(jnp.asarray(slot_cost), jnp.asarray(gain))
+    np.testing.assert_array_equal(np.asarray(direct[0]), np.asarray(vmapped[0][:, 0]))
+    np.testing.assert_allclose(np.asarray(direct[1]), np.asarray(vmapped[1][:, 0]),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# kernel == brute force (small windows, exact objective)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), w1=st.integers(1, 3))
+def test_window_dp_kernel_matches_brute_force(seed, w1):
+    rng = np.random.default_rng(seed)
+    job = JobConfig(
+        workload=float(rng.uniform(5, 40)), deadline=int(rng.integers(2, 8)),
+        n_min=1, n_max=int(rng.integers(2, 5)),
+        value=float(rng.uniform(10, 100)), gamma=float(rng.uniform(1.2, 2.5)),
+    )
+    prices, avail, z0, std = _random_window(rng, job, w1)
+    n_o, n_s, obj = _solve(job, prices, avail, z0, std, "pallas-interpret",
+                           table_n=job.n_max)
+    bf_obj, bf_plan = brute_force_window(
+        job, TPUT, z0, std, prices, avail, job.on_demand_price
+    )
+    # plans may tie; the achieved objective must be exact (alpha = 1, beta = 0)
+    from repro.core.job import tilde_value
+
+    z = z0 + float((n_o + n_s).sum())
+    cost = float((n_s * prices).sum() + n_o.sum() * job.on_demand_price)
+    u = float(tilde_value(job, TPUT, z)) - cost
+    tol = 1e-3 * (1 + abs(bf_obj))
+    assert abs(u - bf_obj) < tol, (u, obj, bf_obj, bf_plan)
+    assert abs(obj - bf_obj) < tol, (obj, bf_obj)
+
+
+# ---------------------------------------------------------------------------
+# cost-table scaffolding sanity (shared by every backend)
+# ---------------------------------------------------------------------------
+
+def test_unit_cost_table_feasibility_pricing():
+    job = JobConfig(workload=80, deadline=10, n_min=2, n_max=4, value=120.0)
+    prices = jnp.asarray([0.5, 2.0, 0.3], jnp.float32)   # slot 1 above p_o
+    avail = jnp.asarray([3, 5, 0], jnp.int32)
+    slot_cost, spot_units, gain = _unit_cost_table(
+        job, TPUT, 0.0, 2, prices, avail, 1.0, tn=4
+    )
+    slot_cost = np.asarray(slot_cost)
+    assert np.all(slot_cost[:, 0] == 0.0)                 # k=0 free everywhere
+    assert np.all(slot_cost[:, 1] >= 1.0e8)               # k=1 < n_min infeasible
+    assert np.asarray(spot_units).tolist() == [3, 0, 0]   # pricey / past-deadline
+    assert slot_cost[2, 2] >= 1.0e8                       # slot 2 beyond horizon
+    # slot 0: 2 spot at 0.5 then od; slot 1: all od (price > p_o)
+    assert abs(slot_cost[0, 3] - (3 * 0.5)) < 1e-6
+    assert abs(slot_cost[1, 2] - 2.0) < 1e-6
+    g = np.asarray(gain)
+    assert g.shape == (3 * 4 + 1,) and np.all(np.diff(g) >= -1e-5)
