@@ -1,16 +1,32 @@
 """Pool-simulator throughput: the repo's perf trajectory for the hottest path.
 
 Measures slots * policies * jobs / sec over the paper's mixed workload
-(112-policy pool + 3 baselines, Fig. 9 job distribution) for three paths:
+(112-policy pool + 9 RAND_DEADLINE + 3 baselines, Fig. 9 job distribution):
 
   seed         the monolithic simulator (every lane evaluates every decision
                rule each slot, window DP included, gather-formulated DP) —
                the state of the repo before the kind-partitioned refactor.
-  partitioned  fast_sim.simulate_pool: AHAP lanes on the DP-bearing scan
-               (shifted-slice XLA DP), AHANP/OD/MSU/UP lanes on the cheap
+  partitioned  fast_sim.simulate_pool_jobs: AHAP lanes on the DP-bearing
+               scan with ONE batched (P_ahap, w1, tn+1) window DP per slot,
+               cheap kinds (AHANP/OD/MSU/UP/RAND_DEADLINE) on the DP-free
                scan, scattered back to pool order.
-  pallas       the partitioned path with the fused Pallas window-DP kernel
+  pallas       the partitioned path with the fused Pallas window-DP kernel —
+               one kernel launch per scan slot for the whole lane batch
                (interpret mode on CPU, compiled on TPU).
+  sharded      fast_sim.simulate_pool_jobs_sharded over every visible device
+               (identical to `partitioned` when one device is visible; force
+               more with XLA_FLAGS=--xla_force_host_platform_device_count=N).
+
+`*_scale` rows rerun the XLA paths at the paper's Fig. 9/10 job counts
+(1000s of jobs; POOL_SIM_SCALE_JOBS to override). The seed path is not
+rerun at scale — it would take minutes; the 3x regression guard
+(tests/test_bench_regression.py) reads `speedup_partitioned_vs_seed` from
+the base workload.
+
+Env knobs: POOL_SIM_JOBS, POOL_SIM_REPEAT, POOL_SIM_SCALE_JOBS,
+POOL_SIM_SCALE_REPEAT (0 skips the scale rows), POOL_SIM_JSON (redirect the
+JSON artifact — the regression guard uses this so its shrunken config never
+clobbers the tracked BENCH_pool_sim.json).
 
 Writes BENCH_pool_sim.json (machine-readable rows + speedups) so successive
 PRs can track the trajectory; also returned as benchmark rows for run.py.
@@ -27,12 +43,17 @@ import numpy as np
 
 from benchmarks.common import PAPER_JOB, PAPER_TPUT, Row, job_stream, paper_market
 
-N_JOBS = 8
+N_JOBS = int(os.environ.get("POOL_SIM_JOBS", "8"))
+SCALE_JOBS = int(os.environ.get("POOL_SIM_SCALE_JOBS", "1000"))
 DEADLINE = 10
-REPEAT = 5
+REPEAT = int(os.environ.get("POOL_SIM_REPEAT", "5"))
+SCALE_REPEAT = int(os.environ.get("POOL_SIM_SCALE_REPEAT", "2"))
 
-_JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(__file__)),
-                          "BENCH_pool_sim.json")
+_JSON_PATH = os.environ.get(
+    "POOL_SIM_JSON",
+    os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                 "BENCH_pool_sim.json"),
+)
 
 
 def _workload(n_jobs: int):
@@ -69,13 +90,20 @@ def _bench(fn, repeat: int = REPEAT) -> float:
 
 def run():
     from repro.core import fast_sim
-    from repro.core.policy_pool import baseline_specs, paper_pool, specs_to_arrays
+    from repro.core.policy_pool import (
+        baseline_specs,
+        paper_pool,
+        rand_deadline_pool,
+        specs_to_arrays,
+    )
 
-    pool = paper_pool() + baseline_specs()   # 112 + 3: mixed AHAP/AHANP/baseline
+    # 112 + 9 + 3: mixed AHAP/AHANP/RAND_DEADLINE/baseline
+    pool = paper_pool() + rand_deadline_pool() + baseline_specs()
     arrs = specs_to_arrays(pool)
     jobs, prices, avail, preds = _workload(N_JOBS)
     stacked = fast_sim.stack_jobs(jobs)
     n_pol = len(pool)
+    n_dev = jax.device_count()
     work_units = DEADLINE * n_pol * N_JOBS   # slots * policies * jobs per call
 
     on_tpu = jax.default_backend() == "tpu"
@@ -83,18 +111,18 @@ def run():
 
     kind, omega = jnp.asarray(arrs["kind"]), jnp.asarray(arrs["omega"])
     v_, sigma = jnp.asarray(arrs["v"]), jnp.asarray(arrs["sigma"])
-    rho = jnp.asarray(arrs["rho"])
+    rho, cfrac = jnp.asarray(arrs["rho"]), jnp.asarray(arrs["cfrac"])
 
     @jax.jit
     def _seed_jobs(jobs_, pr_, av_, pm_):
         # the seed simulate_pool_jobs: double vmap of the monolithic lane
         # (every lane pays the window DP, gather-formulated)
         def per_job(jr, p_, a_, m_):
-            fn = lambda k, w, vv, s, r: fast_sim.simulate_one(
-                k, w, vv, s, jr, PAPER_TPUT, p_, a_, m_, rho=r,
+            fn = lambda k, w, vv, s, r, c: fast_sim.simulate_one(
+                k, w, vv, s, jr, PAPER_TPUT, p_, a_, m_, rho=r, cfrac=c,
                 backend="xla-gather",
             )
-            return jax.vmap(fn)(kind, omega, v_, sigma, rho)
+            return jax.vmap(fn)(kind, omega, v_, sigma, rho, cfrac)
 
         return jax.vmap(per_job)(jobs_, pr_, av_, pm_)
 
@@ -110,6 +138,9 @@ def run():
             arrs, stacked, PAPER_TPUT, prices, avail, preds,
             backend=pallas_backend,
         ),
+        "sharded": lambda: fast_sim.simulate_pool_jobs_sharded(
+            arrs, stacked, PAPER_TPUT, prices, avail, preds, backend="xla"
+        ),
     }
 
     secs, rows = {}, []
@@ -118,18 +149,47 @@ def run():
         rate = work_units / secs[name]
         rows.append((f"pool_sim_{name}", secs[name] * 1e6, rate))
 
+    # Fig. 9/10-scale workload (1000s of jobs): XLA paths only — the seed
+    # path at this size takes minutes and the interpreter far longer.
+    scale_secs = {}
+    if SCALE_REPEAT > 0 and SCALE_JOBS > 0:
+        s_jobs, s_prices, s_avail, s_preds = _workload(SCALE_JOBS)
+        s_stacked = fast_sim.stack_jobs(s_jobs)
+        scale_units = DEADLINE * n_pol * SCALE_JOBS
+        scale_paths = {
+            "partitioned_scale": lambda: fast_sim.simulate_pool_jobs(
+                arrs, s_stacked, PAPER_TPUT, s_prices, s_avail, s_preds,
+                backend="xla",
+            ),
+            "sharded_scale": lambda: fast_sim.simulate_pool_jobs_sharded(
+                arrs, s_stacked, PAPER_TPUT, s_prices, s_avail, s_preds,
+                backend="xla",
+            ),
+        }
+        for name, fn in scale_paths.items():
+            scale_secs[name] = _bench(fn, repeat=SCALE_REPEAT)
+            rows.append((
+                f"pool_sim_{name}", scale_secs[name] * 1e6,
+                scale_units / scale_secs[name],
+            ))
+
     speedup = secs["seed"] / secs["partitioned"]
     rows.append(("pool_sim_partitioned_speedup", 0.0, speedup))
     rows.append((
         "pool_sim_pallas_speedup", 0.0, secs["seed"] / secs["pallas"]
     ))
+    rows.append((
+        "pool_sim_sharded_speedup", 0.0, secs["seed"] / secs["sharded"]
+    ))
 
     payload = {
         "workload": {
             "policies": n_pol, "jobs": N_JOBS, "slots": DEADLINE,
-            "pool": "paper_pool(112) + baselines(3)",
+            "scale_jobs": SCALE_JOBS if scale_secs else 0,
+            "pool": "paper_pool(112) + rand_deadline(9) + baselines(3)",
         },
         "backend": jax.default_backend(),
+        "devices": n_dev,
         "pallas_mode": pallas_backend,
         "rows": [
             {"name": n, "us_per_call": us, "derived": d} for n, us, d in rows

@@ -3,9 +3,11 @@
 Prints ``name,us_per_call,derived`` CSV. Run:
     PYTHONPATH=src python -m benchmarks.run [--only fig5,fig9] [--json out.json]
 
-``--json <path>`` additionally captures every module's rows as
-machine-readable ``[{module, name, us_per_call, derived}, ...]`` — the
-mechanism behind the repo's ``BENCH_*.json`` perf-trajectory files.
+``--json <path>`` additionally captures every module's rows as a
+machine-readable payload ``{backend, devices, elapsed_s, rows: [{module,
+name, us_per_call, derived}, ...]}`` — the mechanism behind the repo's
+``BENCH_*.json`` perf-trajectory files and the opt-in CI regression guard
+(tests/test_bench_regression.py reads the pool_sim speedup rows from it).
 """
 from __future__ import annotations
 
@@ -46,6 +48,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
     json_rows = []
+    t_start = time.time()
     for mod_name in MODULES:
         if sel and not any(mod_name.startswith(s) for s in sel):
             continue
@@ -69,8 +72,16 @@ def main() -> None:
             traceback.print_exc(file=sys.stderr)
         print(f"# {mod_name} done in {time.time()-t0:.1f}s", flush=True)
     if args.json:
+        import jax  # benchmark modules have long since initialized it
+
+        payload = {
+            "backend": jax.default_backend(),
+            "devices": jax.device_count(),
+            "elapsed_s": time.time() - t_start,
+            "rows": json_rows,
+        }
         with open(args.json, "w") as f:
-            json.dump(json_rows, f, indent=2)
+            json.dump(payload, f, indent=2)
         print(f"# wrote {len(json_rows)} rows to {args.json}", flush=True)
     if failures:
         raise SystemExit(1)

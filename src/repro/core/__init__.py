@@ -16,12 +16,15 @@ from repro.core.policies import (
     AHAPParams,
     MSU,
     ODOnly,
+    RandDeadline,
+    RandDeadlineParams,
     UP,
 )
 from repro.core.policy_pool import (
     PolicySpec,
     baseline_specs,
     paper_pool,
+    rand_deadline_pool,
     specs_to_arrays,
 )
 from repro.core.predictor import (
@@ -40,4 +43,9 @@ from repro.core.selector import (
 )
 from repro.core.simulator import SimResult, simulate
 from repro.core.throughput import calibrate, effective_work, mu_factor, throughput
-from repro.core.window_opt import brute_force_window, solve_window, solve_window_numpy
+from repro.core.window_opt import (
+    brute_force_window,
+    solve_window,
+    solve_window_batch,
+    solve_window_numpy,
+)

@@ -1,6 +1,7 @@
-"""Vectorized policy simulator: one lax.scan over slots, vmap over the whole
-112-policy pool (and over jobs) — this is what makes the paper's Fig. 9/10
-experiments (1000s of jobs x 112 policies) take seconds instead of hours.
+"""Vectorized policy simulator: one lax.scan over slots, batched over the
+whole policy pool (the paper's 112 plus any RAND_DEADLINE / Robust-AHAP
+expansions) and over jobs — this is what makes the paper's Fig. 9/10
+experiments (1000s of jobs x 100+ policies) take seconds instead of hours.
 
 Semantics mirror repro.core.simulator.simulate exactly (pinned by
 tests/test_selector_fastsim.py): same feasibility pipeline, same mu/billing/
@@ -8,10 +9,20 @@ termination rules, same rounding (jnp.round == python round, half-to-even).
 
 Policies are encoded as arrays (see policy_pool.specs_to_arrays). The pool
 entry points partition the lanes by ``kind``: AHAP lanes run the DP-bearing
-scan (``solve_window`` every slot, with a selectable DP backend — see
-window_opt.BACKENDS), all other kinds (AHANP/OD/MSU/UP) run a cheap scan
-that never touches the window DP, and the results are scattered back to the
-original pool order — the public API and semantics are unchanged.
+scan, where each scan slot issues ONE lane-batched ``solve_window_batch``
+call — a single (P_ahap, w1, tn+1) DP (one fused kernel launch on the
+Pallas backends) instead of vmap's per-lane grid batching. All other kinds
+(AHANP/OD/MSU/UP/RAND_DEADLINE) run a cheap scan that never touches the
+window DP, and the results are scattered back to the original pool order —
+the public API and semantics are unchanged.
+
+Multi-device: ``simulate_pool_jobs_sharded`` lays the (jobs x lanes) grid
+over a mesh (repro.launch.mesh.make_pool_mesh) with ``shard_map`` — jobs
+ride the mesh axis, and because the kind partition splits DP-heavy AHAP
+lanes from cheap lanes *before* sharding, every device carries the same
+AHAP/cheap mix (load balance is by construction). It falls back
+bitwise-identically to ``simulate_pool_jobs`` on a single device.
+
 ``simulate_one`` keeps the seed's monolithic all-kinds step (every decision
 rule evaluated at every slot, DP included) and doubles as the benchmark
 baseline via ``simulate_pool_monolithic``.
@@ -28,7 +39,7 @@ import numpy as np
 from repro.configs.base import JobConfig, ThroughputConfig
 from repro.core.job import value_fn
 from repro.core.policy_pool import KIND_AHAP
-from repro.core.window_opt import solve_window
+from repro.core.window_opt import solve_window, solve_window_batch
 
 W1MAX = 6   # max omega + 1
 VMAX = 5    # max commitment level
@@ -236,6 +247,29 @@ def _up_rule(j: JobArrays, tput, z, t, price, av):
     return up_o, up_s
 
 
+def _rand_rule(j: JobArrays, tput, cfrac, z, t, price, av):
+    """RAND_DEADLINE (arXiv:2601.14612): randomized commitment threshold.
+    All-spot before the committed slot tau = floor(cfrac * d); from tau on,
+    on-demand sized to finish exactly at the deadline. ``cfrac`` is the
+    inverse optimal-commitment CDF at the lane's quantile, precomputed in
+    float64 by specs_to_arrays, so the f32 floor here matches the python
+    reference bit-for-bit."""
+    tau = jnp.floor(cfrac * j.deadline.astype(jnp.float32))
+    committed = t.astype(jnp.float32) >= tau
+    remaining = jnp.maximum(j.workload - z, 0.0)
+    slots_left = (j.deadline - t).astype(jnp.float32)
+    od_need = jnp.ceil(
+        remaining / jnp.maximum(slots_left, 1.0) / tput.alpha
+    ).astype(jnp.int32)
+    rd_o = jnp.where(committed, jnp.clip(od_need, j.n_min, j.n_max), 0)
+    rd_s = jnp.where(committed, 0, jnp.minimum(av, j.n_max))
+    rd_zero = (remaining <= 0) | (slots_left <= 0) | ((rd_o + rd_s) == 0)
+    rd_o_f, rd_s_f = _feasible(rd_o, rd_s, price, av, j)
+    rd_o = jnp.where(rd_zero, 0, rd_o_f)
+    rd_s = jnp.where(rd_zero, 0, rd_s_f)
+    return rd_o, rd_s
+
+
 def _execute(j: JobArrays, tput, z, n_prev, cost, done, T, t, n_o, n_s,
              price, av):
     """Mirror of simulate()'s slot execution: hard clip, mu, billing,
@@ -290,9 +324,10 @@ def simulate_one(
     tput: ThroughputConfig,
     prices, avail, pred,                   # (dmax,), (dmax,), (dmax, W1MAX, 2)
     rho=jnp.float32(1.0),                  # Robust-AHAP availability discount
+    cfrac=jnp.float32(0.0),                # RAND_DEADLINE commitment fraction
     backend: str = "xla",                  # window-DP backend (static)
 ):
-    """All five decision rules at every slot, selected by ``kind`` — the
+    """All six decision rules at every slot, selected by ``kind`` — the
     seed formulation. The pool entry points below partition by kind instead
     and only fall back to this for the monolithic baseline."""
     dmax = prices.shape[0]
@@ -313,14 +348,15 @@ def simulate_one(
         od_o, od_s = _od_rule(j, tput, z, t, price, av)
         ms_o, ms_s = _msu_rule(j, tput, z, t, price, av)
         up_o, up_s = _up_rule(j, tput, z, t, price, av)
+        rd_o, rd_s = _rand_rule(j, tput, cfrac, z, t, price, av)
 
         n_o = jnp.select(
-            [kind == 0, kind == 1, kind == 2, kind == 3, kind == 4],
-            [ah_o, an_o, od_o, ms_o, up_o],
+            [kind == 0, kind == 1, kind == 2, kind == 3, kind == 4, kind == 5],
+            [ah_o, an_o, od_o, ms_o, up_o, rd_o],
         )
         n_s = jnp.select(
-            [kind == 0, kind == 1, kind == 2, kind == 3, kind == 4],
-            [ah_s, an_s, od_s, ms_s, up_s],
+            [kind == 0, kind == 1, kind == 2, kind == 3, kind == 4, kind == 5],
+            [ah_s, an_s, od_s, ms_s, up_s, rd_s],
         )
         z, n_prev, cost, done, T, n_o, n_s, active = _execute(
             j, tput, z, n_prev, cost, done, T, t, n_o, n_s, price, av
@@ -344,11 +380,93 @@ def simulate_one(
 # Kind-partitioned lane scans (the hot path)
 # ---------------------------------------------------------------------------
 
+def _ahap_rule_batch(jcfg, j: JobArrays, tput, v, backend, z, t, price, av,
+                     plans, pr_t, thr_t, zee_t, eff_t):
+    """Lane-batched :func:`_ahap_rule`: z/v/eff_t are (P,), pr_t is
+    (P, W1MAX, 2), plans is (P, VMAX, W1MAX, 2). The CHC solve is ONE
+    ``solve_window_batch`` call across all lanes — a single fused kernel
+    launch per slot on the Pallas backends. Elementwise ops broadcast over
+    the lane axis, so results are bitwise-equal to the per-lane rule."""
+    p = z.shape[0]
+    ahead = z >= zee_t
+    chc_o, chc_s, _ = solve_window_batch(
+        jcfg, tput, z, eff_t, pr_t[..., 0], pr_t[..., 1].astype(jnp.int32),
+        j.p_o, table_n=NTABLE, backend=backend,
+    )
+    plan = jnp.where(
+        ahead[:, None, None],
+        jnp.stack([jnp.zeros((p, W1MAX), jnp.int32), thr_t], axis=-1),
+        jnp.stack([chc_o, chc_s], axis=-1),
+    ).astype(jnp.float32)                               # (P, W1MAX, 2)
+    plans = jnp.concatenate([plan[:, None], plans[:, :-1]], axis=1)
+    kk = jnp.arange(VMAX)
+    valid = ((kk[None, :] < v[:, None]) & (kk <= t)[None, :])
+    valid = valid[..., None].astype(jnp.float32)        # (P, VMAX, 1)
+    diag = plans[:, kk, jnp.minimum(kk, W1MAX - 1)]     # (P, VMAX, 2)
+    cnt = jnp.maximum(valid.sum(axis=(1, 2)), 1.0)      # (P,)
+    avg = (diag * valid).sum(axis=1) / cnt[:, None]     # (P, 2)
+    ah_o = jnp.floor(avg[:, 0] + 0.5).astype(jnp.int32)
+    ah_s = jnp.minimum(jnp.floor(avg[:, 1] + 0.5).astype(jnp.int32), av)
+    ah_zero = (ah_o + ah_s) == 0
+    ah_o_f, ah_s_f = _feasible(ah_o, ah_s, price, av, j)
+    ah_o = jnp.where(ah_zero, 0, ah_o_f)
+    ah_s = jnp.where(ah_zero, 0, ah_s_f)
+    return ah_o, ah_s, plans
+
+
+def _simulate_lanes_ahap(omega, v, sigma, rho, j: JobArrays, tput,
+                         prices, avail, pred, backend: str):
+    """All AHAP lanes in ONE scan over slots. Each scan slot issues a single
+    batched (P_ahap, w1, tn+1) window DP instead of relying on vmap's
+    per-lane grid batching (``_simulate_one_ahap`` under vmap — kept below
+    as the equivalence oracle). Scan-invariant scaffolding is precomputed
+    per (lane, slot) and fed slot-major through the scan xs."""
+    dmax = prices.shape[0]
+    p = omega.shape[0]
+    jcfg = _job_cfg(j)
+    ts = jnp.arange(dmax)
+    pr, thr_s, z_exp_end, eff_slots = jax.vmap(
+        lambda w, s, r: _ahap_precompute(j, w, s, r, ts, pred)
+    )(omega, sigma, rho)
+    # lane-major -> slot-major for the scan xs
+    pr = jnp.swapaxes(pr, 0, 1)                 # (dmax, P, W1MAX, 2)
+    thr_s = jnp.swapaxes(thr_s, 0, 1)           # (dmax, P, W1MAX)
+    z_exp_end = jnp.swapaxes(z_exp_end, 0, 1)   # (dmax, P)
+    eff_slots = jnp.swapaxes(eff_slots, 0, 1)   # (dmax, P)
+
+    def step(carry, xs):
+        z, n_prev, cost, done, T, plans = carry
+        price, av, pr_t, thr_t, zee_t, eff_t, t = xs
+        n_o, n_s, plans = _ahap_rule_batch(
+            jcfg, j, tput, v, backend, z, t, price, av, plans,
+            pr_t, thr_t, zee_t, eff_t,
+        )
+        z, n_prev, cost, done, T, n_o, n_s, _ = _execute(
+            j, tput, z, n_prev, cost, done, T, t, n_o, n_s, price, av
+        )
+        return (z, n_prev, cost, done, T, plans), (n_o, n_s)
+
+    init = (
+        jnp.zeros((p,), jnp.float32), jnp.zeros((p,), jnp.int32),
+        jnp.zeros((p,), jnp.float32), jnp.zeros((p,), jnp.bool_),
+        jnp.zeros((p,), jnp.float32),
+        jnp.zeros((p, VMAX, W1MAX, 2), jnp.float32),
+    )
+    (z, _, cost, done, T, _), (no_hist, ns_hist) = jax.lax.scan(
+        step, init,
+        (prices, avail.astype(jnp.int32), pr, thr_s, z_exp_end, eff_slots, ts),
+    )
+    return _finalize(jcfg, j, tput, z, cost, done, T,
+                     jnp.swapaxes(no_hist, 0, 1), jnp.swapaxes(ns_hist, 0, 1))
+
+
 def _simulate_one_ahap(omega, v, sigma, rho, j: JobArrays, tput,
                        prices, avail, pred, backend: str):
-    """AHAP-only lane: the sole scan that pays the window DP. All
-    scan-invariant scaffolding (rho-discounted forecasts, threshold plans,
-    schedule line, effective window lengths) is hoisted out of the step."""
+    """AHAP-only lane, one lane per call (the pre-batching formulation —
+    ``jax.vmap`` of this is the equivalence oracle for
+    ``_simulate_lanes_ahap``). All scan-invariant scaffolding
+    (rho-discounted forecasts, threshold plans, schedule line, effective
+    window lengths) is hoisted out of the step."""
     dmax = prices.shape[0]
     jcfg = _job_cfg(j)
     ts = jnp.arange(dmax)
@@ -380,9 +498,9 @@ def _simulate_one_ahap(omega, v, sigma, rho, j: JobArrays, tput,
     return _finalize(jcfg, j, tput, z, cost, done, T, no_hist, ns_hist)
 
 
-def _simulate_one_cheap(kind, sigma, j: JobArrays, tput, prices, avail):
-    """Non-AHAP lane (AHANP/OD/MSU/UP): no forecasts, no window DP — the
-    whole step is a handful of VPU ops."""
+def _simulate_one_cheap(kind, sigma, cfrac, j: JobArrays, tput, prices, avail):
+    """Non-AHAP lane (AHANP/OD/MSU/UP/RAND_DEADLINE): no forecasts, no
+    window DP — the whole step is a handful of VPU ops."""
     dmax = prices.shape[0]
     jcfg = _job_cfg(j)
 
@@ -393,13 +511,14 @@ def _simulate_one_cheap(kind, sigma, j: JobArrays, tput, prices, avail):
         od_o, od_s = _od_rule(j, tput, z, t, price, av)
         ms_o, ms_s = _msu_rule(j, tput, z, t, price, av)
         up_o, up_s = _up_rule(j, tput, z, t, price, av)
+        rd_o, rd_s = _rand_rule(j, tput, cfrac, z, t, price, av)
         n_o = jnp.select(
-            [kind == 1, kind == 2, kind == 3, kind == 4],
-            [an_o, od_o, ms_o, up_o],
+            [kind == 1, kind == 2, kind == 3, kind == 4, kind == 5],
+            [an_o, od_o, ms_o, up_o, rd_o],
         )
         n_s = jnp.select(
-            [kind == 1, kind == 2, kind == 3, kind == 4],
-            [an_s, od_s, ms_s, up_s],
+            [kind == 1, kind == 2, kind == 3, kind == 4, kind == 5],
+            [an_s, od_s, ms_s, up_s, rd_s],
         )
         z, n_prev, cost, done, T, n_o, n_s, active = _execute(
             j, tput, z, n_prev, cost, done, T, t, n_o, n_s, price, av
@@ -424,49 +543,53 @@ def _simulate_one_cheap(kind, sigma, j: JobArrays, tput, prices, avail):
 @functools.partial(jax.jit, static_argnames=("tput", "backend"))
 def _pool_ahap(omega, v, sigma, rho, j: JobArrays, tput, prices, avail, pred,
                backend: str):
-    fn = lambda w, vv, s, r: _simulate_one_ahap(
-        w, vv, s, r, j, tput, prices, avail, pred, backend
+    return _simulate_lanes_ahap(
+        omega, v, sigma, rho, j, tput, prices, avail, pred, backend
     )
-    return jax.vmap(fn)(omega, v, sigma, rho)
 
 
 @functools.partial(jax.jit, static_argnames=("tput",))
-def _pool_cheap(kind, sigma, j: JobArrays, tput, prices, avail):
-    fn = lambda k, s: _simulate_one_cheap(k, s, j, tput, prices, avail)
-    return jax.vmap(fn)(kind, sigma)
+def _pool_cheap(kind, sigma, cfrac, j: JobArrays, tput, prices, avail):
+    fn = lambda k, s, c: _simulate_one_cheap(k, s, c, j, tput, prices, avail)
+    return jax.vmap(fn)(kind, sigma, cfrac)
 
 
 @functools.partial(jax.jit, static_argnames=("tput", "backend"))
 def _pool_jobs_ahap(omega, v, sigma, rho, jobs: JobArrays, tput,
                     prices, avail, pred, backend: str):
     def per_job(job_row, pr_, av_, pm_):
-        fn = lambda w, vv, s, r: _simulate_one_ahap(
-            w, vv, s, r, job_row, tput, pr_, av_, pm_, backend
+        return _simulate_lanes_ahap(
+            omega, v, sigma, rho, job_row, tput, pr_, av_, pm_, backend
         )
-        return jax.vmap(fn)(omega, v, sigma, rho)
 
     return jax.vmap(per_job)(jobs, prices, avail, pred)
 
 
 @functools.partial(jax.jit, static_argnames=("tput",))
-def _pool_jobs_cheap(kind, sigma, jobs: JobArrays, tput, prices, avail):
+def _pool_jobs_cheap(kind, sigma, cfrac, jobs: JobArrays, tput, prices, avail):
     def per_job(job_row, pr_, av_):
-        fn = lambda k, s: _simulate_one_cheap(k, s, job_row, tput, pr_, av_)
-        return jax.vmap(fn)(kind, sigma)
+        fn = lambda k, s, c: _simulate_one_cheap(
+            k, s, c, job_row, tput, pr_, av_
+        )
+        return jax.vmap(fn)(kind, sigma, cfrac)
 
     return jax.vmap(per_job)(jobs, prices, avail)
 
 
 def _partition(pool_arrays: dict):
-    """(ahap_idx, other_idx, rho) as concrete numpy — the pool encoding is
-    data, not a tracer, so the split happens once at trace/call time."""
+    """(ahap_idx, other_idx, rho, cfrac) as concrete numpy — the pool
+    encoding is data, not a tracer, so the split happens once at trace/call
+    time."""
     kind = np.asarray(pool_arrays["kind"])
     n = len(kind)
     rho = pool_arrays.get("rho")
     rho = np.ones(n, np.float32) if rho is None else np.asarray(rho, np.float32)
+    cfrac = pool_arrays.get("cfrac")
+    cfrac = (np.zeros(n, np.float32) if cfrac is None
+             else np.asarray(cfrac, np.float32))
     ahap_idx = np.flatnonzero(kind == KIND_AHAP)
     other_idx = np.flatnonzero(kind != KIND_AHAP)
-    return ahap_idx, other_idx, rho
+    return ahap_idx, other_idx, rho, cfrac
 
 
 def _scatter_merge(parts, index_arrays, axis: int):
@@ -485,7 +608,7 @@ def _scatter_merge(parts, index_arrays, axis: int):
 def _run_partitioned(pool_arrays, ahap_call, cheap_call, axis: int):
     """Shared partition -> dispatch -> scatter-back driver for both pool
     entry points (axis is the policy-lane axis of the result leaves)."""
-    ahap_idx, other_idx, rho = _partition(pool_arrays)
+    ahap_idx, other_idx, rho, cfrac = _partition(pool_arrays)
     arr = lambda k: np.asarray(pool_arrays[k])
     parts, idxs = [], []
     if ahap_idx.size:
@@ -498,6 +621,7 @@ def _run_partitioned(pool_arrays, ahap_call, cheap_call, axis: int):
         parts.append(cheap_call(
             jnp.asarray(arr("kind")[other_idx]),
             jnp.asarray(arr("sigma")[other_idx]),
+            jnp.asarray(cfrac[other_idx]),
         ))
         idxs.append(other_idx)
     return _scatter_merge(parts, idxs, axis=axis)
@@ -513,7 +637,7 @@ def simulate_pool(pool_arrays: dict, j: JobArrays, tput: ThroughputConfig,
         lambda w, v, s, r: _pool_ahap(
             w, v, s, r, j, tput, prices, avail, pred, backend
         ),
-        lambda k, s: _pool_cheap(k, s, j, tput, prices, avail),
+        lambda k, s, c: _pool_cheap(k, s, c, j, tput, prices, avail),
         axis=0,
     )
 
@@ -530,9 +654,81 @@ def simulate_pool_jobs(pool_arrays: dict, jobs: JobArrays, tput: ThroughputConfi
         lambda w, v, s, r: _pool_jobs_ahap(
             w, v, s, r, jobs, tput, prices, avail, pred, backend
         ),
-        lambda k, s: _pool_jobs_cheap(k, s, jobs, tput, prices, avail),
+        lambda k, s, c: _pool_jobs_cheap(k, s, c, jobs, tput, prices, avail),
         axis=1,
     )
+
+
+def simulate_pool_jobs_sharded(
+    pool_arrays: dict,
+    jobs: JobArrays,
+    tput: ThroughputConfig,
+    prices, avail, pred,
+    backend: str = "xla",
+    mesh=None,
+):
+    """Device-sharded :func:`simulate_pool_jobs`: the (jobs x lanes) grid is
+    laid over ``mesh`` (default: repro.launch.mesh.make_pool_mesh over every
+    visible device) with ``shard_map`` — jobs ride the mesh axis, lanes stay
+    whole per device. The kind partition happens *before* sharding, so each
+    device runs the same DP-heavy-AHAP / cheap lane mix on its job shard
+    (load balance by construction). Job counts that do not divide the device
+    count are padded by repeating the last job and the padding is dropped
+    from the result.
+
+    Per-job lanes are independent and every op is elementwise over jobs, so
+    the result is BITWISE-equal to ``simulate_pool_jobs`` (pinned in
+    tests/test_sharded_pool.py). With one visible device this falls through
+    to ``simulate_pool_jobs`` itself.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    from repro import sharding as shardlib
+    from repro.launch.mesh import make_pool_mesh
+
+    if mesh is None:
+        mesh = make_pool_mesh()
+    n_dev = int(np.prod(mesh.devices.shape))
+    if n_dev == 1:
+        return simulate_pool_jobs(
+            pool_arrays, jobs, tput, prices, avail, pred, backend=backend
+        )
+
+    n_jobs = int(np.shape(jobs.workload)[0])
+    pad = (-n_jobs) % n_dev
+    if pad:
+        rep = lambda x: jnp.concatenate(
+            [jnp.asarray(x), jnp.repeat(jnp.asarray(x)[-1:], pad, axis=0)],
+            axis=0,
+        )
+        jobs = JobArrays(*[rep(f) for f in jobs])
+        prices, avail, pred = rep(prices), rep(avail), rep(pred)
+
+    # resolve the logical "jobs" axis against the mesh (divisibility always
+    # holds after padding; a non-matching mesh degrades to replication)
+    jspec = shardlib.resolve_spec(
+        ("jobs",), (n_jobs + pad,), mesh,
+        {**shardlib.DEFAULT_RULES, "jobs": mesh.axis_names},
+    )
+
+    def _local(jb, pr_, av_, pm_):
+        return _run_partitioned(
+            pool_arrays,
+            lambda w, v, s, r: _pool_jobs_ahap(
+                w, v, s, r, jb, tput, pr_, av_, pm_, backend
+            ),
+            lambda k, s, c: _pool_jobs_cheap(k, s, c, jb, tput, pr_, av_),
+            axis=1,
+        )
+
+    out = shard_map(
+        _local, mesh=mesh,
+        in_specs=(jspec, jspec, jspec, jspec),
+        out_specs=jspec, check_rep=False,
+    )(jobs, jnp.asarray(prices), jnp.asarray(avail), jnp.asarray(pred))
+    if pad:
+        out = {k: v[:n_jobs] for k, v in out.items()}
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("tput", "backend"))
@@ -545,12 +741,16 @@ def simulate_pool_monolithic(pool_arrays: dict, j: JobArrays,
     n = len(pool_arrays["kind"])
     rho = pool_arrays.get("rho")
     rho = jnp.ones(n, jnp.float32) if rho is None else jnp.asarray(rho)
-    fn = lambda k, w, v, s, r: simulate_one(
-        k, w, v, s, j, tput, prices, avail, pred, rho=r, backend=backend
+    cfrac = pool_arrays.get("cfrac")
+    cfrac = jnp.zeros(n, jnp.float32) if cfrac is None else jnp.asarray(cfrac)
+    fn = lambda k, w, v, s, r, c: simulate_one(
+        k, w, v, s, j, tput, prices, avail, pred, rho=r, cfrac=c,
+        backend=backend,
     )
     return jax.vmap(fn)(
         jnp.asarray(pool_arrays["kind"]), jnp.asarray(pool_arrays["omega"]),
-        jnp.asarray(pool_arrays["v"]), jnp.asarray(pool_arrays["sigma"]), rho,
+        jnp.asarray(pool_arrays["v"]), jnp.asarray(pool_arrays["sigma"]),
+        rho, cfrac,
     )
 
 

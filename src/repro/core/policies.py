@@ -277,6 +277,55 @@ class MSUWeak(MSU):
         return self._feasible(n_o, n_s, obs)
 
 
+def rand_commit_frac(q: float) -> float:
+    """Inverse CDF of the optimal randomized commitment distribution at
+    quantile q (float64; callers cast to f32 so the python policies and the
+    JAX fast-sim lanes floor the same bits). The ski-rental-optimal density
+    on the normalized deadline is p(x) = e^x/(e-1), so
+    F^{-1}(q) = log(1 + q (e - 1))."""
+    return float(np.log1p(q * (np.e - 1.0)))
+
+
+@dataclass
+class RandDeadlineParams:
+    q: float = 0.5  # quantile of the optimal commitment CDF, in (0, 1)
+
+
+class RandDeadline(BasePolicy):
+    """BEYOND-PAPER (arXiv:2601.14612): randomized commitment-threshold
+    strategy. All-spot (MSU-style, no panic logic) before the committed
+    slot tau = floor(F^{-1}(q) * d); from tau on, on-demand sized to finish
+    exactly at the deadline (OD-Only sizing). The randomization lives in
+    the *pool*: each member carries one quantile of the optimal commitment
+    distribution, and the selector learns which quantile fits the market.
+
+    The jnp twin is fast_sim._rand_rule — tau is computed with the same f32
+    multiply + floor so the two commit on exactly the same slot."""
+
+    name = "rand_deadline"
+
+    def __init__(self, params: RandDeadlineParams):
+        assert 0.0 <= params.q <= 1.0, params
+        self.p = params
+        self.commit_frac = np.float32(rand_commit_frac(params.q))
+
+    def decide(self, obs: Obs) -> Tuple[int, int]:
+        job, tput = self.job, self.tput
+        remaining = max(job.workload - obs.z_prev, 0.0)
+        slots_left = job.deadline - obs.t
+        if remaining <= 0 or slots_left <= 0:
+            return 0, 0
+        tau = float(np.floor(self.commit_frac * np.float32(job.deadline)))
+        if obs.t >= tau:  # committed: guarantee the deadline on-demand
+            need = math.ceil(remaining / max(slots_left, 1) / tput.alpha)
+            n_o, n_s = int(np.clip(need, job.n_min, job.n_max)), 0
+        else:  # pre-commitment: ride whatever spot there is
+            n_o, n_s = 0, min(obs.avail, job.n_max)
+        if n_o + n_s == 0:
+            return 0, 0
+        return self._feasible(n_o, n_s, obs)
+
+
 class UP(BasePolicy):
     """Uniform Progress (Wu et al. [16]): track the L/d reference line; spot
     when available, on-demand only when behind and spot is insufficient."""

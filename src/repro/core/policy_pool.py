@@ -4,6 +4,18 @@ The paper's pool: 105 AHAP policies (omega in 1..5, v in 1..omega, sigma in
 {0.3 .. 0.9}) + 7 AHANP policies (same sigmas) = 112, indexed 1..112 in
 Fig. 10. ``PolicySpec`` is the array encoding shared by the python policies
 and the vmapped JAX simulator.
+
+BEYOND-PAPER pool expansions (selector breadth is the robustness lever —
+Thm. 2's regret only grows as sqrt(log M)):
+
+* Robust-AHAP (``robust_pool``): availability-pessimistic AHAP, rho < 1.
+* RAND_DEADLINE (``rand_deadline_pool``): the optimal randomized
+  commitment-threshold strategies of arXiv:2601.14612, discretized as
+  quantiles of the optimal commitment CDF — each pool member commits to
+  on-demand at a different deterministic fraction of the deadline, so the
+  *pool* carries the randomization and the selector learns the best
+  quantile for the observed market. These lanes run on the cheap (DP-free)
+  scan, so they are nearly free to add.
 """
 from __future__ import annotations
 
@@ -20,14 +32,20 @@ from repro.core.policies import (
     BasePolicy,
     MSU,
     ODOnly,
+    RandDeadline,
+    RandDeadlineParams,
     UP,
+    rand_commit_frac,
 )
 
 KIND_AHAP, KIND_AHANP, KIND_OD, KIND_MSU, KIND_UP = 0, 1, 2, 3, 4
-KIND_NAMES = {0: "ahap", 1: "ahanp", 2: "od_only", 3: "msu", 4: "up"}
+KIND_RAND = 5
+KIND_NAMES = {0: "ahap", 1: "ahanp", 2: "od_only", 3: "msu", 4: "up",
+              5: "rand_deadline"}
 
 SIGMAS = (0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9)
 OMEGAS = (1, 2, 3, 4, 5)
+RAND_QS = (0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9)
 
 
 @dataclass(frozen=True)
@@ -45,6 +63,8 @@ class PolicySpec:
             return f"ahap(w={self.omega},v={self.v},s={self.sigma:.1f}{r})"
         if self.kind == KIND_AHANP:
             return f"ahanp(s={self.sigma:.1f})"
+        if self.kind == KIND_RAND:
+            return f"rand_ddl(q={self.sigma:.2f})"
         return KIND_NAMES[self.kind]
 
     def build(self) -> BasePolicy:
@@ -52,6 +72,8 @@ class PolicySpec:
             return AHAP(AHAPParams(self.omega, self.v, self.sigma, self.rho))
         if self.kind == KIND_AHANP:
             return AHANP(AHANPParams(self.sigma))
+        if self.kind == KIND_RAND:
+            return RandDeadline(RandDeadlineParams(self.sigma))
         return {KIND_OD: ODOnly, KIND_MSU: MSU, KIND_UP: UP}[self.kind]()
 
 
@@ -61,9 +83,12 @@ def paper_pool(
     fixed_v: Optional[int] = None,
     fixed_sigma: Optional[float] = None,
     include_ahanp: bool = True,
+    rand_qs: Optional[Sequence[float]] = None,
 ) -> List[PolicySpec]:
     """105 AHAP + 7 AHANP by default; the fixed_* arguments reproduce the
-    Fig. 9 hyperparameter-ablation pools (e.g. v=1 only, or sigma=0.9 only)."""
+    Fig. 9 hyperparameter-ablation pools (e.g. v=1 only, or sigma=0.9 only).
+    ``rand_qs`` appends RAND_DEADLINE lanes (see rand_deadline_pool) —
+    opt-in so the default composition stays the paper's 112."""
     pool: List[PolicySpec] = []
     for w in omegas:
         for v in range(1, w + 1):
@@ -78,7 +103,16 @@ def paper_pool(
             if fixed_sigma is not None and abs(s - fixed_sigma) > 1e-9:
                 continue
             pool.append(PolicySpec(KIND_AHANP, 0, 0, s))
+    if rand_qs is not None:
+        pool.extend(rand_deadline_pool(rand_qs))
     return pool
+
+
+def rand_deadline_pool(qs: Sequence[float] = RAND_QS) -> List[PolicySpec]:
+    """BEYOND-PAPER: randomized commitment-threshold strategies
+    (arXiv:2601.14612), one lane per quantile of the optimal commitment
+    CDF. The quantile rides the ``sigma`` slot of the array encoding."""
+    return [PolicySpec(KIND_RAND, 0, 0, q) for q in qs]
 
 
 def baseline_specs() -> List[PolicySpec]:
@@ -98,11 +132,17 @@ def robust_pool(
 
 
 def specs_to_arrays(pool: Sequence[PolicySpec]) -> dict:
-    """Array encoding for the vmapped simulator."""
+    """Array encoding for the vmapped simulator. ``cfrac`` is the
+    RAND_DEADLINE commitment fraction, precomputed in float64 here (and in
+    RandDeadline.__init__) so both simulators floor identical f32 bits."""
     return {
         "kind": np.array([p.kind for p in pool], np.int32),
         "omega": np.array([p.omega for p in pool], np.int32),
         "v": np.array([max(p.v, 1) for p in pool], np.int32),
         "sigma": np.array([p.sigma for p in pool], np.float32),
         "rho": np.array([p.rho for p in pool], np.float32),
+        "cfrac": np.array(
+            [rand_commit_frac(p.sigma) if p.kind == KIND_RAND else 0.0
+             for p in pool], np.float32,
+        ),
     }

@@ -28,6 +28,10 @@ Backends (``backend=`` on :func:`solve_window`):
 ``"pallas"``         fused Pallas kernel (repro.kernels.window_dp): DP,
                      objective argmax and backtrack in one kernel.
 ``"pallas-interpret"`` same kernel through the Pallas interpreter (CPU).
+
+:func:`solve_window_batch` solves a whole lane batch in ONE call — a single
+(B, w1, tn+1) shifted-slice DP on the XLA backends, a single kernel launch
+on the Pallas backends. It is what the pool simulator issues per scan slot.
 """
 from __future__ import annotations
 
@@ -93,6 +97,26 @@ def _dp_step_shifted(C, row, tn: int, U: int):
     return best, bestk
 
 
+def _dp_step_shifted_batch(C, row, tn: int, U: int):
+    """Lane-batched twin of :func:`_dp_step_shifted`: C is (B, U+1), row is
+    (B, tn+1). Same candidate floats, same running `<` tie-breaking — bitwise
+    identical per lane to the scalar step (pinned in tests)."""
+    b = C.shape[0]
+    padded = jnp.concatenate(
+        [jnp.full((b, tn), _BIG, C.dtype), C], axis=1
+    )
+    best = C + row[:, 0:1]
+    bestk = jnp.zeros(C.shape, jnp.int32)
+    for k in range(1, tn + 1):
+        cand = jax.lax.slice(
+            padded, (0, tn - k), (b, tn - k + U + 1)
+        ) + row[:, k : k + 1]
+        take = cand < best
+        best = jnp.where(take, cand, best)
+        bestk = jnp.where(take, k, bestk)
+    return best, bestk
+
+
 def _dp_step_gather(C, row, tn: int, U: int):
     """Seed formulation: per-step (U+1, tn+1) candidate matrix via gather."""
     u_grid = jnp.arange(U + 1)
@@ -126,6 +150,91 @@ def _solve_xla(slot_cost, gain, tn: int, *, gather: bool):
 
     _, k_rev = jax.lax.scan(back_step, u_star, choices, reverse=True)
     return k_rev.astype(jnp.int32), obj[u_star]
+
+
+def _solve_xla_batch(slot_cost, gain, tn: int):
+    """Lane-batched DP forward + objective argmax + backtrack: one call for a
+    (B, w1, tn+1) table instead of vmap-per-lane. Slots ride the scan axis,
+    lanes the array batch axis."""
+    b, w1, _ = slot_cost.shape
+    U = w1 * tn
+
+    def dp_step(C, row):
+        return _dp_step_shifted_batch(C, row, tn, U)
+
+    C0 = jnp.broadcast_to(
+        jnp.where(jnp.arange(U + 1) == 0, 0.0, _BIG), (b, U + 1)
+    )
+    # scan over slots: xs leading axis must be w1
+    C, choices = jax.lax.scan(
+        dp_step, C0, jnp.swapaxes(slot_cost, 0, 1)
+    )  # choices: (w1, B, U+1)
+
+    obj = gain - C
+    obj = jnp.where(C < _BIG / 2, obj, -jnp.inf)
+    u_star = jnp.argmax(obj, axis=1)  # (B,) smallest-u on ties, like argmax
+
+    def back_step(u, choice_row):
+        k = jnp.take_along_axis(choice_row, u[:, None], axis=1)[:, 0]
+        return u - k, k
+
+    _, k_rev = jax.lax.scan(back_step, u_star, choices, reverse=True)
+    n_tot = jnp.swapaxes(k_rev, 0, 1).astype(jnp.int32)  # (B, w1)
+    return n_tot, jnp.take_along_axis(obj, u_star[:, None], axis=1)[:, 0]
+
+
+def solve_window_batch(
+    job: JobConfig,
+    tput: ThroughputConfig,
+    z0,                         # (B,) progress per lane
+    slots_to_deadline,          # (B,) per-lane window cut-off
+    prices,                     # (B, w1) per-lane predicted spot prices
+    avail,                      # (B, w1) per-lane predicted availability
+    p_o,
+    table_n: int,               # static unit-table width (required: job.n_max
+                                # may be a tracer in the vmapped simulator)
+    backend: str = "xla",
+):
+    """Batched :func:`solve_window`: ONE DP call for a whole lane batch.
+
+    This is the in-scan entry point of the pool simulator — each scan slot
+    issues a single (B, w1, tn+1) solve across all AHAP lanes instead of
+    relying on vmap's per-lane grid batching. The Pallas backends hand the
+    full batch to one ``window_dp`` kernel launch; the XLA backends run the
+    lane-batched shifted-slice DP. Bitwise-equal per lane to
+    ``jax.vmap(solve_window)`` (pinned in tests/test_window_dp_kernel.py).
+
+    Returns (n_o (B, w1), n_s (B, w1), objective (B,)).
+    """
+    assert backend in BACKENDS, backend
+    prices = jnp.asarray(prices, jnp.float32)
+    avail = jnp.asarray(avail, jnp.int32)
+    tn = int(table_n)
+    assert tn > 0, "solve_window_batch needs a static table_n"
+
+    slot_cost, spot_units, gain = jax.vmap(
+        lambda z, std, pr, av: _unit_cost_table(
+            job, tput, z, std, pr, av, p_o, tn
+        )
+    )(jnp.asarray(z0, jnp.float32), jnp.asarray(slots_to_deadline),
+      prices, avail)
+
+    if backend in ("pallas", "pallas-interpret"):
+        from repro.kernels.window_dp import window_dp
+
+        n_tot, obj_star = window_dp(
+            slot_cost, gain, interpret=(backend == "pallas-interpret")
+        )
+    elif backend == "xla":
+        n_tot, obj_star = _solve_xla_batch(slot_cost, gain, tn)
+    else:  # "xla-gather": keep the seed formulation, vmapped per lane
+        n_tot, obj_star = jax.vmap(
+            lambda c, g: _solve_xla(c, g, tn, gather=True)
+        )(slot_cost, gain)
+
+    n_s = jnp.minimum(n_tot, spot_units).astype(jnp.int32)
+    n_o = n_tot - n_s
+    return n_o, n_s, obj_star
 
 
 def solve_window(

@@ -28,3 +28,16 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_cpu_mesh():
     """1-device mesh with the production axis names (tests / examples)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_pool_mesh(devices=None):
+    """1-D mesh for the policy-pool simulator: jobs ride the single mesh
+    axis (``"jobs"``), lanes stay whole per device — the kind-partitioned
+    lane split already balances DP-heavy vs cheap work within each device.
+    Defaults to every visible device; works unchanged on 1 CPU device
+    (tests), a forced-multi-device host, and a TPU slice."""
+    from jax.sharding import Mesh
+    import numpy as np
+
+    devices = jax.devices() if devices is None else list(devices)
+    return Mesh(np.asarray(devices), ("jobs",))

@@ -37,6 +37,12 @@ DEFAULT_RULES = {
     "ssm_heads": ("model",),
     "ssm_state": (),
     "pos": (),
+    # policy-pool simulator (fast_sim.simulate_pool_jobs_sharded): jobs ride
+    # the pool mesh's "jobs" axis (or the production data axes when the pool
+    # sim runs inside the training mesh); lanes stay per-device — the kind
+    # partition already balances DP-heavy AHAP lanes against cheap lanes.
+    "jobs": ("jobs", "pod", "data"),
+    "lanes": (),
     # weights
     "fsdp": ("data",),
     "tensor": ("model",),

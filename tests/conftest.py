@@ -1,15 +1,26 @@
 import os
 
 # Tests must see the single real CPU device — the 512-device forcing is
-# strictly dry-run-only (python -m repro.launch.dryrun in a subprocess).
+# strictly dry-run-only (python -m repro.launch.dryrun in a subprocess), and
+# the multi-device sharded-pool parity tests force their own device count in
+# a subprocess too (tests/test_sharded_pool.py).
 assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
+
+# Pin the platform before jax initializes: on machines with accelerators the
+# suite would otherwise compile for GPU/TPU and drift from the CPU-pinned
+# parity/bitwise expectations (setdefault: an explicit caller override wins).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import numpy as np
 import pytest
 
+import jax
+
+# The suite's bitwise pins assume f32/i32 leaves; make the x64 default
+# explicit rather than inherited from the environment (JAX_ENABLE_X64 etc).
+jax.config.update("jax_enable_x64", False)
+
 
 @pytest.fixture(scope="session")
 def rng():
-    import jax
-
     return jax.random.PRNGKey(0)

@@ -1,0 +1,73 @@
+"""Opt-in CI-style perf regression guard for the pool simulator.
+
+The ROADMAP pins the kind-partitioned path at >= 3x the seed monolithic
+path; this test runs a small ``pool_sim_bench`` config through
+``benchmarks/run.py --json`` (the same entry point CI would use) and fails
+if the speedup drops below the bar.
+
+Timing is meaningless under tier-1's parallel/contended conditions, so the
+test is opt-in:
+
+    RUN_BENCH_REGRESSION=1 PYTHONPATH=src python -m pytest -q \
+        tests/test_bench_regression.py
+
+Knobs: POOL_SIM_JOBS / POOL_SIM_REPEAT / POOL_SIM_SCALE_JOBS /
+POOL_SIM_SCALE_REPEAT shrink the workload (the guard sets small defaults
+for itself below).
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+MIN_SPEEDUP = 3.0
+
+pytestmark = pytest.mark.skipif(
+    os.environ.get("RUN_BENCH_REGRESSION", "") != "1",
+    reason="perf guard is opt-in: set RUN_BENCH_REGRESSION=1",
+)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_partitioned_speedup_at_least_3x_seed():
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src"), ROOT]
+        + env.get("PYTHONPATH", "").split(os.pathsep)
+    ).rstrip(os.pathsep)
+    # small-but-representative workload; scale rows off to keep this quick
+    env.setdefault("POOL_SIM_JOBS", "4")
+    env.setdefault("POOL_SIM_REPEAT", "3")
+    env.setdefault("POOL_SIM_SCALE_REPEAT", "0")
+    with tempfile.TemporaryDirectory() as td:
+        out_json = os.path.join(td, "bench.json")
+        # keep the tracked BENCH_pool_sim.json artifact out of reach of the
+        # guard's shrunken config
+        env["POOL_SIM_JSON"] = os.path.join(td, "pool_sim.json")
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run",
+             "--only", "pool_sim", "--json", out_json],
+            capture_output=True, text=True, env=env, cwd=ROOT, timeout=1800,
+        )
+        assert proc.returncode == 0, (
+            f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+        )
+        with open(out_json) as f:
+            payload = json.load(f)
+
+    assert payload["backend"] == "cpu"
+    rows = {r["name"]: r for r in payload["rows"]}
+    assert "pool_sim_partitioned_speedup" in rows, sorted(rows)
+    speedup = rows["pool_sim_partitioned_speedup"]["derived"]
+    assert speedup >= MIN_SPEEDUP, (
+        f"partitioned path regressed: {speedup:.2f}x < {MIN_SPEEDUP}x seed\n"
+        f"rows: { {n: r['derived'] for n, r in rows.items()} }"
+    )
+    # the sharded row must be present (single-device fallback included) —
+    # it is the row successive PRs track for multi-device scaling
+    assert "pool_sim_sharded" in rows, sorted(rows)

@@ -2,15 +2,17 @@
 import numpy as np
 import pytest
 
+from _hyp_compat import given, settings, st
 from repro.configs.base import JobConfig, ThroughputConfig
 from repro.core import fast_sim
 from repro.core.job import normalize_utility
-from repro.core.market import vast_like_trace
+from repro.core.market import constant_trace, vast_like_trace
 from repro.core.offline_opt import solve_offline
-from repro.core.policies import AHAP, AHAPParams
+from repro.core.policies import AHAP, AHAPParams, RandDeadline, RandDeadlineParams
 from repro.core.policy_pool import (
     baseline_specs,
     paper_pool,
+    rand_deadline_pool,
     robust_pool,
     specs_to_arrays,
 )
@@ -119,10 +121,95 @@ def test_fast_sim_robust_ahap_matches_reference():
             assert abs(r.utility - uj[i]) < 1e-2, (spec.name, r.utility, uj[i])
 
 
+def test_fast_sim_rand_deadline_matches_reference():
+    """RAND_DEADLINE lanes (randomized commitment thresholds,
+    arXiv:2601.14612) must match the python RandDeadline policy on the cheap
+    scan — including the f32 tau = floor(cfrac * d) commitment slot."""
+    pool = rand_deadline_pool((0.1, 0.3, 0.55, 0.8, 0.95))
+    arrs = specs_to_arrays(pool)
+    for seed in range(3):
+        tr = vast_like_trace(seed=20 + seed, days=1).window(0, 10)
+        prices, avail, pm = fast_sim.prepare_inputs(tr, None, JOB.deadline)
+        out = fast_sim.simulate_pool(
+            arrs, fast_sim.JobArrays.of(JOB), TPUT, prices, avail, pm
+        )
+        uj = np.asarray(out["utility"])
+        for i, spec in enumerate(pool):
+            r = simulate(spec.build(), JOB, TPUT, tr)
+            assert abs(r.utility - uj[i]) < 1e-2, (spec.name, r.utility, uj[i])
+
+
+@settings(max_examples=15, deadline=None)
+@given(q=st.floats(0.02, 0.98), seed=st.integers(0, 500))
+def test_rand_deadline_utility_and_feasibility(q, seed):
+    """Properties of the randomized-commitment strategy: utility can never
+    exceed the job value (cost >= 0), and every slot's decision respects the
+    N^max / availability envelope on arbitrary markets."""
+    rng = np.random.default_rng(seed)
+    tr = vast_like_trace(seed=int(rng.integers(0, 10_000)), days=1).window(0, 10)
+    r = simulate(RandDeadline(RandDeadlineParams(q)), JOB, TPUT, tr)
+    assert r.utility <= JOB.value + 1e-6
+    assert np.all(r.n_total <= JOB.n_max)
+    assert np.all(r.n_spot <= np.asarray(tr.avail[: JOB.deadline], int))
+    assert np.all(r.n_od >= 0) and np.all(r.n_spot >= 0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(q=st.floats(0.02, 0.98))
+def test_rand_deadline_feasible_market_meets_deadline(q):
+    """Deadline feasibility: on a market with plentiful cheap spot the
+    commitment strategy must finish by the deadline for EVERY quantile —
+    pre-commitment it rides N^max spot, post-commitment it sizes on-demand
+    to the remaining workload, and the capacity envelope
+    (mu1 + (d-1)) * alpha * N^max covers L with a wide margin."""
+    tr = constant_trace(price=0.3, avail=JOB.n_max, length=JOB.deadline + 1)
+    r = simulate(RandDeadline(RandDeadlineParams(q)), JOB, TPUT, tr)
+    assert r.completed_by_deadline, (q, r.completion_time)
+    assert r.completion_time <= JOB.deadline
+    assert r.utility <= JOB.value + 1e-6
+
+
+def test_fast_sim_batched_lanes_match_vmap_oracle():
+    """The lane-batched AHAP scan (one solve_window_batch call per slot)
+    is bitwise-pinned to vmapping the per-lane scan (_simulate_one_ahap,
+    the pre-batching formulation kept as the equivalence oracle), on the
+    XLA and Pallas-interpret backends."""
+    import jax
+    import jax.numpy as jnp
+
+    pool = [s for s in paper_pool(omegas=(1, 3, 5), sigmas=(0.3, 0.7))
+            if s.kind == 0]
+    arrs = specs_to_arrays(pool)
+    w, v = jnp.asarray(arrs["omega"]), jnp.asarray(arrs["v"])
+    sg, rho = jnp.asarray(arrs["sigma"]), jnp.asarray(arrs["rho"])
+    tr = vast_like_trace(seed=8, days=1).window(0, 10)
+    pred = NoisyPredictor(tr, "fixed_uniform", 0.2, seed=8).matrix(
+        fast_sim.W1MAX - 1
+    )
+    prices, avail, pm = fast_sim.prepare_inputs(tr, pred, JOB.deadline)
+    j = fast_sim.JobArrays.of(JOB)
+    oracle = jax.vmap(
+        lambda a, b, c, d: fast_sim._simulate_one_ahap(
+            a, b, c, d, j, TPUT, prices, avail, pm, "xla"
+        )
+    )(w, v, sg, rho)
+    for backend in ("xla", "pallas-interpret"):
+        batched = fast_sim._simulate_lanes_ahap(
+            w, v, sg, rho, j, TPUT, prices, avail, pm, backend
+        )
+        for k in oracle:
+            np.testing.assert_array_equal(
+                np.asarray(batched[k]), np.asarray(oracle[k]),
+                err_msg=f"{k} [{backend}]",
+            )
+
+
 def test_fast_sim_partitioned_matches_monolithic():
     """The kind-partitioned pool path is bitwise-pinned to the seed
-    monolithic path (same lanes, same order, same leaves)."""
-    pool = paper_pool(omegas=(2, 4), sigmas=(0.4, 0.8)) + baseline_specs()
+    monolithic path (same lanes, same order, same leaves) — RAND_DEADLINE
+    lanes included."""
+    pool = (paper_pool(omegas=(2, 4), sigmas=(0.4, 0.8))
+            + rand_deadline_pool((0.2, 0.6)) + baseline_specs())
     arrs = specs_to_arrays(pool)
     tr = vast_like_trace(seed=5, days=1).window(0, 10)
     pred = NoisyPredictor(tr, "fixed_uniform", 0.2, seed=5).matrix(
@@ -139,9 +226,12 @@ def test_fast_sim_partitioned_matches_monolithic():
 
 
 def test_pool_sizes_match_paper():
-    assert len(paper_pool()) == 112          # 105 AHAP + 7 AHANP
+    assert len(paper_pool()) == 112          # 105 AHAP + 7 AHANP (unchanged)
     assert len(paper_pool(include_ahanp=False)) == 105
     assert len(paper_pool(fixed_v=1, include_ahanp=False)) == 35  # 5 omegas x 7 sigmas
+    assert len(rand_deadline_pool()) == 9    # opt-in expansion: one per quantile
+    assert len(paper_pool(rand_qs=(0.2, 0.5, 0.8))) == 115
+    assert all(s.kind == 5 for s in rand_deadline_pool())
 
 
 # ---------------------------------------------------------------------------

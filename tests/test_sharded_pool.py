@@ -1,0 +1,134 @@
+"""Sharded-vs-single-device parity for the policy-pool simulator.
+
+``simulate_pool_jobs_sharded`` must be BITWISE-equal to
+``simulate_pool_jobs`` — per-job lanes are independent and every op is
+elementwise over the jobs axis, so laying the job grid over a device mesh
+may not change a single bit. The multi-device half runs in a subprocess
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (conftest
+forbids the forcing flag in the main test process), covering job counts
+that divide the mesh, need padding, and undershoot the device count.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+
+# Runs inside the forced-4-device subprocess. Odd lane count (12 AHAP +
+# 3 AHANP + 3 RAND + 3 baselines = 21) exercises the kind partition; job
+# counts 1/3/5 exercise the under-, non-dividing- and padding paths of the
+# jobs mesh.
+_CHILD = r"""
+import numpy as np
+import jax
+
+assert jax.device_count() == 4, jax.devices()
+
+from benchmarks.common import job_stream
+from repro.configs.base import ThroughputConfig
+from repro.core import fast_sim
+from repro.core.market import vast_like_trace
+from repro.core.policy_pool import (
+    baseline_specs, paper_pool, rand_deadline_pool, specs_to_arrays,
+)
+from repro.core.predictor import NoisyPredictor
+
+TPUT = ThroughputConfig(mu1=0.9, mu2=0.95)
+pool = (paper_pool(omegas=(1, 3), sigmas=(0.3, 0.7, 0.9))
+        + rand_deadline_pool((0.25, 0.5, 0.75)) + baseline_specs())
+arrs = specs_to_arrays(pool)
+rng = np.random.default_rng(0)
+d = 10
+for n_jobs in (1, 3, 5):
+    jobs = list(job_stream(rng, n_jobs, deadline=d))
+    traces = [vast_like_trace(seed=40 + i, days=1).window(0, d + 1)
+              for i in range(n_jobs)]
+    prices = np.stack([t.prices[:d] for t in traces]).astype(np.float32)
+    avail = np.stack([t.avail[:d] for t in traces]).astype(np.int64)
+    preds = np.stack([
+        NoisyPredictor(t, "fixed_uniform", 0.2, seed=i).matrix(
+            fast_sim.W1MAX - 1
+        )[:d]
+        for i, t in enumerate(traces)
+    ]).astype(np.float32)
+    stacked = fast_sim.stack_jobs(jobs)
+    base = fast_sim.simulate_pool_jobs(arrs, stacked, TPUT, prices, avail, preds)
+    sh = fast_sim.simulate_pool_jobs_sharded(
+        arrs, stacked, TPUT, prices, avail, preds
+    )
+    for k in base:
+        np.testing.assert_array_equal(
+            np.asarray(base[k]), np.asarray(sh[k]),
+            err_msg=f"{k} n_jobs={n_jobs}",
+        )
+print("SHARDED-PARITY-OK")
+"""
+
+
+def test_sharded_matches_single_device_4dev_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=4"
+    ).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [SRC, os.path.dirname(SRC)] + env.get("PYTHONPATH", "").split(os.pathsep)
+    ).rstrip(os.pathsep)
+    out = subprocess.run(
+        [sys.executable, "-c", _CHILD], capture_output=True, text=True,
+        env=env, timeout=900,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "SHARDED-PARITY-OK" in out.stdout
+
+
+def test_sharded_single_device_fallback_bitwise():
+    """With one visible device the sharded entry point must fall through to
+    (and bitwise-match) simulate_pool_jobs, and accept an explicit 1-device
+    mesh."""
+    import jax
+
+    from benchmarks.common import job_stream
+    from repro.configs.base import ThroughputConfig
+    from repro.core import fast_sim
+    from repro.core.market import vast_like_trace
+    from repro.core.policy_pool import (
+        baseline_specs,
+        paper_pool,
+        rand_deadline_pool,
+        specs_to_arrays,
+    )
+    from repro.core.predictor import NoisyPredictor
+    from repro.launch.mesh import make_pool_mesh
+
+    assert jax.device_count() == 1
+    tput = ThroughputConfig(mu1=0.9, mu2=0.95)
+    pool = (paper_pool(omegas=(2,), sigmas=(0.5,))
+            + rand_deadline_pool((0.4,)) + baseline_specs())
+    arrs = specs_to_arrays(pool)
+    rng = np.random.default_rng(3)
+    d = 10
+    jobs = list(job_stream(rng, 3, deadline=d))
+    traces = [vast_like_trace(seed=60 + i, days=1).window(0, d + 1)
+              for i in range(3)]
+    prices = np.stack([t.prices[:d] for t in traces]).astype(np.float32)
+    avail = np.stack([t.avail[:d] for t in traces]).astype(np.int64)
+    preds = np.stack([
+        NoisyPredictor(t, "fixed_uniform", 0.2, seed=i).matrix(
+            fast_sim.W1MAX - 1
+        )[:d]
+        for i, t in enumerate(traces)
+    ]).astype(np.float32)
+    stacked = fast_sim.stack_jobs(jobs)
+    base = fast_sim.simulate_pool_jobs(arrs, stacked, tput, prices, avail, preds)
+    for mesh in (None, make_pool_mesh()):
+        sh = fast_sim.simulate_pool_jobs_sharded(
+            arrs, stacked, tput, prices, avail, preds, mesh=mesh
+        )
+        for k in base:
+            np.testing.assert_array_equal(
+                np.asarray(base[k]), np.asarray(sh[k]), err_msg=k
+            )

@@ -10,9 +10,11 @@ import jax.numpy as jnp
 from _hyp_compat import given, settings, st
 from repro.configs.base import JobConfig, ThroughputConfig
 from repro.core.window_opt import (
+    _solve_xla_batch,
     _unit_cost_table,
     brute_force_window,
     solve_window,
+    solve_window_batch,
 )
 from repro.kernels.ref import window_dp_ref
 from repro.kernels.window_dp import window_dp
@@ -99,6 +101,96 @@ def test_window_dp_kernel_under_vmap():
     np.testing.assert_array_equal(np.asarray(direct[0]), np.asarray(vmapped[0][:, 0]))
     np.testing.assert_allclose(np.asarray(direct[1]), np.asarray(vmapped[1][:, 0]),
                                rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# batched solve (one call per scan slot) == per-lane vmap path
+# ---------------------------------------------------------------------------
+
+def _random_lane_batch(rng, job, b, w1):
+    prices = rng.uniform(0.05, 1.5, (b, w1)).astype(np.float32)
+    avail = rng.integers(0, 17, (b, w1)).astype(np.int32)
+    z0 = rng.uniform(0, job.workload, b).astype(np.float32)
+    std = rng.integers(0, w1 + 1, b).astype(np.int32)
+    return prices, avail, z0, std
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), w1=st.integers(1, 6),
+       b=st.integers(1, 9), job=job_st)
+def test_solve_window_batch_matches_vmap(seed, w1, b, job):
+    """The in-scan batched DP (one (B, w1, tn+1) call — what the pool
+    simulator issues per slot) must be BITWISE-equal per lane to vmapping
+    the scalar solver, on the XLA and Pallas-interpret backends."""
+    rng = np.random.default_rng(seed)
+    prices, avail, z0, std = _random_lane_batch(rng, job, b, w1)
+    vo, vs, vobj = jax.vmap(
+        lambda z, s, p, a: solve_window(
+            job, TPUT, z, s, p, a, job.on_demand_price, table_n=16,
+            backend="xla",
+        )
+    )(z0, std, prices, avail)
+    for backend in ("xla", "pallas-interpret"):
+        bo, bs, bobj = solve_window_batch(
+            job, TPUT, z0, std, prices, avail, job.on_demand_price,
+            table_n=16, backend=backend,
+        )
+        np.testing.assert_array_equal(np.asarray(bo), np.asarray(vo), err_msg=backend)
+        np.testing.assert_array_equal(np.asarray(bs), np.asarray(vs), err_msg=backend)
+        np.testing.assert_allclose(
+            np.asarray(bobj), np.asarray(vobj), rtol=1e-6, err_msg=backend
+        )
+
+
+def test_solve_xla_batch_matches_oracle():
+    """The lane-batched shifted-slice DP against the pure-jnp scan oracle on
+    raw batched tables (same randomized pricing-out as the kernel test)."""
+    for b, w1, tn in [(1, 6, 16), (7, 4, 8), (24, 2, 5)]:
+        rng = np.random.default_rng(b * 17 + w1)
+        kw, u1 = tn + 1, w1 * tn + 1
+        slot_cost = rng.uniform(0.0, 3.0, (b, w1, kw)).astype(np.float32)
+        slot_cost = np.where(rng.random((b, w1, kw)) < 0.3, 1.0e9, slot_cost)
+        slot_cost[:, :, 0] = 0.0
+        gain = np.cumsum(rng.uniform(0.0, 2.0, (b, u1)), axis=1).astype(np.float32)
+        n_tot, obj = _solve_xla_batch(
+            jnp.asarray(slot_cost), jnp.asarray(gain), tn
+        )
+        n_ref, o_ref = window_dp_ref(jnp.asarray(slot_cost), jnp.asarray(gain))
+        np.testing.assert_array_equal(np.asarray(n_tot), np.asarray(n_ref))
+        np.testing.assert_allclose(np.asarray(obj), np.asarray(o_ref), rtol=1e-6)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000), w1=st.integers(1, 3), b=st.integers(2, 4))
+def test_solve_window_batch_matches_brute_force(seed, w1, b):
+    """Every lane of a batched solve must achieve the brute-force objective
+    (alpha = 1, beta = 0: the achieved plan utility is exact)."""
+    from repro.core.job import tilde_value
+
+    rng = np.random.default_rng(seed)
+    job = JobConfig(
+        workload=float(rng.uniform(5, 40)), deadline=int(rng.integers(2, 8)),
+        n_min=1, n_max=int(rng.integers(2, 5)),
+        value=float(rng.uniform(10, 100)), gamma=float(rng.uniform(1.2, 2.5)),
+    )
+    prices, avail, z0, std = _random_lane_batch(rng, job, b, w1)
+    n_o, n_s, obj = solve_window_batch(
+        job, TPUT, z0, std, prices, avail, job.on_demand_price,
+        table_n=job.n_max, backend="xla",
+    )
+    n_o, n_s = np.asarray(n_o), np.asarray(n_s)
+    for i in range(b):
+        bf_obj, bf_plan = brute_force_window(
+            job, TPUT, float(z0[i]), int(std[i]), prices[i], avail[i],
+            job.on_demand_price,
+        )
+        z = float(z0[i]) + float((n_o[i] + n_s[i]).sum())
+        cost = float((n_s[i] * prices[i]).sum()
+                     + n_o[i].sum() * job.on_demand_price)
+        u = float(tilde_value(job, TPUT, z)) - cost
+        tol = 1e-3 * (1 + abs(bf_obj))
+        assert abs(u - bf_obj) < tol, (i, u, bf_obj, bf_plan)
+        assert abs(float(obj[i]) - bf_obj) < tol, (i, float(obj[i]), bf_obj)
 
 
 # ---------------------------------------------------------------------------
