@@ -34,6 +34,7 @@ MODULES = [
     "theorem2",
     "kernels_bench",
     "pool_sim_bench",
+    "region_sim",
 ]
 
 

@@ -16,22 +16,40 @@ from repro.core.policies import (
     AHAPParams,
     MSU,
     ODOnly,
+    RSEL_AVAIL,
+    RSEL_FIXED,
+    RSEL_NAMES,
+    RSEL_PRED,
+    RSEL_PRICE,
     RandDeadline,
     RandDeadlineParams,
+    RegionSelector,
+    RegionSelectorParams,
     UP,
+    rand_commit_frac,
+    uniform_commit_frac,
 )
 from repro.core.policy_pool import (
     PolicySpec,
     baseline_specs,
     paper_pool,
     rand_deadline_pool,
+    region_pool,
     specs_to_arrays,
+    uniform_rand_deadline_pool,
 )
 from repro.core.predictor import (
     ARIMAPredictor,
     NoisyPredictor,
     PerfectPredictor,
+    RegionalPredictor,
     forecast_errors,
+)
+from repro.core.region_market import (
+    RegionalMarket,
+    RegionalSimResult,
+    simulate_regional,
+    vast_like_regions,
 )
 from repro.core.selector import (
     best_policy,

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.configs.base import JobConfig, ThroughputConfig
 from repro.core.job import value_fn
+from repro.core.policies import RSEL_BIG, RSEL_PRED_WINDOW
 from repro.core.policy_pool import KIND_AHAP
 from repro.core.window_opt import solve_window, solve_window_batch
 
@@ -605,16 +606,31 @@ def _scatter_merge(parts, index_arrays, axis: int):
     }
 
 
-def _run_partitioned(pool_arrays, ahap_call, cheap_call, axis: int):
-    """Shared partition -> dispatch -> scatter-back driver for both pool
-    entry points (axis is the policy-lane axis of the result leaves)."""
+def _run_partitioned(pool_arrays, ahap_call, cheap_call, axis: int,
+                     with_regions: bool = False):
+    """Shared partition -> dispatch -> scatter-back driver for every pool
+    entry point (axis is the policy-lane axis of the result leaves). With
+    ``with_regions`` the callbacks additionally receive the partition's
+    (rsel, rmargin) region-strategy slices (defaulting to stay-put lanes
+    when the pool encoding predates the region slots)."""
     ahap_idx, other_idx, rho, cfrac = _partition(pool_arrays)
     arr = lambda k: np.asarray(pool_arrays[k])
+    n = len(arr("kind"))
+    extras = lambda idx: ()
+    if with_regions:
+        rsel = pool_arrays.get("rsel")
+        rsel = (np.zeros(n, np.int32) if rsel is None
+                else np.asarray(rsel, np.int32))
+        rmargin = pool_arrays.get("rmargin")
+        rmargin = (np.zeros(n, np.float32) if rmargin is None
+                   else np.asarray(rmargin, np.float32))
+        extras = lambda idx: (jnp.asarray(rsel[idx]), jnp.asarray(rmargin[idx]))
     parts, idxs = [], []
     if ahap_idx.size:
         parts.append(ahap_call(
             jnp.asarray(arr("omega")[ahap_idx]), jnp.asarray(arr("v")[ahap_idx]),
             jnp.asarray(arr("sigma")[ahap_idx]), jnp.asarray(rho[ahap_idx]),
+            *extras(ahap_idx),
         ))
         idxs.append(ahap_idx)
     if other_idx.size:
@@ -622,6 +638,7 @@ def _run_partitioned(pool_arrays, ahap_call, cheap_call, axis: int):
             jnp.asarray(arr("kind")[other_idx]),
             jnp.asarray(arr("sigma")[other_idx]),
             jnp.asarray(cfrac[other_idx]),
+            *extras(other_idx),
         ))
         idxs.append(other_idx)
     return _scatter_merge(parts, idxs, axis=axis)
@@ -729,6 +746,267 @@ def simulate_pool_jobs_sharded(
     if pad:
         out = {k: v[:n_jobs] for k, v in out.items()}
     return out
+
+
+# ---------------------------------------------------------------------------
+# Multi-region lanes (BEYOND-PAPER, SkyNomad arXiv:2601.06520)
+# ---------------------------------------------------------------------------
+#
+# ``simulate_pool_regions`` layers per-slot region selection over the kind-
+# partitioned scans: every lane carries a current-region state, scores all
+# regions each slot (vectorized, from data precomputed outside the scan),
+# switches with a hysteresis margin, pays ``delta_mig`` zero-allocation
+# slots per switch (checkpoint transfer), and feeds the selected region's
+# (price, avail, forecast) into the unmodified decision rules. With R == 1
+# the selector can never leave region 0 and every migration branch is a
+# no-op ``where`` passthrough, so results are BITWISE-identical to
+# ``simulate_pool_jobs`` (pinned in tests/test_region_sim.py).
+
+# the pred_horizon score averages a fixed-width forecast window; the python
+# reference (policies.RegionSelector.scores) pads/trims to the same width
+assert RSEL_PRED_WINDOW == W1MAX
+
+
+def _region_scores(j: JobArrays, prices, avail, pred):
+    """(dmax, 4, R) lower-better scores from (R, dmax) market data and
+    (R, dmax, W1MAX, 2) forecasts — the jnp twin of
+    policies.RegionSelector.scores, all four RSEL_* strategies at once
+    (lanes gather their row by ``rsel``). Scan-invariant: computed once per
+    (job, trace)."""
+    nmin_f = j.n_min.astype(jnp.float32)
+    dead = (avail < j.n_min).astype(jnp.float32)
+    price_sc = prices + RSEL_BIG * dead                   # (R, dmax)
+    avail_sc = -avail.astype(jnp.float32)
+    pdead = (pred[..., 1] < nmin_f).astype(jnp.float32)
+    pred_sc = jnp.mean(pred[..., 0] + RSEL_BIG * pdead, axis=-1)
+    sc = jnp.stack(
+        [jnp.zeros_like(price_sc), price_sc, avail_sc, pred_sc]
+    )                                                     # (4, R, dmax)
+    return jnp.transpose(sc, (2, 0, 1))
+
+
+def _region_step(cur, mig_left, sc_row, rmargin, delta_mig: int, inactive):
+    """One slot of region selection: argmin with hysteresis + migration
+    bookkeeping. Batched over lanes (cur/mig_left (P,), sc_row (P, R)) or
+    scalar (cur/mig_left scalars, sc_row (R,)). Returns
+    (cur, mig_left, migrating, switched); ``migrating`` slots execute with
+    zero instances (the checkpoint is in transit). ``inactive`` lanes
+    (completed, or past their deadline in a heterogeneous-deadline batch)
+    never switch — the reference loop has stopped by then, so late score
+    flips must not move (or count against) such a job."""
+    best = jnp.argmin(sc_row, axis=-1).astype(jnp.int32)
+    cur_sc = jnp.take_along_axis(sc_row, cur[..., None], -1)[..., 0]
+    best_sc = jnp.take_along_axis(sc_row, best[..., None], -1)[..., 0]
+    switch = ((best != cur) & (best_sc + rmargin < cur_sc)
+              & (mig_left == 0) & ~inactive)
+    cur = jnp.where(switch, best, cur)
+    mig_left = jnp.where(
+        switch, jnp.int32(delta_mig), jnp.maximum(mig_left - 1, 0)
+    )
+    return cur, mig_left, mig_left > 0, switch
+
+
+def _simulate_lanes_ahap_regions(omega, v, sigma, rho, rsel, rmargin,
+                                 j: JobArrays, tput, prices, avail, pred,
+                                 backend: str, delta_mig: int):
+    """Region-aware :func:`_simulate_lanes_ahap`: prices/avail are (R, dmax),
+    pred is (R, dmax, W1MAX, 2). The AHAP scaffolding is precomputed per
+    (lane, region, slot); each scan slot selects a region per lane and
+    gathers that region's row before the unchanged lane-batched CHC rule."""
+    dmax = prices.shape[1]
+    p = omega.shape[0]
+    jcfg = _job_cfg(j)
+    ts = jnp.arange(dmax)
+    av_i = avail.astype(jnp.int32)
+    # _ahap_precompute broadcasts over pred's leading region axis: pr/thr_s
+    # gain an R axis, z_exp_end/eff_slots stay region-independent.
+    pr, thr_s, z_exp_end, eff_slots = jax.vmap(
+        lambda w, s, r: _ahap_precompute(j, w, s, r, ts, pred)
+    )(omega, sigma, rho)
+    pr = jnp.transpose(pr, (2, 0, 1, 3, 4))      # (dmax, P, R, W1MAX, 2)
+    thr_s = jnp.transpose(thr_s, (2, 0, 1, 3))   # (dmax, P, R, W1MAX)
+    z_exp_end = jnp.swapaxes(z_exp_end, 0, 1)    # (dmax, P)
+    eff_slots = jnp.swapaxes(eff_slots, 0, 1)    # (dmax, P)
+    sc = _region_scores(j, prices, av_i, pred)[:, rsel]  # (dmax, P, R)
+    lane = jnp.arange(p)
+
+    def step(carry, xs):
+        z, n_prev, cost, done, T, plans, cur, mig_left = carry
+        prices_t, avail_t, pr_t, thr_t, zee_t, eff_t, sc_t, t = xs
+        cur, mig_left, migrating, switch = _region_step(
+            cur, mig_left, sc_t, rmargin, delta_mig,
+            done | (t >= j.deadline),
+        )
+        price = prices_t[cur]                    # (P,) per-lane region price
+        av = avail_t[cur]
+        n_o, n_s, plans = _ahap_rule_batch(
+            jcfg, j, tput, v, backend, z, t, price, av, plans,
+            pr_t[lane, cur], thr_t[lane, cur], zee_t, eff_t,
+        )
+        n_o = jnp.where(migrating, 0, n_o)
+        n_s = jnp.where(migrating, 0, n_s)
+        z, n_prev, cost, done, T, n_o, n_s, _ = _execute(
+            j, tput, z, n_prev, cost, done, T, t, n_o, n_s, price, av
+        )
+        return ((z, n_prev, cost, done, T, plans, cur, mig_left),
+                (n_o, n_s, cur, switch))
+
+    init = (
+        jnp.zeros((p,), jnp.float32), jnp.zeros((p,), jnp.int32),
+        jnp.zeros((p,), jnp.float32), jnp.zeros((p,), jnp.bool_),
+        jnp.zeros((p,), jnp.float32),
+        jnp.zeros((p, VMAX, W1MAX, 2), jnp.float32),
+        jnp.argmin(sc[0], axis=-1).astype(jnp.int32),  # free initial placement
+        jnp.zeros((p,), jnp.int32),
+    )
+    (z, _, cost, done, T, _, _, _), (no_hist, ns_hist, cur_hist, sw_hist) = (
+        jax.lax.scan(
+            step, init,
+            (jnp.swapaxes(prices, 0, 1), jnp.swapaxes(av_i, 0, 1),
+             pr, thr_s, z_exp_end, eff_slots, sc, ts),
+        )
+    )
+    out = _finalize(jcfg, j, tput, z, cost, done, T,
+                    jnp.swapaxes(no_hist, 0, 1), jnp.swapaxes(ns_hist, 0, 1))
+    out["region"] = jnp.swapaxes(cur_hist, 0, 1)
+    out["migrations"] = sw_hist.astype(jnp.int32).sum(axis=0)
+    return out
+
+
+def _simulate_one_cheap_regions(kind, sigma, cfrac, rsel, rmargin,
+                                j: JobArrays, tput, prices, avail, scores,
+                                delta_mig: int):
+    """Region-aware :func:`_simulate_one_cheap`: same DP-free rules, fed the
+    per-slot selected region's (price, avail). ``scores`` is the
+    (dmax, N_RSEL, R) tensor from :func:`_region_scores` (shared across the
+    cheap lanes of one job)."""
+    dmax = prices.shape[1]
+    jcfg = _job_cfg(j)
+    av_i = avail.astype(jnp.int32)
+    sc = scores[:, rsel]                                  # (dmax, R)
+    cur0 = jnp.argmin(sc[0]).astype(jnp.int32)
+
+    def step(carry, xs):
+        z, n_prev, cost, done, T, prev_avail, cur, mig_left = carry
+        prices_t, avail_t, sc_t, t = xs
+        cur, mig_left, migrating, switch = _region_step(
+            cur, mig_left, sc_t, rmargin, delta_mig,
+            done | (t >= j.deadline),
+        )
+        price = prices_t[cur]
+        av = avail_t[cur]
+        an_o, an_s = _ahanp_rule(j, sigma, z, t, price, av, n_prev, prev_avail)
+        od_o, od_s = _od_rule(j, tput, z, t, price, av)
+        ms_o, ms_s = _msu_rule(j, tput, z, t, price, av)
+        up_o, up_s = _up_rule(j, tput, z, t, price, av)
+        rd_o, rd_s = _rand_rule(j, tput, cfrac, z, t, price, av)
+        n_o = jnp.select(
+            [kind == 1, kind == 2, kind == 3, kind == 4, kind == 5],
+            [an_o, od_o, ms_o, up_o, rd_o],
+        )
+        n_s = jnp.select(
+            [kind == 1, kind == 2, kind == 3, kind == 4, kind == 5],
+            [an_s, od_s, ms_s, up_s, rd_s],
+        )
+        n_o = jnp.where(migrating, 0, n_o)
+        n_s = jnp.where(migrating, 0, n_s)
+        z, n_prev, cost, done, T, n_o, n_s, active = _execute(
+            j, tput, z, n_prev, cost, done, T, t, n_o, n_s, price, av
+        )
+        prev_avail = jnp.where(active, av, prev_avail)
+        return ((z, n_prev, cost, done, T, prev_avail, cur, mig_left),
+                (n_o, n_s, cur, switch))
+
+    init = (
+        jnp.float32(0.0), jnp.int32(0), jnp.float32(0.0),
+        jnp.bool_(False), jnp.float32(0.0), av_i[cur0, 0],
+        cur0, jnp.int32(0),
+    )
+    (z, _, cost, done, T, _, _, _), (no_hist, ns_hist, cur_hist, sw_hist) = (
+        jax.lax.scan(
+            step, init,
+            (jnp.swapaxes(prices, 0, 1), jnp.swapaxes(av_i, 0, 1), sc,
+             jnp.arange(dmax)),
+        )
+    )
+    out = _finalize(jcfg, j, tput, z, cost, done, T, no_hist, ns_hist)
+    out["region"] = cur_hist
+    out["migrations"] = sw_hist.astype(jnp.int32).sum()
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("tput", "backend", "delta_mig"))
+def _pool_jobs_ahap_regions(omega, v, sigma, rho, rsel, rmargin,
+                            jobs: JobArrays, tput, prices, avail, pred,
+                            backend: str, delta_mig: int):
+    def per_job(job_row, pr_, av_, pm_):
+        return _simulate_lanes_ahap_regions(
+            omega, v, sigma, rho, rsel, rmargin, job_row, tput,
+            pr_, av_, pm_, backend, delta_mig,
+        )
+
+    return jax.vmap(per_job)(jobs, prices, avail, pred)
+
+
+@functools.partial(jax.jit, static_argnames=("tput", "delta_mig"))
+def _pool_jobs_cheap_regions(kind, sigma, cfrac, rsel, rmargin,
+                             jobs: JobArrays, tput, prices, avail, pred,
+                             delta_mig: int):
+    def per_job(job_row, pr_, av_, pm_):
+        scores = _region_scores(job_row, pr_, av_.astype(jnp.int32), pm_)
+        fn = lambda k, s, c, rs, rm: _simulate_one_cheap_regions(
+            k, s, c, rs, rm, job_row, tput, pr_, av_, scores, delta_mig
+        )
+        return jax.vmap(fn)(kind, sigma, cfrac, rsel, rmargin)
+
+    return jax.vmap(per_job)(jobs, prices, avail, pred)
+
+
+def simulate_pool_regions(pool_arrays: dict, jobs: JobArrays,
+                          tput: ThroughputConfig, prices, avail, pred,
+                          backend: str = "xla", *, delta_mig: int):
+    """Multi-region :func:`simulate_pool_jobs`: jobs x pool over an R-region
+    market. ``prices``/``avail`` are (J, R, d_max), ``pred`` is
+    (J, R, d_max, W1MAX, 2) (see ``prepare_inputs_regions``); ``delta_mig``
+    is the checkpoint-transfer cost in lost slots — required (pass
+    ``market.delta_mig``; a default here would silently override the cost a
+    RegionalMarket was built with). Lanes read their region-selection
+    strategy from pool_arrays' ``rsel``/``rmargin`` slots
+    (policy_pool.region_pool; absent keys mean every lane stays put).
+
+    Returns the ``simulate_pool_jobs`` leaves (J, P, ...) plus ``region``
+    (the lane's region each slot) and ``migrations`` (completed switches).
+    With R == 1 the shared leaves are bitwise-identical to
+    ``simulate_pool_jobs``."""
+    return _run_partitioned(
+        pool_arrays,
+        lambda w, v, s, r, rs, rm: _pool_jobs_ahap_regions(
+            w, v, s, r, rs, rm, jobs, tput, prices, avail, pred,
+            backend, delta_mig,
+        ),
+        lambda k, s, c, rs, rm: _pool_jobs_cheap_regions(
+            k, s, c, rs, rm, jobs, tput, prices, avail, pred, delta_mig,
+        ),
+        axis=1, with_regions=True,
+    )
+
+
+def prepare_inputs_regions(market, pred_matrix, d_max: int):
+    """Regional twin of :func:`prepare_inputs`: (R, d_max) prices/avail and
+    an (R, d_max, W1MAX, 2) prediction stack (pad/trim per region; None
+    falls back to broadcasting the observed present, as single-region)."""
+    prices = jnp.asarray(market.prices[:, :d_max], jnp.float32)
+    avail = jnp.asarray(market.avail[:, :d_max], jnp.int32)
+    if pred_matrix is None:
+        pm = np.zeros(market.prices[:, :d_max].shape + (W1MAX, 2), np.float32)
+        pm[..., 0] = np.asarray(market.prices[:, :d_max])[..., None]
+        pm[..., 1] = np.asarray(market.avail[:, :d_max])[..., None]
+    else:
+        pm = np.asarray(pred_matrix[:, :d_max, :W1MAX], np.float32)
+        if pm.shape[2] < W1MAX:
+            pad = np.repeat(pm[:, :, -1:], W1MAX - pm.shape[2], axis=2)
+            pm = np.concatenate([pm, pad], axis=2)
+    return prices, avail, jnp.asarray(pm)
 
 
 @functools.partial(jax.jit, static_argnames=("tput", "backend"))

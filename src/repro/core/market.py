@@ -7,6 +7,11 @@ regional pool (normalized to [0, 16]). ``vast_like_trace`` reproduces those
 statistics with a seasonal + AR(1) lognormal price process and a negatively
 correlated availability process; ``TraceStats`` verifies the calibration
 (tests + benchmarks/fig2).
+
+A ``Trace`` describes ONE spot region. Multi-region markets (stacked per-
+region traces with time-zone phase-shifted diurnal cycles and a migration
+cost) live in repro.core.region_market; ``season_phase_slots`` below is the
+knob that shifts a single region's diurnal cycle.
 """
 from __future__ import annotations
 
@@ -28,6 +33,11 @@ class Trace:
         return len(self.prices)
 
     def window(self, t0: int, length: int) -> "Trace":
+        if t0 < 0 or length < 0 or t0 + length > len(self.prices):
+            raise ValueError(
+                f"window [{t0}, {t0 + length}) out of bounds for trace of "
+                f"length {len(self.prices)}"
+            )
         return Trace(
             self.prices[t0 : t0 + length],
             self.avail[t0 : t0 + length],
@@ -84,11 +94,22 @@ def vast_like_trace(
     avail_max: int = 16,
     price_avail_corr: float = -0.5,
     rho: float = 0.85,
+    season_phase_slots: float = 0.0,
 ) -> Trace:
-    """Synthetic 30-min-slot A100 spot market calibrated to paper Fig. 2."""
+    """Synthetic 30-min-slot A100 spot market calibrated to paper Fig. 2.
+
+    ``season_phase_slots`` delays the diurnal cycle by that many slots —
+    a region ``h`` hours west of the reference has its midday (availability
+    peak) ``h * slots_per_day / 24`` slots later. 0.0 keeps the original
+    trace bit-for-bit.
+    """
     rng = np.random.default_rng(seed)
     n = int(days * slots_per_day)
-    tod = 2 * np.pi * (np.arange(n) % slots_per_day) / slots_per_day
+    tod = (
+        2 * np.pi
+        * ((np.arange(n) - season_phase_slots) % slots_per_day)
+        / slots_per_day
+    )
 
     # shared diurnal demand driver: prices high / availability low at night
     # (paper Fig. 2: "higher availability during the daytime than at night")
@@ -109,7 +130,8 @@ def vast_like_trace(
         avail=avail,
         slot_seconds=86400.0 / slots_per_day,
         slots_per_day=slots_per_day,
-        meta={"seed": seed, "days": days, "kind": "vast_like"},
+        meta={"seed": seed, "days": days, "kind": "vast_like",
+              "season_phase_slots": season_phase_slots},
     )
 
 

@@ -286,9 +286,22 @@ def rand_commit_frac(q: float) -> float:
     return float(np.log1p(q * (np.e - 1.0)))
 
 
+def uniform_commit_frac(q: float) -> float:
+    """Uniform-commitment quantile function: F^{-1}(q) = q. The naive
+    alternative to the ski-rental-optimal family — each pool member commits
+    at a uniformly spread fraction of the deadline. Useful as a control for
+    how much the optimal commitment density buys (ROADMAP 'grow the cheap
+    lane')."""
+    return float(q)
+
+
 @dataclass
 class RandDeadlineParams:
     q: float = 0.5  # quantile of the optimal commitment CDF, in (0, 1)
+    # commitment fraction override: None derives the ski-rental-optimal
+    # fraction from q via rand_commit_frac; any other quantile family
+    # (e.g. uniform_commit_frac) precomputes its fraction and passes it here.
+    commit_frac: Optional[float] = None
 
 
 class RandDeadline(BasePolicy):
@@ -307,7 +320,9 @@ class RandDeadline(BasePolicy):
     def __init__(self, params: RandDeadlineParams):
         assert 0.0 <= params.q <= 1.0, params
         self.p = params
-        self.commit_frac = np.float32(rand_commit_frac(params.q))
+        cf = (rand_commit_frac(params.q) if params.commit_frac is None
+              else params.commit_frac)
+        self.commit_frac = np.float32(cf)
 
     def decide(self, obs: Obs) -> Tuple[int, int]:
         job, tput = self.job, self.tput
@@ -324,6 +339,108 @@ class RandDeadline(BasePolicy):
         if n_o + n_s == 0:
             return 0, 0
         return self._feasible(n_o, n_s, obs)
+
+
+# ---------------------------------------------------------------------------
+# Multi-region selection (BEYOND-PAPER, SkyNomad arXiv:2601.06520)
+# ---------------------------------------------------------------------------
+
+# Region-selection strategy ids (the ``rsel`` slot of the pool encoding).
+RSEL_FIXED, RSEL_PRICE, RSEL_AVAIL, RSEL_PRED = 0, 1, 2, 3
+N_RSEL = 4
+RSEL_NAMES = {0: "fixed", 1: "greedy_price", 2: "greedy_avail",
+              3: "pred_horizon"}
+
+# availability-infeasible regions (avail < N^min) are pushed out of the
+# argmin with a large additive penalty rather than masked, so a job stuck
+# with *every* region infeasible still has a deterministic (cheapest) pick
+RSEL_BIG = np.float32(1e6)
+
+# pred_horizon averages a FIXED-width forecast window so the reference and
+# the fast lanes score identically regardless of the predictor's horizon:
+# shorter forecasts are edge-padded, longer ones trimmed. Must equal
+# fast_sim.W1MAX (asserted there), which pads its prediction inputs the
+# same way (prepare_inputs_regions).
+RSEL_PRED_WINDOW = 6
+
+
+@dataclass
+class RegionSelectorParams:
+    strategy: int = RSEL_PRICE   # one of RSEL_*
+    margin: float = 0.0          # hysteresis: switch only if better by this
+
+
+class RegionSelector:
+    """Reference per-slot region chooser — the python twin of the vectorized
+    score + hysteresis step inside fast_sim.simulate_pool_regions.
+
+    Scores are LOWER-better, computed in float32 so the f32 fast-sim lanes
+    and this reference make identical switch decisions:
+
+      fixed         all-zero (stay wherever the job was placed)
+      greedy_price  observed price, +RSEL_BIG where avail < N^min
+      greedy_avail  -observed availability
+      pred_horizon  mean over the forecast window of predicted price,
+                    +RSEL_BIG where predicted avail < N^min
+
+    The first ``step`` places the job at the argmin for free (initial
+    placement is not a migration); afterwards a switch to the argmin region
+    happens only when its score beats the current region's by more than
+    ``margin`` (hysteresis — prevents thrash on noisy scores) and no
+    checkpoint transfer is already in flight. A switch starts a migration of
+    ``delta_mig`` slots during which the job holds zero instances.
+    """
+
+    def __init__(self, params: Optional[RegionSelectorParams] = None):
+        self.p = params or RegionSelectorParams()
+        assert self.p.strategy in RSEL_NAMES, self.p
+
+    def reset(self, job: JobConfig, delta_mig: int):
+        self.job, self.delta_mig = job, int(delta_mig)
+        self.cur: Optional[int] = None
+        self.mig_left = 0
+
+    def scores(self, prices_t, avail_t, pred_t=None) -> np.ndarray:
+        """(R,) float32 scores for one slot. ``pred_t`` is the (R, h+1, 2)
+        forecast made this slot (required for pred_horizon)."""
+        s, n_min = self.p.strategy, self.job.n_min
+        prices_t = np.asarray(prices_t, np.float32)
+        avail_t = np.asarray(avail_t)
+        if s == RSEL_FIXED:
+            return np.zeros(len(prices_t), np.float32)
+        if s == RSEL_PRICE:
+            dead = (avail_t < n_min).astype(np.float32)
+            return (prices_t + RSEL_BIG * dead).astype(np.float32)
+        if s == RSEL_AVAIL:
+            return -avail_t.astype(np.float32)
+        assert pred_t is not None, "pred_horizon needs forecasts"
+        pred_t = np.asarray(pred_t, np.float32)[:, :RSEL_PRED_WINDOW]
+        if pred_t.shape[1] < RSEL_PRED_WINDOW:  # edge-pad like the fast path
+            pad = np.repeat(pred_t[:, -1:],
+                            RSEL_PRED_WINDOW - pred_t.shape[1], axis=1)
+            pred_t = np.concatenate([pred_t, pad], axis=1)
+        dead = (pred_t[..., 1] < np.float32(n_min)).astype(np.float32)
+        eff = pred_t[..., 0] + RSEL_BIG * dead          # (R, RSEL_PRED_WINDOW)
+        return eff.mean(axis=-1, dtype=np.float32)
+
+    def step(self, sc: np.ndarray):
+        """Consume one slot's scores -> (region, migrating, switched)."""
+        best = int(np.argmin(sc))
+        if self.cur is None:  # initial placement, free
+            self.cur = best
+            return self.cur, False, False
+        switched = (
+            best != self.cur
+            and self.mig_left == 0
+            and bool(np.float32(sc[best]) + np.float32(self.p.margin)
+                     < np.float32(sc[self.cur]))
+        )
+        if switched:
+            self.cur = best
+            self.mig_left = self.delta_mig
+        else:
+            self.mig_left = max(self.mig_left - 1, 0)
+        return self.cur, self.mig_left > 0, switched
 
 
 class UP(BasePolicy):

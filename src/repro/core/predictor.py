@@ -158,6 +158,31 @@ class ARIMAPredictor:
         return out
 
 
+class RegionalPredictor:
+    """Per-region predictor lifted to a multi-region market: ``matrix``
+    returns (R, T, horizon+1, 2) — one prediction matrix per region, each
+    produced by an independent base predictor.
+
+    ``factory(trace, region_index) -> predictor`` builds the per-region base
+    (default: PerfectPredictor). The region index lets noisy/ARIMA factories
+    decorrelate seeds across regions, e.g.::
+
+        RegionalPredictor(market,
+                          lambda tr, r: NoisyPredictor(tr, "fixed_uniform",
+                                                       0.2, seed=r))
+    """
+
+    def __init__(self, market, factory=None):
+        self.market = market
+        self.factory = factory or (lambda tr, r: PerfectPredictor(tr))
+        self.predictors = [
+            self.factory(market.region(r), r) for r in range(market.n_regions)
+        ]
+
+    def matrix(self, horizon: int) -> np.ndarray:
+        return np.stack([p.matrix(horizon) for p in self.predictors])
+
+
 def mape(pred: np.ndarray, true: np.ndarray) -> float:
     return float(np.mean(np.abs(pred - true) / np.maximum(np.abs(true), 1e-6)))
 

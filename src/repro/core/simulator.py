@@ -40,6 +40,40 @@ class SimResult:
         return self.z_ddl
 
 
+def exec_slot(job: JobConfig, tput: ThroughputConfig, z: float, n_prev: int,
+              t: int, n_o: int, n_s: int, price: float, avail: int):
+    """One slot of the paper's execution semantics, shared by this loop and
+    the regional reference (region_market.simulate_regional): hard
+    feasibility clip (5b)-(5d), mu reconfiguration ramp, whole-slot billing,
+    fractional completion. Returns (n_o, n_s, work, cost_delta,
+    t_complete-or-None)."""
+    n_s = int(np.clip(n_s, 0, min(avail, job.n_max)))
+    n_o = int(np.clip(n_o, 0, job.n_max - n_s))
+    n = n_o + n_s
+    if 0 < n < job.n_min:
+        n_o += job.n_min - n
+        n = n_o + n_s
+
+    mu = 1.0 if n == n_prev else (tput.mu1 if n > n_prev else tput.mu2)
+    if n == 0 and n_prev == 0:
+        mu = 1.0
+    work = mu * (tput.alpha * n + (tput.beta if n > 0 else 0.0))
+    cost_delta = n_s * price + n_o * job.on_demand_price  # whole-slot billing
+
+    t_complete = None
+    if work > 0 and z + work >= job.workload:
+        t_complete = t + (job.workload - z) / work
+    return n_o, n_s, work, cost_delta, t_complete
+
+
+def termination_config(job: JobConfig, tput: ThroughputConfig, z: float):
+    """Finish the leftover workload with N^max on-demand past the deadline
+    (fractionally billed, Eq. 9). Returns (extra_slots, extra_cost)."""
+    h_max = tput.alpha * job.n_max + tput.beta
+    dt = (job.workload - z) / h_max
+    return dt, job.on_demand_price * job.n_max * dt
+
+
 def simulate(
     policy: BasePolicy,
     job: JobConfig,
@@ -61,25 +95,13 @@ def simulate(
         obs = Obs(t=t, price=price, avail=avail, z_prev=z, n_prev=n_prev, pred=pred)
         n_o, n_s = policy.decide(obs)
         # hard feasibility (5b)-(5d): never trust a policy blindly
-        n_s = int(np.clip(n_s, 0, min(avail, job.n_max)))
-        n_o = int(np.clip(n_o, 0, job.n_max - n_s))
-        n = n_o + n_s
-        if 0 < n < job.n_min:
-            n_o += job.n_min - n
-            n = n_o + n_s
-
-        mu = 1.0 if n == n_prev else (tput.mu1 if n > n_prev else tput.mu2)
-        if n == 0 and n_prev == 0:
-            mu = 1.0
-        work = mu * (tput.alpha * n + (tput.beta if n > 0 else 0.0))
-        cost += n_s * price + n_o * job.on_demand_price  # whole-slot billing
+        n_o, n_s, work, dc, T_complete = exec_slot(
+            job, tput, z, n_prev, t, n_o, n_s, price, avail
+        )
+        cost += dc
         ns_hist[t], no_hist[t] = n_s, n_o
-
-        if work > 0 and z + work >= job.workload and T_complete is None:
-            frac = (job.workload - z) / work
-            T_complete = t + frac
         z = min(z + work, job.workload)
-        n_prev = n
+        n_prev = n_o + n_s
         if T_complete is not None:
             break
 
@@ -87,11 +109,9 @@ def simulate(
         value = float(value_fn(job, T_complete))
     else:
         # termination configuration: N^max on-demand past the deadline
-        h_max = tput.alpha * job.n_max + tput.beta
-        remaining = job.workload - z
-        dt = remaining / h_max
+        dt, dc = termination_config(job, tput, z)
         T_complete = d + dt
-        cost += job.on_demand_price * job.n_max * dt
+        cost += dc
         value = float(value_fn(job, T_complete))
 
     return SimResult(

@@ -1,0 +1,149 @@
+"""Multi-region market layer: RegionalMarket, phase-shifted generation,
+regional predictors, and the Trace.window bounds contract."""
+import numpy as np
+import pytest
+
+from repro.core.market import Trace, TraceStats, constant_trace, vast_like_trace
+from repro.core.predictor import NoisyPredictor, PerfectPredictor, RegionalPredictor
+from repro.core.region_market import RegionalMarket, vast_like_regions
+
+
+# ---------------------------------------------------------------------------
+# Trace.window bounds (was: silently returned a short window)
+# ---------------------------------------------------------------------------
+
+def test_trace_window_in_bounds_ok():
+    tr = constant_trace(0.5, 4, 20)
+    w = tr.window(5, 10)
+    assert len(w) == 10 and w.meta["t0"] == 5
+
+
+@pytest.mark.parametrize("t0,length", [(15, 10), (0, 21), (-1, 5), (3, -1)])
+def test_trace_window_out_of_bounds_raises(t0, length):
+    tr = constant_trace(0.5, 4, 20)
+    with pytest.raises(ValueError):
+        tr.window(t0, length)
+
+
+def test_regional_window_out_of_bounds_raises():
+    m = vast_like_regions(2, seed=0, days=1)
+    assert len(m) == 48
+    with pytest.raises(ValueError):
+        m.window(40, 10)
+    w = m.window(10, 20)
+    assert len(w) == 20 and w.n_regions == 2
+    assert w.delta_mig == m.delta_mig
+
+
+# ---------------------------------------------------------------------------
+# Phase-shifted generation
+# ---------------------------------------------------------------------------
+
+def test_zero_phase_is_bitwise_default():
+    a = vast_like_trace(seed=3, days=2)
+    b = vast_like_trace(seed=3, days=2, season_phase_slots=0.0)
+    np.testing.assert_array_equal(a.prices, b.prices)
+    np.testing.assert_array_equal(a.avail, b.avail)
+
+
+def _tod_profile(trace):
+    """Per-slot-of-day mean availability."""
+    spd = trace.slots_per_day
+    t = np.arange(len(trace)) % spd
+    return np.array([trace.avail[t == k].mean() for k in range(spd)])
+
+
+def test_vast_like_regions_phase_shifts_the_diurnal_peak():
+    m = vast_like_regions(
+        3, seed=2, days=10, phase_hours=(0.0, 8.0, 16.0),
+        avail_season_amp=4.0, avail_sigma=0.5,
+    )
+    spd = m.slots_per_day
+    base = _tod_profile(m.region(0))
+    for r, phase_h in ((1, 8.0), (2, 16.0)):
+        prof = _tod_profile(m.region(r))
+        shift_slots = int(phase_h * spd / 24)
+        # circular cross-correlation peaks at the region's phase shift
+        lags = [
+            np.dot(base - base.mean(), np.roll(prof - prof.mean(), -lag))
+            for lag in range(spd)
+        ]
+        best_lag = int(np.argmax(lags))
+        err = min(abs(best_lag - shift_slots), spd - abs(best_lag - shift_slots))
+        assert err <= 2, (r, best_lag, shift_slots)
+
+
+def test_phase_shift_flips_day_night_ratio():
+    """TraceStats day/night ratio: > 1 for the reference region (paper
+    Fig. 2: more availability by day), < 1 for a 12h-shifted region."""
+    m = vast_like_regions(
+        2, seed=5, days=10, phase_hours=(0.0, 12.0),
+        avail_season_amp=4.0, avail_sigma=0.5,
+    )
+    s0, s1 = m.stats()
+    assert s0.avail_day_night_ratio > 1.2, s0
+    assert s1.avail_day_night_ratio < 0.85, s1
+
+
+def test_per_region_price_levels():
+    m = vast_like_regions(
+        3, seed=1, days=10, mean_prices=(0.3, 0.45, 0.6), price_sigma=0.2,
+    )
+    med = [np.median(m.prices[r]) for r in range(3)]
+    assert med[0] < med[1] < med[2], med
+    # each region individually still passes the Fig. 2 shape check
+    for r in range(3):
+        st = TraceStats.of(m.region(r))
+        assert 0.4 < st.median_over_p90 < 0.9, (r, st)
+
+
+def test_from_traces_rejects_misaligned_traces():
+    t0 = vast_like_trace(seed=0, days=1)
+    short = vast_like_trace(seed=1, days=0.5)
+    with pytest.raises(ValueError):
+        RegionalMarket.from_traces([t0, short])
+    hourly = vast_like_trace(seed=1, days=1, slots_per_day=24)
+    with pytest.raises(ValueError):
+        RegionalMarket.from_traces([t0, hourly])
+
+
+def test_from_traces_roundtrip_and_views():
+    t0 = vast_like_trace(seed=0, days=1)
+    t1 = vast_like_trace(seed=1, days=1)
+    m = RegionalMarket.from_traces([t0, t1], delta_mig=2,
+                                   region_names=("us", "eu"))
+    assert m.n_regions == 2 and m.delta_mig == 2
+    assert m.region_names == ("us", "eu")
+    np.testing.assert_array_equal(m.region(1).prices, t1.prices)
+    np.testing.assert_array_equal(m.region(0).avail, t0.avail)
+    assert isinstance(m.region(0), Trace)
+
+
+# ---------------------------------------------------------------------------
+# Regional predictors: (R, T, h+1, 2)
+# ---------------------------------------------------------------------------
+
+def test_regional_predictor_shapes_and_present_column():
+    m = vast_like_regions(3, seed=4, days=1)
+    h = 5
+    pm = RegionalPredictor(m).matrix(h)  # default: PerfectPredictor
+    assert pm.shape == (3, len(m), h + 1, 2)
+    for r in range(3):
+        np.testing.assert_array_equal(pm[r, :, 0, 0], m.prices[r])
+        np.testing.assert_array_equal(pm[r, :, 0, 1], m.avail[r])
+        # perfect predictor: j-step forecast equals the shifted truth
+        np.testing.assert_array_equal(pm[r, :-h, h, 0], m.prices[r, h:])
+
+
+def test_regional_predictor_factory_decorrelates_regions():
+    m = vast_like_regions(2, seed=4, days=1)
+    pm = RegionalPredictor(
+        m, lambda tr, r: NoisyPredictor(tr, "fixed_uniform", 0.3, seed=r)
+    ).matrix(5)
+    assert pm.shape == (2, len(m), 6, 2)
+    # the present column is observed, never noised
+    np.testing.assert_array_equal(pm[0, :, 0, 0], m.prices[0])
+    # per-region noise streams differ (beyond the underlying trace diff)
+    err0 = pm[0, :-1, 1, 0] - m.prices[0, 1:]
+    err1 = pm[1, :-1, 1, 0] - m.prices[1, 1:]
+    assert not np.allclose(err0, err1)

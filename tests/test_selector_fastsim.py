@@ -9,12 +9,14 @@ from repro.core.job import normalize_utility
 from repro.core.market import constant_trace, vast_like_trace
 from repro.core.offline_opt import solve_offline
 from repro.core.policies import AHAP, AHAPParams, RandDeadline, RandDeadlineParams
+from repro.core.policies import uniform_commit_frac
 from repro.core.policy_pool import (
     baseline_specs,
     paper_pool,
     rand_deadline_pool,
     robust_pool,
     specs_to_arrays,
+    uniform_rand_deadline_pool,
 )
 from repro.core.predictor import NoisyPredictor, PerfectPredictor
 from repro.core.selector import (
@@ -129,6 +131,33 @@ def test_fast_sim_rand_deadline_matches_reference():
     arrs = specs_to_arrays(pool)
     for seed in range(3):
         tr = vast_like_trace(seed=20 + seed, days=1).window(0, 10)
+        prices, avail, pm = fast_sim.prepare_inputs(tr, None, JOB.deadline)
+        out = fast_sim.simulate_pool(
+            arrs, fast_sim.JobArrays.of(JOB), TPUT, prices, avail, pm
+        )
+        uj = np.asarray(out["utility"])
+        for i, spec in enumerate(pool):
+            r = simulate(spec.build(), JOB, TPUT, tr)
+            assert abs(r.utility - uj[i]) < 1e-2, (spec.name, r.utility, uj[i])
+
+
+def test_fast_sim_uniform_rand_deadline_matches_reference():
+    """The non-ski-rental RAND_DEADLINE family: quantile function F^{-1}(q)=q
+    rides the pool's cfrac hook (rand_deadline_pool(qs, qfn=...)). The fast
+    lanes must match the python RandDeadline built with the same explicit
+    commitment fraction — and the encoding must be the identity, distinct
+    from the ski-rental family's log1p curve."""
+    qs = (0.1, 0.35, 0.6, 0.85)
+    pool = uniform_rand_deadline_pool(qs)
+    arrs = specs_to_arrays(pool)
+    np.testing.assert_allclose(arrs["cfrac"], np.float32(qs))
+    ski = specs_to_arrays(rand_deadline_pool(qs))["cfrac"]
+    assert np.all(np.abs(arrs["cfrac"] - ski) > 1e-3)  # genuinely different
+    assert [uniform_commit_frac(q) for q in qs] == list(qs)
+    with pytest.raises(ValueError):  # a negative fraction would silently
+        rand_deadline_pool((0.5,), qfn=lambda q: q - 1.0)  # hit the sentinel
+    for seed in range(3):
+        tr = vast_like_trace(seed=40 + seed, days=1).window(0, 10)
         prices, avail, pm = fast_sim.prepare_inputs(tr, None, JOB.deadline)
         out = fast_sim.simulate_pool(
             arrs, fast_sim.JobArrays.of(JOB), TPUT, prices, avail, pm
