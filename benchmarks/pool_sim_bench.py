@@ -13,20 +13,30 @@ Measures slots * policies * jobs / sec over the paper's mixed workload
   pallas       the partitioned path with the fused Pallas window-DP kernel —
                one kernel launch per scan slot for the whole lane batch
                (interpret mode on CPU, compiled on TPU).
-  sharded      fast_sim.simulate_pool_jobs_sharded over every visible device
-               (identical to `partitioned` when one device is visible; force
+  sharded      fast_sim.simulate_pool_jobs_sharded over the POOL_SIM_MESH
+               pool mesh (default: 1-D jobs mesh over every visible device;
+               identical to `partitioned` when one device is visible; force
                more with XLA_FLAGS=--xla_force_host_platform_device_count=N).
+  sharded_lanes / sharded_2d   (multi-device only) the lanes-only
+               (1, n_dev) and balanced 2-D (a, b) pool meshes — the lane
+               axis is the parallelism frontier for small-jobs/huge-pool
+               workloads.
 
 `*_scale` rows rerun the XLA paths at the paper's Fig. 9/10 job counts
 (1000s of jobs; POOL_SIM_SCALE_JOBS to override). The seed path is not
 rerun at scale — it would take minutes; the 3x regression guard
 (tests/test_bench_regression.py) reads `speedup_partitioned_vs_seed` from
-the base workload.
+the base workload. `pool_sim_sharded_scale_vs_partitioned` is the
+multi-device scale ratio (partitioned_scale secs / sharded_scale secs,
+>= 1.0 means sharding pays for itself at Fig. 9/10 scale) — the guard's
+multi-device half pins it.
 
 Env knobs: POOL_SIM_JOBS, POOL_SIM_REPEAT, POOL_SIM_SCALE_JOBS,
-POOL_SIM_SCALE_REPEAT (0 skips the scale rows), POOL_SIM_JSON (redirect the
-JSON artifact — the regression guard uses this so its shrunken config never
-clobbers the tracked BENCH_pool_sim.json).
+POOL_SIM_SCALE_REPEAT (0 skips the scale rows), POOL_SIM_MESH ("4", "2x2",
+"1x4", ... — the mesh shape for the sharded rows; "auto"/unset = 1-D over
+all devices), POOL_SIM_JSON (redirect the JSON artifact — the regression
+guard uses this so its shrunken config never clobbers the tracked
+BENCH_pool_sim.json).
 
 Writes BENCH_pool_sim.json (machine-readable rows + speedups) so successive
 PRs can track the trajectory; also returned as benchmark rows for run.py.
@@ -88,6 +98,15 @@ def _bench(fn, repeat: int = REPEAT) -> float:
     return (time.perf_counter() - t0) / repeat
 
 
+def _balanced_2d(n_dev: int):
+    """Largest (a, b) factorization of n_dev with a <= b and a > 1, or None
+    (prime / single device — the lanes-only mesh already covers it)."""
+    for a in range(int(n_dev ** 0.5), 1, -1):
+        if n_dev % a == 0:
+            return (a, n_dev // a)
+    return None
+
+
 def run():
     from repro.core import fast_sim
     from repro.core.policy_pool import (
@@ -96,6 +115,7 @@ def run():
         rand_deadline_pool,
         specs_to_arrays,
     )
+    from repro.launch.mesh import make_pool_mesh, parse_pool_mesh_shape
 
     # 112 + 9 + 3: mixed AHAP/AHANP/RAND_DEADLINE/baseline
     pool = paper_pool() + rand_deadline_pool() + baseline_specs()
@@ -108,6 +128,8 @@ def run():
 
     on_tpu = jax.default_backend() == "tpu"
     pallas_backend = "pallas" if on_tpu else "pallas-interpret"
+    mesh_shape = parse_pool_mesh_shape(os.environ.get("POOL_SIM_MESH", ""))
+    pool_mesh = make_pool_mesh(shape=mesh_shape)
 
     kind, omega = jnp.asarray(arrs["kind"]), jnp.asarray(arrs["omega"])
     v_, sigma = jnp.asarray(arrs["v"]), jnp.asarray(arrs["sigma"])
@@ -139,9 +161,25 @@ def run():
             backend=pallas_backend,
         ),
         "sharded": lambda: fast_sim.simulate_pool_jobs_sharded(
-            arrs, stacked, PAPER_TPUT, prices, avail, preds, backend="xla"
+            arrs, stacked, PAPER_TPUT, prices, avail, preds, backend="xla",
+            mesh=pool_mesh,
         ),
     }
+    if n_dev > 1:
+        # the lane-axis frontier: all devices on lanes, and the balanced 2-D
+        # grid when the device count factors
+        lane_mesh = make_pool_mesh(shape=(1, n_dev))
+        paths["sharded_lanes"] = lambda: fast_sim.simulate_pool_jobs_sharded(
+            arrs, stacked, PAPER_TPUT, prices, avail, preds, backend="xla",
+            mesh=lane_mesh,
+        )
+        shape_2d = _balanced_2d(n_dev)
+        if shape_2d:
+            mesh_2d = make_pool_mesh(shape=shape_2d)
+            paths["sharded_2d"] = lambda: fast_sim.simulate_pool_jobs_sharded(
+                arrs, stacked, PAPER_TPUT, prices, avail, preds,
+                backend="xla", mesh=mesh_2d,
+            )
 
     secs, rows = {}, []
     for name, fn in paths.items():
@@ -163,7 +201,7 @@ def run():
             ),
             "sharded_scale": lambda: fast_sim.simulate_pool_jobs_sharded(
                 arrs, s_stacked, PAPER_TPUT, s_prices, s_avail, s_preds,
-                backend="xla",
+                backend="xla", mesh=pool_mesh,
             ),
         }
         for name, fn in scale_paths.items():
@@ -172,6 +210,13 @@ def run():
                 f"pool_sim_{name}", scale_secs[name] * 1e6,
                 scale_units / scale_secs[name],
             ))
+        # >= 1.0 means the sharded path is no slower than single-device
+        # partitioned at Fig. 9/10 scale (trivially ~1.0 on one device,
+        # where sharded falls back to the partitioned path)
+        rows.append((
+            "pool_sim_sharded_scale_vs_partitioned", 0.0,
+            scale_secs["partitioned_scale"] / scale_secs["sharded_scale"],
+        ))
 
     speedup = secs["seed"] / secs["partitioned"]
     rows.append(("pool_sim_partitioned_speedup", 0.0, speedup))
@@ -190,6 +235,7 @@ def run():
         },
         "backend": jax.default_backend(),
         "devices": n_dev,
+        "pool_mesh": "x".join(map(str, pool_mesh.devices.shape)),
         "pallas_mode": pallas_backend,
         "rows": [
             {"name": n, "us_per_call": us, "derived": d} for n, us, d in rows

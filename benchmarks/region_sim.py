@@ -21,7 +21,10 @@ the best fixed region even after paying for its moves. Rows are also folded
 into BENCH_pool_sim.json (region rows replaced in place, the rest of the
 file untouched).
 
-Env knobs: REGION_SIM_JOBS (default 16), REGION_SIM_REPEAT (default 3).
+Env knobs: REGION_SIM_JOBS (default 16), REGION_SIM_REPEAT (default 3);
+POOL_SIM_MESH picks the pool mesh for the sharded region entry point
+(shared with pool_sim_bench; single device falls back bitwise to the
+unsharded path).
 """
 from __future__ import annotations
 
@@ -111,7 +114,14 @@ def _update_bench_json(rows, extra):
 def run():
     from repro.core import fast_sim
     from repro.core.policy_pool import region_pool, specs_to_arrays
+    from repro.launch.mesh import make_pool_mesh, parse_pool_mesh_shape
 
+    # same mesh knob as pool_sim_bench: the sharded region entry falls back
+    # bitwise to simulate_pool_regions on one device, so the headline gain
+    # numbers are identical either way — only the throughput row scales
+    mesh = make_pool_mesh(
+        shape=parse_pool_mesh_shape(os.environ.get("POOL_SIM_MESH", ""))
+    )
     jobs, prices, avail, preds = _workload(N_JOBS)
     stacked = fast_sim.stack_jobs(jobs)
 
@@ -131,9 +141,9 @@ def run():
         single_util[r] = float(u.max())
         best_single = max(best_single, single_util[r])
 
-    region_fn = lambda: fast_sim.simulate_pool_regions(
+    region_fn = lambda: fast_sim.simulate_pool_regions_sharded(
         r_arrs, stacked, PAPER_TPUT, prices, avail, preds,
-        delta_mig=DELTA_MIG,
+        delta_mig=DELTA_MIG, mesh=mesh,
     )
     secs = _bench(region_fn)
     out = region_fn()

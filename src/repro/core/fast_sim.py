@@ -17,11 +17,17 @@ window DP, and the results are scattered back to the original pool order —
 the public API and semantics are unchanged.
 
 Multi-device: ``simulate_pool_jobs_sharded`` lays the (jobs x lanes) grid
-over a mesh (repro.launch.mesh.make_pool_mesh) with ``shard_map`` — jobs
-ride the mesh axis, and because the kind partition splits DP-heavy AHAP
-lanes from cheap lanes *before* sharding, every device carries the same
-AHAP/cheap mix (load balance is by construction). It falls back
-bitwise-identically to ``simulate_pool_jobs`` on a single device.
+over a mesh (repro.launch.mesh.make_pool_mesh) with ``shard_map``. On the
+default 1-D mesh jobs ride the single axis; a 2-D ``("jobs", "lanes")``
+mesh (``make_pool_mesh(shape=(a, b))``) additionally shards each kind
+partition's policy-lane axis — because the kind partition splits DP-heavy
+AHAP lanes from cheap lanes *before* sharding, every lane shard carries a
+uniform workload (load balance is by construction). Both entry points
+(``simulate_pool_jobs_sharded``, ``simulate_pool_regions_sharded``) pad
+both grid axes to divisibility and fall back bitwise-identically to their
+unsharded twins on a single device; the shard_map'd partition runners are
+built once per static config (``_sharded_pool_call``) so steady-state calls
+never retrace.
 
 ``simulate_one`` keeps the seed's monolithic all-kinds step (every decision
 rule evaluated at every slot, DP included) and doubles as the benchmark
@@ -426,14 +432,18 @@ def _simulate_lanes_ahap(omega, v, sigma, rho, j: JobArrays, tput,
     p = omega.shape[0]
     jcfg = _job_cfg(j)
     ts = jnp.arange(dmax)
+    # slot-major from the start: slots on the OUTER vmap, lanes inner, so the
+    # scan-xs layout (dmax leading) is the only one ever materialized. The
+    # old lane-major vmap + per-tensor swapaxes built the (P, dmax, ...)
+    # tensors AND their transposed copies at every scan boundary — at Fig.
+    # 9/10 scale (1000 jobs x 105 AHAP lanes) that doubled the largest
+    # buffers in the whole simulation for pure data movement.
     pr, thr_s, z_exp_end, eff_slots = jax.vmap(
-        lambda w, s, r: _ahap_precompute(j, w, s, r, ts, pred)
-    )(omega, sigma, rho)
-    # lane-major -> slot-major for the scan xs
-    pr = jnp.swapaxes(pr, 0, 1)                 # (dmax, P, W1MAX, 2)
-    thr_s = jnp.swapaxes(thr_s, 0, 1)           # (dmax, P, W1MAX)
-    z_exp_end = jnp.swapaxes(z_exp_end, 0, 1)   # (dmax, P)
-    eff_slots = jnp.swapaxes(eff_slots, 0, 1)   # (dmax, P)
+        lambda t, pm: jax.vmap(
+            lambda w, s, r: _ahap_precompute(j, w, s, r, t, pm)
+        )(omega, sigma, rho)
+    )(ts, pred)
+    # pr (dmax, P, W1MAX, 2); thr_s (dmax, P, W1MAX); rest (dmax, P)
 
     def step(carry, xs):
         z, n_prev, cost, done, T, plans = carry
@@ -606,11 +616,12 @@ def _scatter_merge(parts, index_arrays, axis: int):
     }
 
 
-def _run_partitioned(pool_arrays, ahap_call, cheap_call, axis: int,
-                     with_regions: bool = False):
-    """Shared partition -> dispatch -> scatter-back driver for every pool
-    entry point (axis is the policy-lane axis of the result leaves). With
-    ``with_regions`` the callbacks additionally receive the partition's
+def _partition_lane_args(pool_arrays: dict, with_regions: bool):
+    """(ahap_idx, other_idx, ahap_args, cheap_args): the per-partition lane
+    parameter tuples (numpy) shared by the local and sharded drivers —
+    slicing lives in ONE place so a new pool-array slot cannot be wired into
+    one driver and silently zero-defaulted in the other. With
+    ``with_regions`` each tuple additionally carries the partition's
     (rsel, rmargin) region-strategy slices (defaulting to stay-put lanes
     when the pool encoding predates the region slots)."""
     ahap_idx, other_idx, rho, cfrac = _partition(pool_arrays)
@@ -624,22 +635,28 @@ def _run_partitioned(pool_arrays, ahap_call, cheap_call, axis: int,
         rmargin = pool_arrays.get("rmargin")
         rmargin = (np.zeros(n, np.float32) if rmargin is None
                    else np.asarray(rmargin, np.float32))
-        extras = lambda idx: (jnp.asarray(rsel[idx]), jnp.asarray(rmargin[idx]))
+        extras = lambda idx: (rsel[idx], rmargin[idx])
+    ahap_args = (arr("omega")[ahap_idx], arr("v")[ahap_idx],
+                 arr("sigma")[ahap_idx], rho[ahap_idx], *extras(ahap_idx))
+    cheap_args = (arr("kind")[other_idx], arr("sigma")[other_idx],
+                  cfrac[other_idx], *extras(other_idx))
+    return ahap_idx, other_idx, ahap_args, cheap_args
+
+
+def _run_partitioned(pool_arrays, ahap_call, cheap_call, axis: int,
+                     with_regions: bool = False):
+    """Shared partition -> dispatch -> scatter-back driver for every
+    single-device pool entry point (axis is the policy-lane axis of the
+    result leaves; lane slicing in :func:`_partition_lane_args`)."""
+    ahap_idx, other_idx, ahap_args, cheap_args = _partition_lane_args(
+        pool_arrays, with_regions
+    )
     parts, idxs = [], []
     if ahap_idx.size:
-        parts.append(ahap_call(
-            jnp.asarray(arr("omega")[ahap_idx]), jnp.asarray(arr("v")[ahap_idx]),
-            jnp.asarray(arr("sigma")[ahap_idx]), jnp.asarray(rho[ahap_idx]),
-            *extras(ahap_idx),
-        ))
+        parts.append(ahap_call(*(jnp.asarray(a) for a in ahap_args)))
         idxs.append(ahap_idx)
     if other_idx.size:
-        parts.append(cheap_call(
-            jnp.asarray(arr("kind")[other_idx]),
-            jnp.asarray(arr("sigma")[other_idx]),
-            jnp.asarray(cfrac[other_idx]),
-            *extras(other_idx),
-        ))
+        parts.append(cheap_call(*(jnp.asarray(a) for a in cheap_args)))
         idxs.append(other_idx)
     return _scatter_merge(parts, idxs, axis=axis)
 
@@ -676,6 +693,123 @@ def simulate_pool_jobs(pool_arrays: dict, jobs: JobArrays, tput: ThroughputConfi
     )
 
 
+def _pad_leading(x, pad: int):
+    """Pad axis 0 by repeating the last entry ``pad`` times (dropped from the
+    result after the sharded run)."""
+    x = jnp.asarray(x)
+    if not pad:
+        return x
+    return jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)], axis=0)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_pool_call(mesh, tput, backend: str, delta_mig: int,
+                       with_regions: bool, ahap: bool, lspec, jspec, ospec):
+    """jit(shard_map)-wrapped runner for one kind partition, cached on the
+    static configuration. The cache is what keeps the sharded path's
+    per-call cost at dispatch level: a fresh shard_map closure per call
+    would retrace (and re-lower) the whole pool program every invocation —
+    the prime mover of the old 1000-job sharded-scale regression."""
+    from jax.experimental.shard_map import shard_map
+
+    if ahap and with_regions:
+        def local(w, v_, s, r, rs, rm, jb, pr_, av_, pm_):
+            return _pool_jobs_ahap_regions(
+                w, v_, s, r, rs, rm, jb, tput, pr_, av_, pm_, backend,
+                delta_mig,
+            )
+        n_lane = 6
+    elif ahap:
+        def local(w, v_, s, r, jb, pr_, av_, pm_):
+            return _pool_jobs_ahap(w, v_, s, r, jb, tput, pr_, av_, pm_,
+                                   backend)
+        n_lane = 4
+    elif with_regions:
+        def local(k, s, c, rs, rm, jb, pr_, av_, pm_):
+            return _pool_jobs_cheap_regions(
+                k, s, c, rs, rm, jb, tput, pr_, av_, pm_, delta_mig
+            )
+        n_lane = 5
+    else:
+        # pm_ rides along unused: cheap lanes take no forecasts
+        def local(k, s, c, jb, pr_, av_, pm_):
+            return _pool_jobs_cheap(k, s, c, jb, tput, pr_, av_)
+        n_lane = 3
+    return jax.jit(shard_map(
+        local, mesh=mesh,
+        in_specs=(lspec,) * n_lane + (jspec,) * 4,
+        out_specs=ospec, check_rep=False,
+    ))
+
+
+def _run_partitioned_sharded(pool_arrays, jobs, tput, prices, avail, pred,
+                             backend: str, mesh, *, with_regions: bool = False,
+                             delta_mig: int = 0):
+    """Sharded twin of :func:`_run_partitioned`: partition by kind on the
+    host, then lay each partition's (jobs x lanes) grid over ``mesh``.
+
+    Jobs shard the mesh's job axes; on a 2-D ``("jobs", "lanes")`` pool mesh
+    (launch.mesh.make_pool_mesh(shape=(a, b))) each partition's policy-lane
+    axis additionally shards over ``"lanes"`` — the kind split happens
+    first, so a lane shard is uniformly DP-heavy (AHAP) or uniformly cheap.
+    Both axes pad to divisibility by repeating the last entry; padding is
+    dropped before the scatter-merge back to pool order. Market data
+    (prices/avail/pred) is sharded over jobs and replicated only across the
+    lane axis, where every lane shard genuinely needs all of it."""
+    from repro import sharding as shardlib
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_lane_dev = int(sizes.get("lanes", 1))
+    jobs_axes = tuple(a for a in mesh.axis_names if a != "lanes")
+    n_jobs_dev = int(np.prod([sizes[a] for a in jobs_axes])) if jobs_axes else 1
+
+    n_jobs = int(np.shape(jobs.workload)[0])
+    pad_j = (-n_jobs) % n_jobs_dev
+    if pad_j:
+        jobs = JobArrays(*[_pad_leading(f, pad_j) for f in jobs])
+        prices, avail, pred = (
+            _pad_leading(x, pad_j) for x in (prices, avail, pred)
+        )
+    # resolve the logical axes against the mesh (divisibility always holds
+    # after padding; a non-matching mesh degrades to replication)
+    rules = {**shardlib.DEFAULT_RULES, "jobs": jobs_axes}
+    jspec = shardlib.resolve_spec(("jobs",), (n_jobs + pad_j,), mesh, rules)
+
+    ahap_idx, other_idx, ahap_args, cheap_args = _partition_lane_args(
+        pool_arrays, with_regions
+    )
+    pr_j, av_j, pm_j = (jnp.asarray(x) for x in (prices, avail, pred))
+
+    def run_part(ahap: bool, lane_arrays):
+        p_l = int(np.shape(lane_arrays[0])[0])
+        pad_l = (-p_l) % n_lane_dev
+        lane_in = tuple(_pad_leading(a, pad_l) for a in lane_arrays)
+        lspec = shardlib.resolve_spec(("lanes",), (p_l + pad_l,), mesh, rules)
+        ospec = shardlib.resolve_spec(
+            ("jobs", "lanes"), (n_jobs + pad_j, p_l + pad_l), mesh, rules
+        )
+        call = _sharded_pool_call(
+            mesh, tput, backend, int(delta_mig), with_regions, ahap,
+            lspec, jspec, ospec,
+        )
+        out = call(*lane_in, jobs, pr_j, av_j, pm_j)
+        if pad_l:
+            out = {k: v[:, :p_l] for k, v in out.items()}
+        return out
+
+    parts, idxs = [], []
+    if ahap_idx.size:
+        parts.append(run_part(True, ahap_args))
+        idxs.append(ahap_idx)
+    if other_idx.size:
+        parts.append(run_part(False, cheap_args))
+        idxs.append(other_idx)
+    out = _scatter_merge(parts, idxs, axis=1)
+    if pad_j:
+        out = {k: v[:n_jobs] for k, v in out.items()}
+    return out
+
+
 def simulate_pool_jobs_sharded(
     pool_arrays: dict,
     jobs: JobArrays,
@@ -686,66 +820,33 @@ def simulate_pool_jobs_sharded(
 ):
     """Device-sharded :func:`simulate_pool_jobs`: the (jobs x lanes) grid is
     laid over ``mesh`` (default: repro.launch.mesh.make_pool_mesh over every
-    visible device) with ``shard_map`` — jobs ride the mesh axis, lanes stay
-    whole per device. The kind partition happens *before* sharding, so each
-    device runs the same DP-heavy-AHAP / cheap lane mix on its job shard
-    (load balance by construction). Job counts that do not divide the device
-    count are padded by repeating the last job and the padding is dropped
-    from the result.
+    visible device, jobs-only). On a 1-D mesh jobs ride the mesh axis and
+    lanes stay whole per device; a 2-D ``("jobs", "lanes")`` mesh
+    (``make_pool_mesh(shape=(a, b))``) additionally shards each kind
+    partition's lane axis — for small job counts with huge pools the lane
+    axis is where the parallelism is. The kind partition happens *before*
+    sharding, so each device runs a uniform DP-heavy-AHAP or cheap lane
+    slice of its job shard (load balance by construction). Jobs and lanes
+    that do not divide their mesh axis are padded by repeating the last
+    entry; padding is dropped from the result.
 
-    Per-job lanes are independent and every op is elementwise over jobs, so
-    the result is BITWISE-equal to ``simulate_pool_jobs`` (pinned in
-    tests/test_sharded_pool.py). With one visible device this falls through
-    to ``simulate_pool_jobs`` itself.
+    Per-(job, lane) cells are independent and every op is elementwise over
+    both axes, so the result is BITWISE-equal to ``simulate_pool_jobs``
+    (pinned in tests/test_sharded_pool.py for the jobs, lanes and 2-D
+    layouts). With one visible device this falls through to
+    ``simulate_pool_jobs`` itself.
     """
-    from jax.experimental.shard_map import shard_map
-
-    from repro import sharding as shardlib
     from repro.launch.mesh import make_pool_mesh
 
     if mesh is None:
         mesh = make_pool_mesh()
-    n_dev = int(np.prod(mesh.devices.shape))
-    if n_dev == 1:
+    if int(np.prod(mesh.devices.shape)) == 1:
         return simulate_pool_jobs(
             pool_arrays, jobs, tput, prices, avail, pred, backend=backend
         )
-
-    n_jobs = int(np.shape(jobs.workload)[0])
-    pad = (-n_jobs) % n_dev
-    if pad:
-        rep = lambda x: jnp.concatenate(
-            [jnp.asarray(x), jnp.repeat(jnp.asarray(x)[-1:], pad, axis=0)],
-            axis=0,
-        )
-        jobs = JobArrays(*[rep(f) for f in jobs])
-        prices, avail, pred = rep(prices), rep(avail), rep(pred)
-
-    # resolve the logical "jobs" axis against the mesh (divisibility always
-    # holds after padding; a non-matching mesh degrades to replication)
-    jspec = shardlib.resolve_spec(
-        ("jobs",), (n_jobs + pad,), mesh,
-        {**shardlib.DEFAULT_RULES, "jobs": mesh.axis_names},
+    return _run_partitioned_sharded(
+        pool_arrays, jobs, tput, prices, avail, pred, backend, mesh
     )
-
-    def _local(jb, pr_, av_, pm_):
-        return _run_partitioned(
-            pool_arrays,
-            lambda w, v, s, r: _pool_jobs_ahap(
-                w, v, s, r, jb, tput, pr_, av_, pm_, backend
-            ),
-            lambda k, s, c: _pool_jobs_cheap(k, s, c, jb, tput, pr_, av_),
-            axis=1,
-        )
-
-    out = shard_map(
-        _local, mesh=mesh,
-        in_specs=(jspec, jspec, jspec, jspec),
-        out_specs=jspec, check_rep=False,
-    )(jobs, jnp.asarray(prices), jnp.asarray(avail), jnp.asarray(pred))
-    if pad:
-        out = {k: v[:n_jobs] for k, v in out.items()}
-    return out
 
 
 # ---------------------------------------------------------------------------
@@ -818,15 +919,18 @@ def _simulate_lanes_ahap_regions(omega, v, sigma, rho, rsel, rmargin,
     jcfg = _job_cfg(j)
     ts = jnp.arange(dmax)
     av_i = avail.astype(jnp.int32)
-    # _ahap_precompute broadcasts over pred's leading region axis: pr/thr_s
-    # gain an R axis, z_exp_end/eff_slots stay region-independent.
+    # slot-major from the start (see _simulate_lanes_ahap): the (R, dmax)
+    # raw forecast stack is transposed ONCE (small), then slots ride the
+    # outer vmap so the big per-(slot, lane, region) tensors are born in
+    # scan-xs layout — the old lane-major vmap built (P, R, dmax, ...)
+    # tensors and 5-D transposed copies of them at every scan boundary.
+    pred_sm = jnp.swapaxes(pred, 0, 1)           # (dmax, R, W1MAX, 2)
     pr, thr_s, z_exp_end, eff_slots = jax.vmap(
-        lambda w, s, r: _ahap_precompute(j, w, s, r, ts, pred)
-    )(omega, sigma, rho)
-    pr = jnp.transpose(pr, (2, 0, 1, 3, 4))      # (dmax, P, R, W1MAX, 2)
-    thr_s = jnp.transpose(thr_s, (2, 0, 1, 3))   # (dmax, P, R, W1MAX)
-    z_exp_end = jnp.swapaxes(z_exp_end, 0, 1)    # (dmax, P)
-    eff_slots = jnp.swapaxes(eff_slots, 0, 1)    # (dmax, P)
+        lambda t, pm: jax.vmap(
+            lambda w, s, r: _ahap_precompute(j, w, s, r, t, pm)
+        )(omega, sigma, rho)
+    )(ts, pred_sm)
+    # pr (dmax, P, R, W1MAX, 2); thr_s (dmax, P, R, W1MAX); rest (dmax, P)
     sc = _region_scores(j, prices, av_i, pred)[:, rsel]  # (dmax, P, R)
     lane = jnp.arange(p)
 
@@ -988,6 +1092,38 @@ def simulate_pool_regions(pool_arrays: dict, jobs: JobArrays,
             k, s, c, rs, rm, jobs, tput, prices, avail, pred, delta_mig,
         ),
         axis=1, with_regions=True,
+    )
+
+
+def simulate_pool_regions_sharded(
+    pool_arrays: dict,
+    jobs: JobArrays,
+    tput: ThroughputConfig,
+    prices, avail, pred,
+    backend: str = "xla",
+    *,
+    delta_mig: int,
+    mesh=None,
+):
+    """Device-sharded :func:`simulate_pool_regions`: jobs (and, on a 2-D
+    pool mesh, lanes) shard exactly as in
+    :func:`simulate_pool_jobs_sharded`; the small region axis rides along
+    whole per device inside the (J, R, T) market tensors. BITWISE-equal to
+    ``simulate_pool_regions`` (pinned in tests/test_region_sim.py and the
+    forced-4-device subprocess in tests/test_sharded_pool.py); falls
+    through to it on one device."""
+    from repro.launch.mesh import make_pool_mesh
+
+    if mesh is None:
+        mesh = make_pool_mesh()
+    if int(np.prod(mesh.devices.shape)) == 1:
+        return simulate_pool_regions(
+            pool_arrays, jobs, tput, prices, avail, pred, backend=backend,
+            delta_mig=delta_mig,
+        )
+    return _run_partitioned_sharded(
+        pool_arrays, jobs, tput, prices, avail, pred, backend, mesh,
+        with_regions=True, delta_mig=int(delta_mig),
     )
 
 

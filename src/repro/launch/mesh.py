@@ -30,14 +30,41 @@ def make_cpu_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
-def make_pool_mesh(devices=None):
-    """1-D mesh for the policy-pool simulator: jobs ride the single mesh
-    axis (``"jobs"``), lanes stay whole per device — the kind-partitioned
-    lane split already balances DP-heavy vs cheap work within each device.
-    Defaults to every visible device; works unchanged on 1 CPU device
-    (tests), a forced-multi-device host, and a TPU slice."""
+def make_pool_mesh(devices=None, shape=None):
+    """Mesh for the policy-pool simulator.
+
+    Default (``shape=None``): 1-D over every visible device, jobs ride the
+    single ``"jobs"`` axis and lanes stay whole per device — the
+    kind-partitioned lane split already balances DP-heavy vs cheap work
+    within each device.
+
+    ``shape=(n_jobs_dev, n_lane_dev)`` builds the 2-D ``("jobs", "lanes")``
+    mesh instead: jobs shard the first axis, AHAP/cheap lanes the second
+    (``fast_sim.simulate_pool_jobs_sharded`` pads both axes to divisibility).
+    ``shape=(n,)`` is the explicit 1-D form. The shape must multiply out to
+    the device count. Works unchanged on 1 CPU device (tests), a
+    forced-multi-device host, and a TPU slice."""
     from jax.sharding import Mesh
     import numpy as np
 
     devices = jax.devices() if devices is None else list(devices)
-    return Mesh(np.asarray(devices), ("jobs",))
+    if shape is None:
+        shape = (len(devices),)
+    shape = tuple(int(s) for s in shape)
+    if len(shape) not in (1, 2) or any(s < 1 for s in shape):
+        raise ValueError(f"pool mesh shape must be (jobs,) or (jobs, lanes): {shape}")
+    if int(np.prod(shape)) != len(devices):
+        raise ValueError(
+            f"pool mesh shape {shape} does not cover {len(devices)} devices"
+        )
+    axes = ("jobs", "lanes")[: len(shape)]
+    return Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def parse_pool_mesh_shape(spec: str):
+    """``"4"`` -> (4,), ``"2x2"`` -> (2, 2) — the POOL_SIM_MESH knob format.
+    Empty/``"auto"`` -> None (make_pool_mesh's 1-D default)."""
+    spec = (spec or "").strip().lower()
+    if spec in ("", "auto"):
+        return None
+    return tuple(int(s) for s in spec.split("x"))

@@ -39,10 +39,12 @@ DEFAULT_RULES = {
     "pos": (),
     # policy-pool simulator (fast_sim.simulate_pool_jobs_sharded): jobs ride
     # the pool mesh's "jobs" axis (or the production data axes when the pool
-    # sim runs inside the training mesh); lanes stay per-device — the kind
-    # partition already balances DP-heavy AHAP lanes against cheap lanes.
+    # sim runs inside the training mesh). On a 2-D (jobs, lanes) pool mesh
+    # (launch.mesh.make_pool_mesh(shape=(a, b))) the policy-lane axis shards
+    # over "lanes" — the kind partition isolates AHAP from cheap lanes first,
+    # so every lane shard carries a uniform DP-heavy or cheap workload.
     "jobs": ("jobs", "pod", "data"),
-    "lanes": (),
+    "lanes": ("lanes",),
     # weights
     "fsdp": ("data",),
     "tensor": ("model",),

@@ -1,19 +1,24 @@
-"""Opt-in CI-style perf regression guard for the pool simulator.
+"""Opt-in CI-style perf regression guards for the pool simulator.
 
 The ROADMAP pins the kind-partitioned path at >= 3x the seed monolithic
-path; this test runs a small ``pool_sim_bench`` config through
-``benchmarks/run.py --json`` (the same entry point CI would use) and fails
-if the speedup drops below the bar.
+path, and (since the 2-D mesh PR) the sharded path at >= 1x the partitioned
+path at Fig. 9/10 scale on multiple devices — the 1000-job sharded-scale
+regression (0.63x, retrace-per-call + lane-major scan-boundary transposes)
+must not silently return. Both guards run a ``pool_sim_bench`` config
+through ``benchmarks/run.py --json`` (the same entry point CI would use)
+and fail if their row drops below the bar; the multi-device guard forces 4
+host devices in its subprocess (the forcing flag is forbidden in the main
+test process by conftest).
 
 Timing is meaningless under tier-1's parallel/contended conditions, so the
-test is opt-in:
+tests are opt-in:
 
     RUN_BENCH_REGRESSION=1 PYTHONPATH=src python -m pytest -q \
         tests/test_bench_regression.py
 
 Knobs: POOL_SIM_JOBS / POOL_SIM_REPEAT / POOL_SIM_SCALE_JOBS /
-POOL_SIM_SCALE_REPEAT shrink the workload (the guard sets small defaults
-for itself below).
+POOL_SIM_SCALE_REPEAT / POOL_SIM_MESH shrink or reshape the workload (the
+guards set small defaults for themselves below).
 """
 import json
 import os
@@ -24,6 +29,8 @@ import tempfile
 import pytest
 
 MIN_SPEEDUP = 3.0
+# sharded must be no slower than partitioned at scale; == 1.0 is "no slower"
+MIN_SCALE_RATIO = 1.0
 
 pytestmark = pytest.mark.skipif(
     os.environ.get("RUN_BENCH_REGRESSION", "") != "1",
@@ -33,17 +40,19 @@ pytestmark = pytest.mark.skipif(
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def test_partitioned_speedup_at_least_3x_seed():
+def _run_pool_bench(defaults: dict, force: dict = {}) -> dict:
+    """Drive ``benchmarks.run --only pool_sim --json`` in a subprocess and
+    return the parsed payload. ``defaults`` yield to caller env (workload
+    knobs); ``force`` always wins (the device-forcing XLA flag)."""
     env = dict(os.environ)
     env["JAX_PLATFORMS"] = "cpu"
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(ROOT, "src"), ROOT]
         + env.get("PYTHONPATH", "").split(os.pathsep)
     ).rstrip(os.pathsep)
-    # small-but-representative workload; scale rows off to keep this quick
-    env.setdefault("POOL_SIM_JOBS", "4")
-    env.setdefault("POOL_SIM_REPEAT", "3")
-    env.setdefault("POOL_SIM_SCALE_REPEAT", "0")
+    for k, v in defaults.items():
+        env.setdefault(k, v)
+    env.update(force)
     with tempfile.TemporaryDirectory() as td:
         out_json = os.path.join(td, "bench.json")
         # keep the tracked BENCH_pool_sim.json artifact out of reach of the
@@ -59,8 +68,17 @@ def test_partitioned_speedup_at_least_3x_seed():
         )
         with open(out_json) as f:
             payload = json.load(f)
-
     assert payload["backend"] == "cpu"
+    return payload
+
+
+def test_partitioned_speedup_at_least_3x_seed():
+    # small-but-representative workload; scale rows off to keep this quick
+    payload = _run_pool_bench({
+        "POOL_SIM_JOBS": "4",
+        "POOL_SIM_REPEAT": "3",
+        "POOL_SIM_SCALE_REPEAT": "0",
+    })
     rows = {r["name"]: r for r in payload["rows"]}
     assert "pool_sim_partitioned_speedup" in rows, sorted(rows)
     speedup = rows["pool_sim_partitioned_speedup"]["derived"]
@@ -71,3 +89,40 @@ def test_partitioned_speedup_at_least_3x_seed():
     # the sharded row must be present (single-device fallback included) —
     # it is the row successive PRs track for multi-device scaling
     assert "pool_sim_sharded" in rows, sorted(rows)
+
+
+def test_sharded_scale_not_slower_than_partitioned_4dev():
+    """The 0.63x guard: on multiple devices the sharded path must be no
+    slower than single-device partitioned at Fig. 9/10 job counts. Forces 4
+    host devices in the bench subprocess (the bench itself runs unchanged);
+    the ratio row compares the two paths measured back-to-back in the same
+    process, so host-level noise largely cancels."""
+    # POOL_SIM_SCALE_REPEAT=0 / POOL_SIM_SCALE_JOBS=0 skip the scale rows
+    # elsewhere, but this guard is meaningless without them — force both
+    # positive (caller values above zero still shrink the workload)
+    def _positive(knob: str, fallback: str) -> str:
+        val = os.environ.get(knob, fallback)
+        return val if int(val) > 0 else fallback
+
+    payload = _run_pool_bench(
+        defaults={
+            "POOL_SIM_JOBS": "4",
+            "POOL_SIM_REPEAT": "2",
+        },
+        force={
+            "POOL_SIM_SCALE_JOBS": _positive("POOL_SIM_SCALE_JOBS", "1000"),
+            "POOL_SIM_SCALE_REPEAT": _positive("POOL_SIM_SCALE_REPEAT", "2"),
+            "XLA_FLAGS": (os.environ.get("XLA_FLAGS", "")
+                          + " --xla_force_host_platform_device_count=4"
+                          ).strip(),
+        },
+    )
+    assert payload["devices"] == 4, payload["devices"]
+    rows = {r["name"]: r for r in payload["rows"]}
+    assert "pool_sim_sharded_scale_vs_partitioned" in rows, sorted(rows)
+    ratio = rows["pool_sim_sharded_scale_vs_partitioned"]["derived"]
+    assert ratio >= MIN_SCALE_RATIO, (
+        f"sharded scale path regressed: {ratio:.2f}x < {MIN_SCALE_RATIO}x "
+        f"partitioned at {payload['workload']['scale_jobs']} jobs\n"
+        f"rows: { {n: r['derived'] for n, r in rows.items()} }"
+    )

@@ -73,6 +73,39 @@ def test_r1_bitwise_parity_with_simulate_pool_jobs():
     assert np.all(np.asarray(regional["region"]) == 0)
 
 
+def test_regions_sharded_single_device_fallback_bitwise():
+    """simulate_pool_regions_sharded must fall through to (and bitwise-match)
+    simulate_pool_regions on one visible device, for the default mesh and
+    explicit 1-device meshes of either rank. The real multi-device parity
+    (jobs / lanes / 2-D layouts under 4 forced host devices) runs in the
+    tests/test_sharded_pool.py subprocess."""
+    import jax
+
+    from repro.launch.mesh import make_pool_mesh
+
+    assert jax.device_count() == 1
+    mkt = vast_like_regions(3, seed=5, days=1).window(0, 11)
+    rpred = RegionalPredictor(
+        mkt, lambda t, r: NoisyPredictor(t, "fixed_uniform", 0.2, seed=r)
+    ).matrix(fast_sim.W1MAX - 1)
+    arrs = specs_to_arrays(region_pool())
+    rp, ra, rpm = fast_sim.prepare_inputs_regions(mkt, rpred, JOB.deadline)
+    stacked = fast_sim.stack_jobs([JOB])
+    tile = lambda x: np.asarray(x)[None]
+    base = fast_sim.simulate_pool_regions(
+        arrs, stacked, TPUT, tile(rp), tile(ra), tile(rpm), delta_mig=1
+    )
+    for mesh in (None, make_pool_mesh(), make_pool_mesh(shape=(1, 1))):
+        sh = fast_sim.simulate_pool_regions_sharded(
+            arrs, stacked, TPUT, tile(rp), tile(ra), tile(rpm),
+            delta_mig=1, mesh=mesh,
+        )
+        for k in base:
+            np.testing.assert_array_equal(
+                np.asarray(base[k]), np.asarray(sh[k]), err_msg=k
+            )
+
+
 def test_region_lanes_match_python_reference():
     """Every region_pool lane (AHAP/AHANP/MSU/UP x strategy x margin) agrees
     with the python reference simulator (simulate_regional +
