@@ -6,16 +6,17 @@ deadlines. Discounting predicted (not observed) availability by rho < 1
 hedges at a small cost in spot utilization. We evaluate the best plain-AHAP
 vs the best Robust-AHAP over the pool for each noise regime/level, and show
 the EG selector over the extended pool (112 + 24) picks robust variants
-exactly when noise is heavy.
+exactly when noise is heavy. One ``engine.simulate_and_select`` call per
+setting (the selection engine carries the EG scan on device).
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import timed
-from benchmarks.fig9_convergence import _utilities_matrix
+from benchmarks.fig9_convergence import _run_setting
 from repro.core.policy_pool import paper_pool, robust_pool
-from repro.core.selector import init_selector, update
+from repro.core.selector import best_policy
 
 SETTINGS = [
     ("fixed_uniform", 0.1),
@@ -36,8 +37,8 @@ def run() -> list:
     rows = []
     wins = 0
     for kind, level in SETTINGS:
-        (u, un), us = timed(_utilities_matrix, pool, kind, level, N_JOBS, seed=77)
-        mean_u = u.mean(axis=0)
+        res, us = timed(_run_setting, pool, kind, level, N_JOBS, seed=77)
+        mean_u = res.mean_utility
         best_plain = float(mean_u[is_plain_ahap].max())
         best_robust = float(mean_u[is_robust].max())
         gain = 100.0 * (best_robust - best_plain) / abs(best_plain)
@@ -46,10 +47,7 @@ def run() -> list:
         rows.append((f"robust_{tag}_best_robust_ahap", us, best_robust))
         rows.append((f"robust_{tag}_gain_pct", 0.0, gain))
         # does the selector actually pick a robust variant?
-        st = init_selector(len(pool), N_JOBS)
-        for k in range(N_JOBS):
-            st = update(st, un[k])
-        picked = int(np.argmax(st.weights))
+        picked = best_policy(res.state)
         rows.append((f"robust_{tag}_selector_picks_robust", 0.0,
                      float(is_robust[picked])))
         if level >= 0.6:

@@ -28,21 +28,72 @@ def timed(fn: Callable, *args, repeat: int = 1, **kw):
     return out, dt * 1e6  # us
 
 
+def job_stream_arrays(rng: np.random.Generator, n: int, deadline: int = 10):
+    """Fig. 9 job distribution as stacked fast_sim.JobArrays — ONE vectorized
+    rng call per field (the engine-scale path; no per-job python loop).
+    L ~ U[70,120], Nmin in [1,4), Nmax in [12,17); value/gamma/on-demand
+    price from the paper job. Leaf dtypes match fast_sim.stack_jobs, so
+    ``stack_jobs(list(job_stream(rng, n)))`` equals
+    ``job_stream_arrays(rng2, n)`` bitwise for equal rng states."""
+    from repro.core.fast_sim import JobArrays
+
+    cfg = JobConfig(deadline=deadline, value=PAPER_JOB.value)
+    return JobArrays(
+        workload=rng.uniform(70, 120, n).astype(np.float32),
+        deadline=np.full(n, cfg.deadline, np.int32),
+        n_min=rng.integers(1, 4, n).astype(np.int32),
+        n_max=rng.integers(12, 17, n).astype(np.int32),
+        value=np.full(n, cfg.value, np.float32),
+        gamma=np.full(n, cfg.gamma, np.float32),
+        p_o=np.full(n, cfg.on_demand_price, np.float32),
+    )
+
+
 def job_stream(rng: np.random.Generator, n: int, deadline: int = 10):
-    """Fig. 9 job distribution: L ~ U[70,120], Nmin in [1,4), Nmax in [12,17)."""
-    for _ in range(n):
+    """Fig. 9 job distribution as JobConfig rows — delegates to
+    :func:`job_stream_arrays` so figure scripts and the engine benchmarks
+    draw identical jobs from equal rng states (note: the delegation draws
+    each field in one vectorized call, so the stream consumption differs
+    from the pre-engine per-job loop)."""
+    arrs = job_stream_arrays(rng, n, deadline)
+    for k in range(n):
         yield JobConfig(
-            workload=float(rng.uniform(70, 120)),
-            deadline=deadline,
-            n_min=int(rng.integers(1, 4)),
-            n_max=int(rng.integers(12, 17)),
-            value=PAPER_JOB.value,
+            workload=float(arrs.workload[k]),
+            deadline=int(arrs.deadline[k]),
+            n_min=int(arrs.n_min[k]),
+            n_max=int(arrs.n_max[k]),
+            value=float(arrs.value[k]),
+            gamma=float(arrs.gamma[k]),
+            on_demand_price=float(arrs.p_o[k]),
         )
 
 
 def print_rows(rows: List[Row]):
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived:.6g}")
+
+
+def merge_bench_rows(json_path: str, prefix: str, key: str, rows: List[Row],
+                     extra: dict) -> None:
+    """Fold one module's rows into a shared BENCH json in place: rows whose
+    name starts with ``prefix`` are replaced, everything else is untouched,
+    and the module's non-row extras live under the single top-level ``key``
+    (so pool_sim_bench's full rewrite has one thing per module to carry
+    over). Shared by region_sim and selection_e2e."""
+    import json
+
+    try:
+        with open(json_path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        payload = {"rows": []}
+    payload["rows"] = [
+        r for r in payload.get("rows", [])
+        if not str(r.get("name", "")).startswith(prefix)
+    ] + [{"name": n, "us_per_call": us, "derived": d} for n, us, d in rows]
+    payload[key] = extra
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
 
 
 # ---------------------------------------------------------------------------

@@ -1,20 +1,21 @@
 """Fig. 10: policy-weight dynamics under changing prediction quality.
 
 Four phases (paper): Fixed-Mag+Uniform 10% -> Fixed-Mag+Heavy-Tail 30% ->
-Fixed-Mag+Uniform 50% -> 200% noise. The selector re-converges to a new
-policy each phase; the weight-history heatmap data is saved to
-experiments/fig10_weights.npz.
-"""
+Fixed-Mag+Uniform 50% -> 200% noise. One ``engine.simulate_and_select``
+call per phase, the EG state threading through the phases (the engine's
+streaming contract); ``track_history`` captures the per-job weight
+trajectory on device and the heatmap data is saved to
+experiments/fig10_weights.npz."""
 from __future__ import annotations
 
 import os
 
 import numpy as np
 
-from benchmarks.common import PAPER_TPUT, job_stream, timed
-from benchmarks.fig9_convergence import _utilities_matrix
-from repro.core.policy_pool import paper_pool
-from repro.core.selector import init_selector, update
+from benchmarks.common import PAPER_TPUT, timed
+from benchmarks.fig9_convergence import _engine_inputs
+from repro.core import engine, selector
+from repro.core.policy_pool import paper_pool, specs_to_arrays
 
 PHASES = [
     ("fixed_uniform", 0.1, 500),
@@ -26,20 +27,27 @@ PHASES = [
 
 def run() -> list:
     pool = paper_pool()
+    arrs = specs_to_arrays(pool)
     M = len(pool)
     K = sum(p[2] for p in PHASES)
-    st = init_selector(M, K, track_history=True)
+    st = selector.eg_init(M, K)
+    hist_parts = [np.full((1, M), 1.0 / M, np.float32)]  # initial weights
     phase_winners = []
     t0 = 0.0
     for i, (kind, level, n) in enumerate(PHASES):
-        (u, un), us = timed(_utilities_matrix, pool, kind, level, n, seed=31 + i)
-        t0 += us
-        for k in range(n):
-            st = update(st, un[k], track_history=True)
-        phase_winners.append(int(np.argmax(st.weights)))
+        inputs, us_prep = timed(_engine_inputs, kind, level, n, 31 + i)
+        jobs, prices, avail, preds = inputs
+        res, us = timed(
+            engine.simulate_and_select, arrs, jobs, PAPER_TPUT,
+            prices, avail, preds, state=st, track_history=True,
+        )
+        t0 += us_prep + us
+        st = res.state
+        hist_parts.append(res.weight_history)
+        phase_winners.append(selector.best_policy(st))
 
     os.makedirs("experiments", exist_ok=True)
-    hist = np.stack(st.weight_history)  # (K+1, M)
+    hist = np.concatenate(hist_parts)  # (K+1, M)
     np.savez_compressed(
         "experiments/fig10_weights.npz",
         weights=hist.astype(np.float32),

@@ -3,63 +3,46 @@ noise regimes, plus the fixed-hyperparameter ablation pools (fixed v=1 /
 fixed sigma=0.9).
 
 1000 jobs per setting (paper's count), workloads U[70,120], deadline 10,
-Nmin in [1,4], Nmax in [12,16]. The whole 112-policy x 1000-job workload is
-ONE vmapped simulate_pool_jobs call per setting.
-"""
+Nmin in [1,4], Nmax in [12,16]. Each setting is ONE
+``engine.simulate_and_select`` call: batched prep (vectorized window gather
++ one noisy forecast stack), the sharded pool simulation of the whole
+112-policy x 1000-job grid, and the jitted EG scan — the (K, M) utility
+matrix never visits host numpy (pre-engine, prep + normalization + the
+selector update ran as per-job python loops)."""
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import PAPER_TPUT, job_stream, paper_market, timed
-from repro.core import fast_sim
-from repro.core.job import normalize_utility
+from benchmarks.common import PAPER_TPUT, job_stream_arrays, paper_market, timed
+from repro.core import engine
 from repro.core.policy_pool import paper_pool, specs_to_arrays
-from repro.core.predictor import NoisyPredictor
-from repro.core.selector import best_policy, init_selector, regret, regret_bound, update
 
 N_JOBS = 1000
 
 
-def _utilities_matrix(pool_specs, kind: str, level: float, n_jobs: int, seed: int):
-    """(K, M) raw utilities of every policy on every job."""
+def _engine_inputs(kind: str, level: float, n_jobs: int, seed: int):
+    """The Fig. 9 workload, fully batched: vectorized job draws, one
+    window-gather over the market, one noisy forecast stack (per-job
+    predictor seeds stay ``seed * 100003 + k``)."""
     rng = np.random.default_rng(seed)
     trace = paper_market(seed=21, days=40)
-    jobs = list(job_stream(rng, n_jobs))
-    d = jobs[0].deadline
-    trs, preds = [], []
-    for k in range(n_jobs):
-        t0 = int(rng.integers(0, len(trace) - d - 1))
-        w = trace.window(t0, d + 1)
-        trs.append(w)
-        preds.append(
-            NoisyPredictor(w, kind, level, seed=seed * 100003 + k).matrix(
-                fast_sim.W1MAX - 1
-            )[:d]
-        )
-    arrs = specs_to_arrays(pool_specs)
-    out = fast_sim.simulate_pool_jobs(
-        arrs, fast_sim.stack_jobs(jobs), PAPER_TPUT,
-        np.stack([t.prices[:d] for t in trs]).astype(np.float32),
-        np.stack([t.avail[:d] for t in trs]),
-        np.stack(preds).astype(np.float32),
+    jobs = job_stream_arrays(rng, n_jobs)
+    d = int(np.asarray(jobs.deadline)[0])
+    t0s = rng.integers(0, len(trace) - d - 1, size=n_jobs)
+    seeds = seed * 100003 + np.arange(n_jobs)
+    prices, avail, preds = engine.prepare_noisy_inputs(
+        trace, t0s, d, kind, level, seeds
     )
-    u = np.asarray(out["utility"])  # (K, M)
-    un = np.stack([
-        np.asarray(normalize_utility(jobs[k], u[k])) for k in range(n_jobs)
-    ])
-    return u, un
+    return jobs, prices, avail, preds
 
 
-def _converge(un: np.ndarray, M: int):
-    """Run EG; return (best_idx, iterations till best weight > 0.5, regret_ratio)."""
-    K = un.shape[0]
-    st = init_selector(M, K)
-    t_half = None
-    for k in range(K):
-        st = update(st, un[k])
-        if t_half is None and st.weights.max() > 0.5:
-            t_half = k + 1
-    return best_policy(st), (t_half or K), regret(st) / regret_bound(M, K)
+def _run_setting(pool_specs, kind: str, level: float, n_jobs: int, seed: int,
+                 **engine_kw) -> engine.SelectionResult:
+    jobs, prices, avail, preds = _engine_inputs(kind, level, n_jobs, seed)
+    return engine.simulate_and_select(
+        specs_to_arrays(pool_specs), jobs, PAPER_TPUT, prices, avail, preds,
+        **engine_kw,
+    )
 
 
 def run() -> list:
@@ -73,12 +56,13 @@ def run() -> list:
     pool = paper_pool()
     winners = {}
     for kind, level in settings:
-        (u, un), us = timed(_utilities_matrix, pool, kind, level, N_JOBS, seed=7)
-        best, t_half, rratio = _converge(un, len(pool))
+        res, us = timed(_run_setting, pool, kind, level, N_JOBS, seed=7)
+        best, t_half = res.best_policy(), res.iters_to_half()
         winners[(kind, level)] = best
         rows.append((f"fig9_{kind}_{level:g}_best_policy_idx", us, best))
         rows.append((f"fig9_{kind}_{level:g}_iters_to_half_weight", us, t_half))
-        rows.append((f"fig9_{kind}_{level:g}_regret_over_bound", us, rratio))
+        rows.append((f"fig9_{kind}_{level:g}_regret_over_bound", us,
+                     res.regret_ratio()))
         rows.append((f"fig9_{kind}_{level:g}_best_is_ahap", 0.0,
                      float(pool[best].kind == 0)))
     # noise regime changes the winning policy (the paper's point)
@@ -90,11 +74,12 @@ def run() -> list:
         ("fixed_sigma09", lambda: paper_pool(fixed_sigma=0.9)),
     ]:
         sub = pool_fn()
-        (u, un), us = timed(_utilities_matrix, sub, "fixed_uniform", 0.1, 400, seed=9)
-        best, t_half, _ = _converge(un, len(sub))
+        res, us = timed(_run_setting, sub, "fixed_uniform", 0.1, 400, seed=9)
         # restricting the pool lowers the achievable utility ceiling
         rows.append((f"fig9_{name}_pool_size", us, len(sub)))
-        rows.append((f"fig9_{name}_best_mean_utility", us, u.mean(axis=0).max()))
-    (u_full, _), _ = timed(_utilities_matrix, pool, "fixed_uniform", 0.1, 400, seed=9)
-    rows.append(("fig9_full_pool_best_mean_utility", 0.0, u_full.mean(axis=0).max()))
+        rows.append((f"fig9_{name}_best_mean_utility", us,
+                     float(res.mean_utility.max())))
+    res_full, _ = timed(_run_setting, pool, "fixed_uniform", 0.1, 400, seed=9)
+    rows.append(("fig9_full_pool_best_mean_utility", 0.0,
+                 float(res_full.mean_utility.max())))
     return rows

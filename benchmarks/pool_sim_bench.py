@@ -242,17 +242,21 @@ def run():
         ],
         "speedup_partitioned_vs_seed": speedup,
     }
-    # benchmarks/region_sim.py merges its rows into the same file in place;
-    # a pool_sim rerun must carry them over, not clobber them
+    # benchmarks/region_sim.py and benchmarks/selection_e2e.py merge their
+    # rows into the same file in place; a pool_sim rerun must carry them
+    # over, not clobber them
     try:
         with open(_JSON_PATH) as f:
             prev = json.load(f)
     except (OSError, json.JSONDecodeError):
         prev = {}
-    payload["rows"] += [r for r in prev.get("rows", [])
-                        if str(r.get("name", "")).startswith("region_sim")]
-    if "region" in prev:
-        payload["region"] = prev["region"]
+    payload["rows"] += [
+        r for r in prev.get("rows", [])
+        if str(r.get("name", "")).startswith(("region_sim", "selection_e2e"))
+    ]
+    for key in ("region", "selection"):
+        if key in prev:
+            payload[key] = prev[key]
     with open(_JSON_PATH, "w") as f:
         json.dump(payload, f, indent=2)
     return rows

@@ -28,14 +28,13 @@ unsharded path).
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
 import jax
 import numpy as np
 
-from benchmarks.common import PAPER_TPUT, job_stream
+from benchmarks.common import PAPER_TPUT, job_stream, merge_bench_rows
 from benchmarks.pool_sim_bench import _JSON_PATH
 
 N_JOBS = int(os.environ.get("REGION_SIM_JOBS", "16"))
@@ -94,21 +93,8 @@ def _bench(fn, repeat: int = REPEAT) -> float:
 
 def _update_bench_json(rows, extra):
     """Fold the region rows into BENCH_pool_sim.json without disturbing the
-    single-region trajectory rows. All non-row extras live under the single
-    top-level ``region`` key so pool_sim_bench's rewrite only has one thing
-    to carry over."""
-    try:
-        with open(_JSON_PATH) as f:
-            payload = json.load(f)
-    except (OSError, json.JSONDecodeError):
-        payload = {"rows": []}
-    payload["rows"] = [
-        r for r in payload.get("rows", [])
-        if not str(r.get("name", "")).startswith("region_sim")
-    ] + [{"name": n, "us_per_call": us, "derived": d} for n, us, d in rows]
-    payload["region"] = extra
-    with open(_JSON_PATH, "w") as f:
-        json.dump(payload, f, indent=2)
+    other modules' rows (shared merge in benchmarks.common)."""
+    merge_bench_rows(_JSON_PATH, "region_sim", "region", rows, extra)
 
 
 def run():

@@ -35,6 +35,7 @@ MODULES = [
     "kernels_bench",
     "pool_sim_bench",
     "region_sim",
+    "selection_e2e",
 ]
 
 

@@ -1,0 +1,183 @@
+"""End-to-end online-selection throughput: the engine vs the host-loop
+pipeline it replaced.
+
+The workload is the Fig. 9 convergence setting at paper scale (1000 jobs x
+the 124-lane mixed pool x 10 slots, fixed-magnitude uniform 10% noise).
+Two pipelines produce the same selection decision:
+
+  engine   core.engine.simulate_and_select — batched prep (one window
+           gather + one vectorized forecast stack), sharded pool
+           simulation, and the fused normalize + EG lax.scan; the (K, M)
+           utility matrix stays on device end to end. Recorded as the
+           prep / simulate / select split plus the total.
+  loop     the pre-engine pipeline: per-job ``trace.window`` +
+           ``NoisyPredictor(...).matrix`` constructions, the same pool
+           simulation, then per-job ``normalize_utility`` calls and a
+           K-iteration numpy ``selector.update`` loop.
+
+The headline ``selection_e2e_engine_vs_loop`` row is loop-seconds over
+engine-seconds (>= 1.0 means the engine pays for itself); the opt-in
+regression guard (tests/test_bench_regression.py, RUN_BENCH_REGRESSION=1)
+pins it at the Fig. 9 scale. Rows are folded into BENCH_pool_sim.json
+(selection rows replaced in place, the rest untouched).
+
+Env knobs: SEL_E2E_JOBS (default 1000), SEL_E2E_REPEAT (default 2);
+POOL_SIM_MESH picks the pool mesh for the engine's sharded simulation
+(single device falls back bitwise to the unsharded path); POOL_SIM_JSON
+redirects the JSON artifact.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import (
+    PAPER_TPUT,
+    job_stream_arrays,
+    merge_bench_rows,
+    paper_market,
+)
+from benchmarks.pool_sim_bench import _JSON_PATH
+
+N_JOBS = int(os.environ.get("SEL_E2E_JOBS", "1000"))
+REPEAT = int(os.environ.get("SEL_E2E_REPEAT", "2"))
+DEADLINE = 10
+KIND, LEVEL, SEED = "fixed_uniform", 0.1, 7
+
+
+def _workload():
+    rng = np.random.default_rng(SEED)
+    trace = paper_market(seed=21, days=40)
+    jobs = job_stream_arrays(rng, N_JOBS, DEADLINE)
+    t0s = rng.integers(0, len(trace) - DEADLINE - 1, size=N_JOBS)
+    seeds = SEED * 100003 + np.arange(N_JOBS)
+    return trace, jobs, t0s, seeds
+
+
+def _timeit(fn, repeat: int = REPEAT):
+    """(warm-up result, seconds per call at steady state) — the first call
+    pays compilation and its result is returned so callers never re-run the
+    pipeline untimed just to read the output."""
+    out = fn()
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        fn()
+    return out, (time.perf_counter() - t0) / repeat
+
+
+def _loop_pipeline(trace, jobs_cfg, t0s, seeds, arrs, n_pol: int):
+    """The pre-engine Fig. 9 host pipeline, end to end (returns the final
+    numpy SelectorState)."""
+    from repro.core import fast_sim, selector
+    from repro.core.job import normalize_utility
+    from repro.core.predictor import NoisyPredictor
+
+    trs, preds = [], []
+    for t0, s in zip(t0s, seeds):
+        w = trace.window(int(t0), DEADLINE + 1)
+        trs.append(w)
+        preds.append(NoisyPredictor(w, KIND, LEVEL, seed=int(s)).matrix(
+            fast_sim.W1MAX - 1
+        )[:DEADLINE])
+    out = fast_sim.simulate_pool_jobs(
+        arrs, fast_sim.stack_jobs(jobs_cfg), PAPER_TPUT,
+        np.stack([t.prices[:DEADLINE] for t in trs]).astype(np.float32),
+        np.stack([t.avail[:DEADLINE] for t in trs]),
+        np.stack(preds).astype(np.float32),
+    )
+    u = np.asarray(out["utility"])
+    st = selector.init_selector(n_pol, len(jobs_cfg))
+    for k in range(len(jobs_cfg)):
+        st = selector.update(
+            st, np.asarray(normalize_utility(jobs_cfg[k], u[k]))
+        )
+    return st
+
+
+def _update_bench_json(rows, extra):
+    """Fold the selection rows into BENCH_pool_sim.json without disturbing
+    the pool_sim / region_sim trajectory rows (shared merge in
+    benchmarks.common)."""
+    merge_bench_rows(_JSON_PATH, "selection_e2e", "selection", rows, extra)
+
+
+def run():
+    from repro.core import engine, fast_sim, selector
+    from repro.core.policy_pool import (
+        baseline_specs,
+        paper_pool,
+        rand_deadline_pool,
+        specs_to_arrays,
+    )
+    from repro.launch.mesh import make_pool_mesh, parse_pool_mesh_shape
+
+    pool = paper_pool() + rand_deadline_pool() + baseline_specs()
+    arrs = specs_to_arrays(pool)
+    n_pol = len(pool)
+    mesh = make_pool_mesh(
+        shape=parse_pool_mesh_shape(os.environ.get("POOL_SIM_MESH", ""))
+    )
+    trace, jobs, t0s, seeds = _workload()
+    jobs_cfg = fast_sim.unstack_jobs(jobs)
+    units = DEADLINE * n_pol * N_JOBS      # slots * policies * jobs per call
+
+    # --- engine split: prep (host) / simulate (device) / select (device) ---
+    prep = lambda: engine.prepare_noisy_inputs(
+        trace, t0s, DEADLINE, KIND, LEVEL, seeds
+    )
+    prices, avail, preds = prep()
+    sim = lambda: fast_sim.simulate_pool_jobs_sharded(
+        arrs, jobs, PAPER_TPUT, prices, avail, preds, mesh=mesh
+    )
+    u_dev = sim()["utility"]
+    sel_stage = lambda: jax.block_until_ready(engine.select_from_utilities(
+        jobs, u_dev, selector.eg_init(n_pol, N_JOBS)
+    )[0].weights)
+    total = lambda: engine.simulate_and_select(
+        arrs, jobs, PAPER_TPUT, *prep(), mesh=mesh
+    )
+
+    secs = {
+        "prep": _timeit(prep)[1],
+        "simulate": _timeit(
+            lambda: jax.block_until_ready(sim()["utility"])
+        )[1],
+        "select": _timeit(sel_stage)[1],
+    }
+    res, secs["total"] = _timeit(total)
+
+    # --- the replaced host-loop pipeline, same draws, measured whole ---
+    st_loop, secs["loop"] = _timeit(
+        lambda: _loop_pipeline(trace, jobs_cfg, t0s, seeds, arrs, n_pol)
+    )
+
+    rows = [
+        (f"selection_e2e_{name}", s * 1e6, units / s)
+        for name, s in secs.items()
+    ]
+    ratio = secs["loop"] / secs["total"]
+    rows.append(("selection_e2e_engine_vs_loop", 0.0, ratio))
+    # both pipelines must land on the same winning policy (f32 vs f64 EG)
+    same = float(res.best_policy() == selector.best_policy(st_loop))
+    rows.append(("selection_e2e_same_winner", 0.0, same))
+
+    _update_bench_json(rows, {
+        "workload": {
+            "jobs": N_JOBS, "slots": DEADLINE, "policies": n_pol,
+            "noise": f"{KIND}@{LEVEL:g}",
+            "pool": "paper_pool(112) + rand_deadline(9) + baselines(3)",
+        },
+        "pool_mesh": "x".join(map(str, mesh.devices.shape)),
+        "engine_vs_loop": ratio,
+        "winner": pool[res.best_policy()].name,
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run())

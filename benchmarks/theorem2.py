@@ -1,18 +1,20 @@
-"""Theorem 2: selector regret <= sqrt(2 K ln M) — measured regret/bound vs K."""
+"""Theorem 2: selector regret <= sqrt(2 K ln M) — measured regret/bound vs K.
+
+Each (M, K) trial is one ``selector.run_eg_scan`` call over a vectorized
+(K, M) utility draw (pre-engine this was a K-iteration numpy update loop)."""
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import timed
-from repro.core.selector import init_selector, regret, regret_bound, update
+from repro.core.selector import eg_init, regret, regret_bound, run_eg_scan
 
 
 def _run_k(M: int, K: int, seed: int) -> float:
     rng = np.random.default_rng(seed)
-    st = init_selector(M, K)
     means = rng.uniform(0.2, 0.8, M)
-    for _ in range(K):
-        st = update(st, np.clip(rng.normal(means, 0.15), 0, 1))
+    u = np.clip(rng.normal(means, 0.15, size=(K, M)), 0, 1)
+    st, _ = run_eg_scan(eg_init(M, K), u)
     return regret(st) / regret_bound(M, K)
 
 

@@ -1,13 +1,28 @@
 """The paper's contribution: deadline-aware online scheduling for LLM
 fine-tuning on mixed on-demand/spot GPU markets with predictions."""
+from repro.core.engine import (
+    SelectionResult,
+    prepare_noisy_inputs,
+    select_from_utilities,
+    simulate_and_select,
+)
 from repro.core.job import (
     expected_progress,
     normalization_bounds,
+    normalization_bounds_batch,
     normalize_utility,
+    normalize_utility_batch,
     tilde_value,
     value_fn,
 )
-from repro.core.market import Trace, TraceStats, constant_trace, from_arrays, vast_like_trace
+from repro.core.market import (
+    Trace,
+    TraceStats,
+    constant_trace,
+    from_arrays,
+    gather_windows,
+    vast_like_trace,
+)
 from repro.core.offline_opt import OfflineResult, solve_offline
 from repro.core.policies import (
     AHANP,
@@ -44,6 +59,8 @@ from repro.core.predictor import (
     PerfectPredictor,
     RegionalPredictor,
     forecast_errors,
+    noisy_matrix_batch,
+    true_future_batch,
 )
 from repro.core.region_market import (
     RegionalMarket,
@@ -52,10 +69,14 @@ from repro.core.region_market import (
     vast_like_regions,
 )
 from repro.core.selector import (
+    EGState,
     best_policy,
+    eg_init,
     init_selector,
+    iters_to_half,
     regret,
     regret_bound,
+    run_eg_scan,
     select,
     update,
 )

@@ -1,0 +1,184 @@
+"""Device-resident online selection engine: the paper's Algorithm 2 loop
+(simulate every pool policy on the incoming job -> normalize utilities ->
+EG update) end to end, with the (K, M) utility matrix never round-tripping
+through host numpy.
+
+Before this module the selection stage was the last fully host-bound part
+of the pipeline: Fig. 9/10 built ``NoisyPredictor`` matrices one job at a
+time, called ``normalize_utility`` in a per-job loop and ran
+``selector.update`` as a numpy loop over 1000 jobs — while the simulator
+underneath was jitted, kind-partitioned and 2-D sharded. The engine chains
+
+  prep      batched trace-window gather (market.gather_windows) + ONE
+            vectorized forecast stack (predictor.noisy_matrix_batch) —
+            host numpy, but array code instead of K python constructions
+  simulate  fast_sim.simulate_pool_jobs[_sharded] (jobs x lanes over the
+            pool mesh)
+  select    job.normalize_utility_batch + selector.run_eg_scan, fused into
+            one jitted call — the (K, M) matrix stays a device array from
+            the simulator's output to the selector's weight trajectories
+
+and streams the job axis in chunks (``job_chunk``) when K is too large for
+one resident (K, M, ...) simulation — the EG scan's state threads through
+the chunks, so chunked and unchunked runs agree (the scan trajectories
+bitwise, the mean-utility accumulator to f32 tolerance;
+tests/test_selection_engine.py pins both).
+
+Benchmarks: benchmarks/selection_e2e.py records the prep/simulate/select
+split and pins the engine against the pre-engine host-loop pipeline
+(``SEL_E2E_JOBS`` knob, rows in BENCH_pool_sim.json).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ThroughputConfig
+from repro.core import fast_sim, selector
+from repro.core.job import normalize_utility_batch
+from repro.core.market import gather_windows
+from repro.core.predictor import noisy_matrix_batch
+
+
+def prepare_noisy_inputs(trace, t0s, deadline: int, kind: str, level: float,
+                         seeds, horizon: Optional[int] = None,
+                         avail_max: int = 16):
+    """Batched Fig. 9-style prep: gather the K job windows in one indexing
+    pass and emit the whole noisy forecast stack in one vectorized call.
+    Returns ``(prices (K, d) f32, avail (K, d) i64, preds (K, d, W1MAX, 2)
+    f32)`` ready for ``simulate_pool_jobs[_sharded]``. Row k equals the
+    per-job ``NoisyPredictor(trace.window(t0s[k], d+1), ..., seed=seeds[k])``
+    construction it replaces."""
+    horizon = fast_sim.W1MAX - 1 if horizon is None else horizon
+    pw, aw = gather_windows(trace, t0s, deadline + 1)
+    preds = noisy_matrix_batch(pw, aw, kind, level, seeds, horizon,
+                               avail_max)[:, :deadline]
+    return (pw[:, :deadline].astype(np.float32),
+            aw[:, :deadline].astype(np.int64),
+            preds.astype(np.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("track_history",))
+def _normalize_and_scan(jobs: fast_sim.JobArrays, u, state: selector.EGState,
+                        track_history: bool):
+    """The fused select stage: per-job [0,1] normalization of the (K, M)
+    raw-utility matrix + the EG lax.scan, one device call."""
+    un = normalize_utility_batch(jobs, u)
+    return selector.run_eg_scan(state, un, track_history=track_history)
+
+
+def select_from_utilities(jobs: fast_sim.JobArrays, utilities,
+                          state: selector.EGState,
+                          track_history: bool = False):
+    """Public wrapper over the fused normalize+scan stage (the engine's
+    'select' leg, also what benchmarks/selection_e2e.py times)."""
+    return _normalize_and_scan(jobs, utilities, state, track_history)
+
+
+@dataclass
+class SelectionResult:
+    """Output of :func:`simulate_and_select`.
+
+    ``state`` is the final EG selector state (pass it back in to continue
+    the stream, e.g. Fig. 10's phase schedule); the trajectories are host
+    numpy — (K,) scalars per job, plus the (K, M) post-update weight
+    history when requested."""
+    state: selector.EGState
+    mean_utility: np.ndarray              # (M,) raw mean utility per policy
+    max_weight: np.ndarray                # (K,) leader weight after each job
+    regret: np.ndarray                    # (K,) cumulative regret after each job
+    n_jobs: int
+    weight_history: Optional[np.ndarray] = None   # (K, M), track_history only
+    utilities: Optional[np.ndarray] = None        # (K, M), return_utilities only
+
+    def best_policy(self) -> int:
+        return selector.best_policy(self.state)
+
+    def iters_to_half(self) -> int:
+        return selector.iters_to_half(self.max_weight)
+
+    def regret_ratio(self) -> float:
+        """Final regret over the Theorem 2 bound sqrt(2 K ln M)."""
+        m = int(np.shape(self.state.weights)[0])
+        return selector.regret(self.state) / selector.regret_bound(
+            m, int(self.state.k)
+        )
+
+
+def simulate_and_select(
+    pool_arrays: dict,
+    jobs: fast_sim.JobArrays,
+    tput: ThroughputConfig,
+    prices, avail, preds,
+    *,
+    backend: str = "xla",
+    sharded: bool = True,
+    mesh=None,
+    eta: Optional[float] = None,
+    state: Optional[selector.EGState] = None,
+    job_chunk: int = 0,
+    track_history: bool = False,
+    return_utilities: bool = False,
+) -> SelectionResult:
+    """Run the whole online-selection workload in one call: sharded pool
+    simulation of every (job, policy) cell, batched utility normalization,
+    and the EG scan — Fig. 9's four-regime sweep is one call per regime.
+
+    ``jobs`` are stacked (K,) JobArrays (benchmarks.common.job_stream_arrays
+    or fast_sim.stack_jobs); ``prices``/``avail`` are (K, d) and ``preds``
+    (K, d, W1MAX, 2) (see :func:`prepare_noisy_inputs`). ``sharded`` lays
+    the (jobs x lanes) grid over ``mesh`` (default pool mesh; bitwise
+    fallback to the single-device path on one device). ``state`` continues
+    an earlier stream (defaults to a fresh uniform selector with Thm. 2's
+    eta for K jobs); ``job_chunk`` > 0 streams the job axis in chunks of
+    that size so K >> device memory works — equal-size chunks reuse the
+    jitted partition runners' compilation cache."""
+    n_jobs = int(np.shape(jobs.workload)[0])
+    n_pol = int(np.asarray(pool_arrays["kind"]).shape[0])
+    if state is None:
+        state = selector.eg_init(n_pol, n_jobs, eta=eta)
+    chunk = int(job_chunk) if job_chunk else n_jobs
+    if chunk < 1:
+        raise ValueError(f"job_chunk must be >= 1, got {job_chunk}")
+
+    u_sum = jnp.zeros((n_pol,), jnp.float32)
+    max_w, regrets, hist, raw = [], [], [], []
+    for lo in range(0, n_jobs, chunk):
+        hi = min(lo + chunk, n_jobs)
+        jb = fast_sim.slice_jobs(jobs, lo, hi)
+        if sharded:
+            out = fast_sim.simulate_pool_jobs_sharded(
+                pool_arrays, jb, tput, prices[lo:hi], avail[lo:hi],
+                preds[lo:hi], backend=backend, mesh=mesh,
+            )
+        else:
+            out = fast_sim.simulate_pool_jobs(
+                pool_arrays, jb, tput, prices[lo:hi], avail[lo:hi],
+                preds[lo:hi], backend=backend,
+            )
+        u = out["utility"]                       # (k, M), device-resident
+        u_sum = u_sum + jnp.sum(u, axis=0)
+        state, traj = _normalize_and_scan(jb, u, state, track_history)
+        max_w.append(traj["max_weight"])
+        regrets.append(traj["regret"])
+        if track_history:
+            hist.append(traj["weights"])
+        if return_utilities:
+            raw.append(u)
+
+    cat = (lambda parts: np.asarray(parts[0]) if len(parts) == 1
+           else np.concatenate([np.asarray(p) for p in parts]))
+    return SelectionResult(
+        state=state,
+        mean_utility=np.asarray(u_sum) / n_jobs,
+        max_weight=cat(max_w),
+        regret=cat(regrets),
+        n_jobs=n_jobs,
+        weight_history=cat(hist) if track_history else None,
+        utilities=cat(raw) if return_utilities else None,
+    )

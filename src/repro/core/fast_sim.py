@@ -1175,6 +1175,29 @@ def stack_jobs(jobs) -> JobArrays:
     ])
 
 
+def slice_jobs(jobs: JobArrays, start: int, stop: int) -> JobArrays:
+    """Job-axis slice of stacked (K,) JobArrays leaves — the unit of
+    core.engine's job-chunked streaming mode."""
+    return JobArrays(*[f[start:stop] for f in jobs])
+
+
+def unstack_jobs(jobs: JobArrays):
+    """Stacked (K,) JobArrays -> list of JobConfig (host scalars) — the
+    inverse of :func:`stack_jobs`, for python-reference paths that need
+    per-job configs (e.g. the pre-engine normalize_utility loop)."""
+    n = int(np.shape(jobs.workload)[0])
+    rows = [np.asarray(f) for f in jobs]
+    return [
+        JobConfig(
+            workload=float(rows[0][k]), deadline=int(rows[1][k]),
+            n_min=int(rows[2][k]), n_max=int(rows[3][k]),
+            value=float(rows[4][k]), gamma=float(rows[5][k]),
+            on_demand_price=float(rows[6][k]),
+        )
+        for k in range(n)
+    ]
+
+
 def prepare_inputs(trace, pred_matrix, d_max: int):
     """Pad/trim trace + prediction matrix to (d_max, ...) jnp arrays."""
     prices = jnp.asarray(trace.prices[:d_max], jnp.float32)

@@ -58,3 +58,27 @@ def normalization_bounds(job: JobConfig):
 def normalize_utility(job: JobConfig, u):
     lo, hi = normalization_bounds(job)
     return jnp.clip((u - lo) / (hi - lo), 0.0, 1.0)
+
+
+def normalization_bounds_batch(jobs):
+    """Batched :func:`normalization_bounds`: ``jobs`` carries stacked (K,)
+    leaves (fast_sim.JobArrays, or any object with the JobConfig fields) —
+    returns ((K,), (K,)) f32 bounds."""
+    p_o = getattr(jobs, "p_o", None)
+    if p_o is None:
+        p_o = jobs.on_demand_price
+    u_max = jnp.asarray(jobs.value, jnp.float32)
+    u_min = -(jnp.asarray(p_o, jnp.float32)
+              * jnp.asarray(jobs.n_max, jnp.float32)
+              * jnp.asarray(jobs.gamma, jnp.float32)
+              * jnp.asarray(jobs.deadline, jnp.float32))
+    return u_min, u_max
+
+
+def normalize_utility_batch(jobs, u):
+    """Map the whole (K, M) raw-utility matrix through the per-job [0, 1]
+    normalization in one call (the EG selector's Thm. 2 precondition) —
+    the batched twin of looping ``normalize_utility(jobs[k], u[k])``,
+    jnp-native so core.engine keeps the matrix on device."""
+    lo, hi = normalization_bounds_batch(jobs)
+    return jnp.clip((u - lo[:, None]) / (hi - lo)[:, None], 0.0, 1.0)

@@ -47,6 +47,23 @@ class Trace:
         )
 
 
+def gather_windows(trace: Trace, t0s, length: int):
+    """Batched :meth:`Trace.window`: gather K windows of ``length`` slots in
+    one fancy-indexing pass — ``(prices (K, length), avail (K, length))``.
+    Same bounds rule as ``window`` (every [t0, t0+length) must lie inside
+    the trace). The row-k arrays equal ``trace.window(t0s[k], length)``'s;
+    this is what core.engine's prep uses instead of a per-job window loop."""
+    t0s = np.asarray(t0s, np.int64)
+    if length < 0 or (t0s.size and (
+            int(t0s.min()) < 0 or int(t0s.max()) + length > len(trace))):
+        raise ValueError(
+            f"windows of length {length} at t0 in [{t0s.min()}, {t0s.max()}] "
+            f"out of bounds for trace of length {len(trace)}"
+        )
+    idx = t0s[:, None] + np.arange(length)[None, :]
+    return trace.prices[idx], trace.avail[idx]
+
+
 @dataclass
 class TraceStats:
     price_median: float

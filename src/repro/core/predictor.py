@@ -44,6 +44,66 @@ def _true_future(trace: Trace, horizon: int) -> np.ndarray:
     return out
 
 
+def true_future_batch(prices: np.ndarray, avail: np.ndarray,
+                      horizon: int) -> np.ndarray:
+    """Batched :func:`_true_future`: (K, T) price/avail windows ->
+    (K, T, horizon+1, 2) true values, each row edge-padded past its end."""
+    prices = np.asarray(prices, float)
+    avail = np.asarray(avail, float)
+    T = prices.shape[1]
+    p = np.concatenate([prices, np.repeat(prices[:, -1:], horizon, axis=1)], 1)
+    a = np.concatenate([avail, np.repeat(avail[:, -1:], horizon, axis=1)], 1)
+    idx = np.arange(T)[:, None] + np.arange(horizon + 1)[None, :]
+    return np.stack([p[:, idx], a[:, idx]], axis=-1)
+
+
+def noisy_matrix_batch(prices: np.ndarray, avail: np.ndarray, kind: str,
+                       level: float, seeds, horizon: int,
+                       avail_max: int = 16) -> np.ndarray:
+    """Batched :class:`NoisyPredictor`: the whole (K, T, horizon+1, 2)
+    forecast stack in one vectorized pass over (K, T) market windows.
+
+    Bitwise-equal to stacking
+    ``NoisyPredictor(window_k, kind, level, seed=seeds[k]).matrix(horizon)``
+    over k (pinned in tests/test_selection_engine.py): every arithmetic op
+    is elementwise over the batch axis, and each row's noise is drawn from
+    ``np.random.default_rng(seeds[k])`` exactly as the per-job constructor
+    would — the per-seed draw is the one per-row op left (independent
+    streams have no batch API); everything around it is vectorized, which
+    is what collapses Fig. 9's per-job predictor loop into array code."""
+    assert kind in NOISE_KINDS, kind
+    prices = np.asarray(prices, float)
+    avail = np.asarray(avail, float)
+    seeds = np.asarray(seeds)
+    out = true_future_batch(prices, avail, horizon)
+    K = out.shape[0]
+    assert seeds.shape == (K,), (seeds.shape, K)
+    scale = level * np.sqrt(np.arange(horizon + 1))  # 0 at j=0
+    ref = np.stack([
+        np.broadcast_to(prices.mean(axis=1)[:, None], prices.shape),
+        np.broadcast_to(avail.mean(axis=1)[:, None], avail.shape),
+    ], axis=-1)  # (K, T, 2) per-row reference magnitudes
+    shape = out.shape[1:]
+    if kind.endswith("uniform"):
+        eps = np.stack([
+            np.random.default_rng(int(s)).uniform(-1, 1, shape) for s in seeds
+        ])
+    else:  # heavy-tail: Student-t(3), clipped for sanity
+        eps = np.stack([
+            np.clip(np.random.default_rng(int(s)).standard_t(3, shape), -8, 8)
+            for s in seeds
+        ]) / np.sqrt(3)
+    eps = eps * scale[None, None, :, None]
+    if kind.startswith("magdep"):
+        noisy = out * (1.0 + eps)
+    else:
+        noisy = out + eps * ref[:, :, None, :]
+    noisy[..., 0] = np.clip(noisy[..., 0], 0.01, 10.0)
+    noisy[..., 1] = np.clip(np.round(noisy[..., 1]), 0, avail_max)
+    noisy[:, :, 0, :] = out[:, :, 0, :]  # the present is observed
+    return noisy
+
+
 class PerfectPredictor:
     def __init__(self, trace: Trace):
         self.trace = trace

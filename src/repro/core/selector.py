@@ -6,12 +6,28 @@ Guarantee (Theorem 2): with eta = sqrt(2 ln M / K) and utilities normalized
 to [0,1], regret vs the best fixed policy is <= sqrt(2 K ln M).
 benchmarks/theorem2.py verifies the bound empirically; test_selector.py
 asserts it for adversarial utility streams.
+
+Two implementations share the update rule:
+
+* ``init_selector``/``update`` — the numpy reference, one job at a time
+  (the paper's online formulation, and the parity oracle).
+* ``eg_init``/``run_eg_scan`` — a jitted ``lax.scan`` over a whole (K, M)
+  normalized-utility matrix, producing the final state plus per-job
+  max-weight / regret trajectories (and, optionally, the full weight
+  history) in ONE device call. Same update order, same clipping, same
+  first-max argmax ties as the numpy loop (pinned to float32 tolerance in
+  tests/test_selection_engine.py). This is what core.engine chains after
+  the sharded pool simulator so the (K, M) matrix never round-trips
+  through host numpy.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List, NamedTuple, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -23,15 +39,27 @@ class SelectorState:
     cum_expected: float = 0.0         # sum_k E_{w_k}[u_k]
     cum_utils: Optional[np.ndarray] = None  # (M,) per-policy cumulative
     weight_history: List[np.ndarray] = field(default_factory=list)
+    # record every history_stride-th update (plus the initial weights): the
+    # per-update (M,) copies are O(K*M) host memory at engine scale
+    history_stride: int = 1
+
+
+def default_eta(n_policies: int, horizon: int) -> float:
+    """Theorem 2's learning rate: sqrt(2 ln M / K)."""
+    return float(np.sqrt(2.0 * np.log(n_policies) / max(horizon, 1)))
 
 
 def init_selector(n_policies: int, horizon: int, eta: Optional[float] = None,
-                  track_history: bool = False) -> SelectorState:
-    eta = float(np.sqrt(2.0 * np.log(n_policies) / max(horizon, 1))) if eta is None else eta
+                  track_history: bool = False,
+                  history_stride: int = 1) -> SelectorState:
+    eta = default_eta(n_policies, horizon) if eta is None else eta
+    if history_stride < 1:
+        raise ValueError(f"history_stride must be >= 1, got {history_stride}")
     st = SelectorState(
         weights=np.full(n_policies, 1.0 / n_policies),
         eta=eta,
         cum_utils=np.zeros(n_policies),
+        history_stride=history_stride,
     )
     if track_history:
         st.weight_history.append(st.weights.copy())
@@ -56,13 +84,14 @@ def update(state: SelectorState, utilities: np.ndarray,
     w = np.exp(logits)
     state.weights = w / w.sum()
     state.k += 1
-    if track_history:
+    if track_history and state.k % state.history_stride == 0:
         state.weight_history.append(state.weights.copy())
     return state
 
 
-def regret(state: SelectorState) -> float:
-    """max_m sum_k u_k^m - sum_k E_{w_k}[u_k]  (cumulative, Theorem 2 LHS)."""
+def regret(state) -> float:
+    """max_m sum_k u_k^m - sum_k E_{w_k}[u_k]  (cumulative, Theorem 2 LHS).
+    Accepts SelectorState and EGState alike (same field names)."""
     return float(state.cum_utils.max() - state.cum_expected)
 
 
@@ -70,5 +99,76 @@ def regret_bound(n_policies: int, k: int) -> float:
     return float(np.sqrt(2.0 * k * np.log(n_policies)))
 
 
-def best_policy(state: SelectorState) -> int:
+def best_policy(state) -> int:
     return int(np.argmax(state.weights))
+
+
+# ---------------------------------------------------------------------------
+# Device-resident EG: jitted lax.scan over a (K, M) utility matrix
+# ---------------------------------------------------------------------------
+
+class EGState(NamedTuple):
+    """Selector state as f32 device leaves — field names mirror
+    SelectorState so ``regret``/``best_policy`` work on both."""
+    weights: jnp.ndarray        # (M,) simplex
+    eta: jnp.ndarray            # f32 scalar
+    k: jnp.ndarray              # i32 scalar, updates applied so far
+    cum_expected: jnp.ndarray   # f32 scalar
+    cum_utils: jnp.ndarray      # (M,)
+
+
+def eg_init(n_policies: int, horizon: int,
+            eta: Optional[float] = None) -> EGState:
+    """Device twin of :func:`init_selector` (uniform weights, Thm. 2 eta)."""
+    eta = default_eta(n_policies, horizon) if eta is None else float(eta)
+    return EGState(
+        weights=jnp.full((n_policies,), 1.0 / n_policies, jnp.float32),
+        eta=jnp.float32(eta),
+        k=jnp.int32(0),
+        cum_expected=jnp.float32(0.0),
+        cum_utils=jnp.zeros((n_policies,), jnp.float32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("track_history",))
+def run_eg_scan(state: EGState, utilities, track_history: bool = False):
+    """Run the EG update over every row of ``utilities`` ((K, M), normalized
+    to [0, 1] — clipped here exactly like the numpy loop) in one
+    ``lax.scan``. Returns ``(final_state, traj)`` where ``traj`` holds the
+    per-job post-update trajectories:
+
+      max_weight  (K,)  max_m w_k[m] — iters-to-half-weight reads off this
+      regret      (K,)  max_m cum_utils - cum_expected after job k
+      weights     (K, M) only when ``track_history`` (Fig. 10's heatmap)
+
+    The update order, the clipping, and first-max argmax ties match
+    :func:`update` (the numpy loop floors weights at 1e-300 before the log;
+    in f32 the floor is the smallest normal instead — weights there are
+    zero to f32 anyway). Chain calls by passing the returned state back in:
+    the scan is associative over concatenated utility chunks, which is what
+    core.engine's job-chunked streaming mode relies on."""
+    u_all = jnp.clip(jnp.asarray(utilities, jnp.float32), 0.0, 1.0)
+    tiny = jnp.float32(np.finfo(np.float32).tiny)
+
+    def step(s: EGState, u):
+        ce = s.cum_expected + jnp.dot(s.weights, u)
+        cu = s.cum_utils + u
+        logits = jnp.log(jnp.maximum(s.weights, tiny)) + s.eta * u
+        logits = logits - logits.max()
+        w = jnp.exp(logits)
+        w = w / w.sum()
+        ns = EGState(w, s.eta, s.k + 1, ce, cu)
+        ys = {"max_weight": w.max(), "regret": cu.max() - ce}
+        if track_history:
+            ys["weights"] = w
+        return ns, ys
+
+    return jax.lax.scan(step, state, u_all)
+
+
+def iters_to_half(max_weight: np.ndarray) -> int:
+    """First 1-based update index where the leader's weight exceeds 0.5
+    (K if it never does) — Fig. 9's convergence metric, read off the
+    ``max_weight`` trajectory of :func:`run_eg_scan`."""
+    hit = np.asarray(max_weight) > 0.5
+    return int(np.argmax(hit)) + 1 if hit.any() else len(hit)

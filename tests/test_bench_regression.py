@@ -1,14 +1,16 @@
 """Opt-in CI-style perf regression guards for the pool simulator.
 
 The ROADMAP pins the kind-partitioned path at >= 3x the seed monolithic
-path, and (since the 2-D mesh PR) the sharded path at >= 1x the partitioned
+path, (since the 2-D mesh PR) the sharded path at >= 1x the partitioned
 path at Fig. 9/10 scale on multiple devices — the 1000-job sharded-scale
 regression (0.63x, retrace-per-call + lane-major scan-boundary transposes)
-must not silently return. Both guards run a ``pool_sim_bench`` config
-through ``benchmarks/run.py --json`` (the same entry point CI would use)
-and fail if their row drops below the bar; the multi-device guard forces 4
-host devices in its subprocess (the forcing flag is forbidden in the main
-test process by conftest).
+must not silently return — and (since the selection-engine PR) the
+device-resident selection engine at >= 1x the host-loop pipeline it
+replaced at the Fig. 9 scale. All guards run a bench config through
+``benchmarks/run.py --json`` (the same entry point CI would use) and fail
+if their row drops below the bar; the multi-device guard forces 4 host
+devices in its subprocess (the forcing flag is forbidden in the main test
+process by conftest).
 
 Timing is meaningless under tier-1's parallel/contended conditions, so the
 tests are opt-in:
@@ -17,8 +19,9 @@ tests are opt-in:
         tests/test_bench_regression.py
 
 Knobs: POOL_SIM_JOBS / POOL_SIM_REPEAT / POOL_SIM_SCALE_JOBS /
-POOL_SIM_SCALE_REPEAT / POOL_SIM_MESH shrink or reshape the workload (the
-guards set small defaults for themselves below).
+POOL_SIM_SCALE_REPEAT / POOL_SIM_MESH / SEL_E2E_JOBS / SEL_E2E_REPEAT
+shrink or reshape the workloads (the guards set small defaults for
+themselves below).
 """
 import json
 import os
@@ -31,6 +34,9 @@ import pytest
 MIN_SPEEDUP = 3.0
 # sharded must be no slower than partitioned at scale; == 1.0 is "no slower"
 MIN_SCALE_RATIO = 1.0
+# the selection engine must be no slower than the host-loop pipeline it
+# replaced at the Fig. 9 scale (prep + simulate + select, end to end)
+MIN_ENGINE_RATIO = 1.0
 
 pytestmark = pytest.mark.skipif(
     os.environ.get("RUN_BENCH_REGRESSION", "") != "1",
@@ -40,8 +46,9 @@ pytestmark = pytest.mark.skipif(
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _run_pool_bench(defaults: dict, force: dict = {}) -> dict:
-    """Drive ``benchmarks.run --only pool_sim --json`` in a subprocess and
+def _run_pool_bench(defaults: dict, force: dict = {},
+                    only: str = "pool_sim") -> dict:
+    """Drive ``benchmarks.run --only <only> --json`` in a subprocess and
     return the parsed payload. ``defaults`` yield to caller env (workload
     knobs); ``force`` always wins (the device-forcing XLA flag)."""
     env = dict(os.environ)
@@ -60,7 +67,7 @@ def _run_pool_bench(defaults: dict, force: dict = {}) -> dict:
         env["POOL_SIM_JSON"] = os.path.join(td, "pool_sim.json")
         proc = subprocess.run(
             [sys.executable, "-m", "benchmarks.run",
-             "--only", "pool_sim", "--json", out_json],
+             "--only", only, "--json", out_json],
             capture_output=True, text=True, env=env, cwd=ROOT, timeout=1800,
         )
         assert proc.returncode == 0, (
@@ -126,3 +133,29 @@ def test_sharded_scale_not_slower_than_partitioned_4dev():
         f"partitioned at {payload['workload']['scale_jobs']} jobs\n"
         f"rows: { {n: r['derived'] for n, r in rows.items()} }"
     )
+
+
+def test_selection_engine_not_slower_than_host_loop():
+    """The engine guard: at the Fig. 9 scale (1000 jobs x 124-lane pool) the
+    device-resident selection engine (prep + simulate + select) must be no
+    slower than the per-job host-loop pipeline it replaced — per-job
+    NoisyPredictor constructions, per-job normalize_utility calls and the
+    K-iteration numpy selector loop must never quietly come back.
+    SEL_E2E_JOBS in the caller env shrinks the workload for local runs."""
+    payload = _run_pool_bench(
+        defaults={
+            "SEL_E2E_JOBS": "1000",
+            "SEL_E2E_REPEAT": "1",
+        },
+        only="selection_e2e",
+    )
+    rows = {r["name"]: r for r in payload["rows"]}
+    assert "selection_e2e_engine_vs_loop" in rows, sorted(rows)
+    ratio = rows["selection_e2e_engine_vs_loop"]["derived"]
+    assert ratio >= MIN_ENGINE_RATIO, (
+        f"selection engine regressed: {ratio:.2f}x < {MIN_ENGINE_RATIO}x the "
+        f"host-loop pipeline\n"
+        f"rows: { {n: r['derived'] for n, r in rows.items()} }"
+    )
+    # both pipelines must land on the same winning policy
+    assert rows["selection_e2e_same_winner"]["derived"] == 1.0

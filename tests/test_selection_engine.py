@@ -1,0 +1,322 @@
+"""Device-resident selection engine (core.engine + the batched selector /
+predictor / normalization paths it chains).
+
+Pins, per the engine's contracts:
+  * ``run_eg_scan`` parity with the numpy ``update`` loop (weights,
+    cum_expected, cum_utils, regret, first-max argmax ties) to f32
+    tolerance, on random AND adversarial utility streams;
+  * chunked-vs-unchunked ``simulate_and_select`` equality (trajectories
+    bitwise, the mean-utility accumulator to f32 tolerance);
+  * ``noisy_matrix_batch`` bitwise parity with per-job
+    ``NoisyPredictor.matrix`` across all four noise regimes;
+  * ``normalize_utility_batch`` parity with the per-job loop;
+  * ``gather_windows`` / ``job_stream_arrays`` parity with their per-job
+    twins;
+  * the numpy selector's ``history_stride`` memory cap.
+"""
+import numpy as np
+import pytest
+
+from benchmarks.common import PAPER_TPUT, job_stream, job_stream_arrays, paper_market
+from repro.core import engine, fast_sim
+from repro.core import selector as sel
+from repro.core.job import normalize_utility, normalize_utility_batch
+from repro.core.market import gather_windows, vast_like_trace
+from repro.core.policy_pool import (
+    baseline_specs,
+    paper_pool,
+    rand_deadline_pool,
+    specs_to_arrays,
+)
+from repro.core.predictor import NOISE_KINDS, NoisyPredictor, noisy_matrix_batch
+
+
+def _numpy_reference(u, eta=None):
+    """Run the numpy update loop over (K, M) utilities; return the state and
+    the per-update max-weight trajectory."""
+    K, M = u.shape
+    st = sel.init_selector(M, K, eta=eta)
+    max_w = []
+    for k in range(K):
+        st = sel.update(st, u[k])
+        max_w.append(st.weights.max())
+    return st, np.asarray(max_w)
+
+
+def _assert_scan_matches(u, eta=None):
+    K, M = u.shape
+    st_np, max_w_np = _numpy_reference(u, eta=eta)
+    st, traj = sel.run_eg_scan(sel.eg_init(M, K, eta=eta), u)
+    np.testing.assert_allclose(
+        np.asarray(st.weights), st_np.weights, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        float(st.cum_expected), st_np.cum_expected, rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(st.cum_utils), st_np.cum_utils, rtol=1e-4, atol=1e-3
+    )
+    np.testing.assert_allclose(
+        sel.regret(st), sel.regret(st_np), rtol=1e-3, atol=1e-3
+    )
+    # a unique f64 winner must be the f32 winner too; analytically-tied
+    # weights can land on either member of the tie in f32 (the exact-tie
+    # case, where the columns are bitwise identical, is pinned separately)
+    gap = st_np.weights.max() - np.partition(st_np.weights, -2)[-2]
+    if gap > 1e-6:
+        assert sel.best_policy(st) == sel.best_policy(st_np)
+    else:
+        assert np.isclose(
+            st_np.weights[sel.best_policy(st)], st_np.weights.max(), atol=1e-6
+        )
+    assert int(st.k) == st_np.k == K
+    # the convergence metric reads off the max-weight trajectory
+    assert sel.iters_to_half(np.asarray(traj["max_weight"])) == \
+        sel.iters_to_half(max_w_np)
+
+
+def test_run_eg_scan_matches_numpy_random():
+    rng = np.random.default_rng(0)
+    means = rng.uniform(0.2, 0.8, 24)
+    u = np.clip(rng.normal(means, 0.15, size=(400, 24)), 0, 1)
+    _assert_scan_matches(u)
+
+
+def test_run_eg_scan_matches_numpy_adversarial():
+    """Alternating one-hot adversary + out-of-range utilities (the scan must
+    clip to [0, 1] exactly like the numpy loop)."""
+    M, K = 8, 300
+    u = np.zeros((K, M))
+    u[np.arange(K), np.arange(K) % M] = 1.7   # clipped to 1
+    u[:, -1] = -0.3                           # clipped to 0
+    _assert_scan_matches(u)
+
+
+def test_run_eg_scan_argmax_ties_first_max():
+    """Identical utility columns leave the weights tied — both
+    implementations must pick the FIRST max."""
+    u = np.full((50, 6), 0.5)
+    u[:, 2:4] = 0.9  # columns 2 and 3 tie for best
+    st_np, _ = _numpy_reference(u)
+    st, _ = sel.run_eg_scan(sel.eg_init(6, 50), u)
+    assert sel.best_policy(st) == sel.best_policy(st_np) == 2
+    np.testing.assert_array_equal(
+        np.asarray(st.weights)[2], np.asarray(st.weights)[3]
+    )
+
+
+def test_run_eg_scan_chained_chunks_bitwise():
+    """Feeding the stream in chunks with the state threaded through equals
+    one scan over the concatenation — the engine's streaming contract."""
+    rng = np.random.default_rng(3)
+    u = rng.uniform(0, 1, size=(120, 10)).astype(np.float32)
+    whole, traj = sel.run_eg_scan(sel.eg_init(10, 120), u)
+    st = sel.eg_init(10, 120)
+    parts = []
+    for lo in (0, 50, 100):
+        st, t = sel.run_eg_scan(st, u[lo:lo + 50])
+        parts.append(np.asarray(t["max_weight"]))
+    np.testing.assert_array_equal(np.asarray(whole.weights), np.asarray(st.weights))
+    np.testing.assert_array_equal(
+        np.asarray(traj["max_weight"]), np.concatenate(parts)
+    )
+
+
+def test_selector_history_stride():
+    """history_stride caps the host-side weight_history: every s-th update
+    is recorded (plus the initial weights); stride 1 is the old behavior."""
+    rng = np.random.default_rng(1)
+    u = rng.uniform(0, 1, size=(20, 5))
+    full = sel.init_selector(5, 20, track_history=True)
+    strided = sel.init_selector(5, 20, track_history=True, history_stride=4)
+    for k in range(20):
+        full = sel.update(full, u[k], track_history=True)
+        strided = sel.update(strided, u[k], track_history=True)
+    assert len(full.weight_history) == 21
+    assert len(strided.weight_history) == 1 + 20 // 4
+    for i, h in enumerate(strided.weight_history[1:]):
+        np.testing.assert_array_equal(h, full.weight_history[(i + 1) * 4])
+    with pytest.raises(ValueError):
+        sel.init_selector(5, 20, history_stride=0)
+
+
+# ---------------------------------------------------------------------------
+# batched prep: windows, predictors, job draws, normalization
+# ---------------------------------------------------------------------------
+
+def test_gather_windows_matches_window_loop():
+    tr = vast_like_trace(seed=5, days=2)
+    t0s = np.random.default_rng(0).integers(0, len(tr) - 11, 16)
+    pw, aw = gather_windows(tr, t0s, 11)
+    for k, t0 in enumerate(t0s):
+        w = tr.window(int(t0), 11)
+        np.testing.assert_array_equal(pw[k], w.prices)
+        np.testing.assert_array_equal(aw[k], w.avail)
+    with pytest.raises(ValueError):
+        gather_windows(tr, [len(tr) - 5], 11)
+    with pytest.raises(ValueError):
+        gather_windows(tr, [-1], 11)
+
+
+@pytest.mark.parametrize("kind", NOISE_KINDS)
+def test_noisy_matrix_batch_matches_per_job(kind):
+    """The whole (K, T, h+1, 2) forecast stack in one call, bitwise equal to
+    K per-job NoisyPredictor constructions (same seeds, same windows)."""
+    tr = vast_like_trace(seed=9, days=2)
+    t0s = np.random.default_rng(2).integers(0, len(tr) - 12, 12)
+    seeds = 7 * 100003 + np.arange(12)
+    pw, aw = gather_windows(tr, t0s, 11)
+    batch = noisy_matrix_batch(pw, aw, kind, 0.3, seeds, fast_sim.W1MAX - 1)
+    ref = np.stack([
+        NoisyPredictor(tr.window(int(t0), 11), kind, 0.3,
+                       seed=int(s)).matrix(fast_sim.W1MAX - 1)
+        for t0, s in zip(t0s, seeds)
+    ])
+    np.testing.assert_array_equal(batch, ref)
+
+
+def test_job_stream_delegates_to_arrays():
+    """job_stream and job_stream_arrays draw identical jobs from equal rng
+    states (the delegation contract), and the arrays match stack_jobs."""
+    arrs = job_stream_arrays(np.random.default_rng(11), 32)
+    stacked = fast_sim.stack_jobs(list(job_stream(np.random.default_rng(11), 32)))
+    for a, b, f in zip(arrs, stacked, fast_sim.JobArrays._fields):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=f)
+    assert arrs.workload.shape == (32,)
+    assert np.all((arrs.n_min >= 1) & (arrs.n_min < 4))
+    assert np.all((arrs.n_max >= 12) & (arrs.n_max < 17))
+
+
+def test_normalize_utility_batch_matches_per_job():
+    rng = np.random.default_rng(4)
+    jobs = job_stream_arrays(rng, 10)
+    jobs_cfg = fast_sim.unstack_jobs(jobs)
+    u = rng.uniform(-400, 130, size=(10, 7)).astype(np.float32)
+    batch = np.asarray(normalize_utility_batch(jobs, u))
+    ref = np.stack([
+        np.asarray(normalize_utility(jobs_cfg[k], u[k])) for k in range(10)
+    ])
+    # Fig. 9 job params are all f32-exact, so the bounds agree bitwise
+    np.testing.assert_array_equal(batch, ref)
+    assert np.all((batch >= 0) & (batch <= 1))
+
+
+# ---------------------------------------------------------------------------
+# the engine end to end
+# ---------------------------------------------------------------------------
+
+def _small_workload(n_jobs=18, seed=7):
+    pool = (paper_pool(omegas=(1, 3), sigmas=(0.3, 0.7))
+            + rand_deadline_pool((0.3, 0.7)) + baseline_specs())
+    arrs = specs_to_arrays(pool)
+    rng = np.random.default_rng(seed)
+    trace = paper_market(seed=21, days=4)
+    jobs = job_stream_arrays(rng, n_jobs)
+    d = int(np.asarray(jobs.deadline)[0])
+    t0s = rng.integers(0, len(trace) - d - 1, size=n_jobs)
+    seeds = seed * 100003 + np.arange(n_jobs)
+    prices, avail, preds = engine.prepare_noisy_inputs(
+        trace, t0s, d, "fixed_uniform", 0.2, seeds
+    )
+    return pool, arrs, jobs, prices, avail, preds
+
+
+def test_engine_matches_host_loop_pipeline():
+    """simulate_and_select lands on the pre-engine pipeline's decision: same
+    simulated utilities (bitwise), f32-close weights, same winner."""
+    pool, arrs, jobs, prices, avail, preds = _small_workload()
+    n = int(jobs.workload.shape[0])
+    res = engine.simulate_and_select(
+        arrs, jobs, PAPER_TPUT, prices, avail, preds, return_utilities=True
+    )
+    out = fast_sim.simulate_pool_jobs(arrs, jobs, PAPER_TPUT, prices, avail, preds)
+    u = np.asarray(out["utility"])
+    np.testing.assert_array_equal(res.utilities, u)
+    jobs_cfg = fast_sim.unstack_jobs(jobs)
+    st = sel.init_selector(len(pool), n)
+    for k in range(n):
+        st = sel.update(st, np.asarray(normalize_utility(jobs_cfg[k], u[k])))
+    assert res.best_policy() == sel.best_policy(st)
+    np.testing.assert_allclose(
+        np.asarray(res.state.weights), st.weights, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        sel.regret(res.state), sel.regret(st), atol=1e-3
+    )
+    np.testing.assert_allclose(
+        res.mean_utility, u.mean(axis=0), rtol=1e-5, atol=1e-4
+    )
+
+
+def test_engine_chunked_equals_unchunked():
+    """Job-chunked streaming (K >> memory mode): trajectories and final
+    weights bitwise, the mean-utility accumulator to f32 tolerance —
+    including a chunk size that does not divide K."""
+    _, arrs, jobs, prices, avail, preds = _small_workload()
+    whole = engine.simulate_and_select(
+        arrs, jobs, PAPER_TPUT, prices, avail, preds,
+        track_history=True, return_utilities=True,
+    )
+    for chunk in (5, 6):
+        part = engine.simulate_and_select(
+            arrs, jobs, PAPER_TPUT, prices, avail, preds, job_chunk=chunk,
+            track_history=True, return_utilities=True,
+        )
+        np.testing.assert_array_equal(whole.utilities, part.utilities)
+        np.testing.assert_array_equal(whole.max_weight, part.max_weight)
+        np.testing.assert_array_equal(whole.regret, part.regret)
+        np.testing.assert_array_equal(whole.weight_history, part.weight_history)
+        np.testing.assert_array_equal(
+            np.asarray(whole.state.weights), np.asarray(part.state.weights)
+        )
+        np.testing.assert_allclose(
+            whole.mean_utility, part.mean_utility, rtol=1e-5, atol=1e-4
+        )
+    with pytest.raises(ValueError):
+        engine.simulate_and_select(
+            arrs, jobs, PAPER_TPUT, prices, avail, preds, job_chunk=-1
+        )
+
+
+def test_engine_state_threads_across_calls():
+    """Passing the returned state back in continues the stream (Fig. 10's
+    phase schedule): two calls over halves == one call over the whole."""
+    _, arrs, jobs, prices, avail, preds = _small_workload()
+    n = int(jobs.workload.shape[0])
+    whole = engine.simulate_and_select(
+        arrs, jobs, PAPER_TPUT, prices, avail, preds
+    )
+    half = n // 2
+    first = engine.simulate_and_select(
+        arrs, fast_sim.slice_jobs(jobs, 0, half), PAPER_TPUT,
+        prices[:half], avail[:half], preds[:half],
+        eta=float(whole.state.eta),
+    )
+    second = engine.simulate_and_select(
+        arrs, fast_sim.slice_jobs(jobs, half, n), PAPER_TPUT,
+        prices[half:], avail[half:], preds[half:], state=first.state,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(whole.state.weights), np.asarray(second.state.weights)
+    )
+    np.testing.assert_array_equal(
+        whole.max_weight, np.concatenate([first.max_weight, second.max_weight])
+    )
+
+
+def test_engine_sharded_flag_single_device_identical():
+    """sharded=True rides simulate_pool_jobs_sharded, which falls back
+    bitwise to the single-device path on one device."""
+    _, arrs, jobs, prices, avail, preds = _small_workload(n_jobs=9)
+    a = engine.simulate_and_select(
+        arrs, jobs, PAPER_TPUT, prices, avail, preds, sharded=True,
+        return_utilities=True,
+    )
+    b = engine.simulate_and_select(
+        arrs, jobs, PAPER_TPUT, prices, avail, preds, sharded=False,
+        return_utilities=True,
+    )
+    np.testing.assert_array_equal(a.utilities, b.utilities)
+    np.testing.assert_array_equal(
+        np.asarray(a.state.weights), np.asarray(b.state.weights)
+    )
