@@ -1,0 +1,184 @@
+"""Fleet-scale multi-job contention throughput: the device engine vs the
+host ``MultiJobScheduler`` loop it replaces.
+
+The workload is the Sec. III-A traffic shape at cluster scale: N jobs
+(default 1000) arriving within half a deadline of each other — so the
+whole fleet is live CONCURRENTLY — and contending for one shared
+paper-market spot pool. Per-job policies are drawn from EG selector
+weights learned by a pilot ``engine.simulate_and_select`` run (the
+select -> admit loop), so the policy mix is whatever the selector actually
+converged to, not a hand-picked split. All jobs share one JobConfig
+(arrivals differ): the host comparator's AHAP lanes then hit a single
+cached window-DP jit entry, which is the FAIR host baseline — distinct
+configs would measure recompilation, not scheduling.
+
+Two implementations produce the same per-job utilities:
+
+  engine   core.fleet.simulate_fleet_sharded — one lax.scan over market
+           slots, job axis batched (and sharded over the pool mesh),
+           least-slack waterfall as sort + cumsum clip.
+  loop     core.multi_job.MultiJobScheduler — the numpy oracle: one
+           python policy object per job, sorted residual allocation per
+           slot.
+
+Headline rows: ``fleet_sim_engine_vs_loop`` (loop-seconds over
+engine-seconds; >= 1.0 means the engine pays for itself) and
+``fleet_sim_utility_match`` (fraction of jobs whose oracle and engine
+utilities agree within 1e-2 — the repo's python-vs-f32-device tolerance).
+The opt-in guard (tests/test_bench_regression.py, RUN_BENCH_REGRESSION=1)
+pins both at the 1000-job scale. Rows fold into BENCH_pool_sim.json.
+
+Env knobs: FLEET_SIM_JOBS (default 1000), FLEET_SIM_REPEAT (default 2);
+POOL_SIM_MESH picks the engine's mesh; POOL_SIM_JSON redirects the JSON.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import (
+    PAPER_JOB,
+    PAPER_TPUT,
+    job_stream_arrays,
+    merge_bench_rows,
+    paper_market,
+)
+from benchmarks.pool_sim_bench import _JSON_PATH
+
+N_JOBS = int(os.environ.get("FLEET_SIM_JOBS", "1000"))
+REPEAT = int(os.environ.get("FLEET_SIM_REPEAT", "2"))
+DEADLINE = PAPER_JOB.deadline
+ARRIVAL_SPAN = DEADLINE // 2          # < deadline: every job live at once
+HORIZON = ARRIVAL_SPAN + DEADLINE
+PILOT_JOBS = 128                      # EG pilot that learns the weights
+KIND, LEVEL, SEED = "fixed_uniform", 0.1, 13
+UTIL_ATOL = 1e-2                      # python-f64 vs device-f32 tolerance
+
+
+def _timeit(fn, repeat: int = REPEAT):
+    """(warm-up result, steady-state seconds per call)."""
+    out = fn()
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        fn()
+    return out, (time.perf_counter() - t0) / repeat
+
+
+def _workload(arrs, n_pol: int, mesh):
+    """Shared market window, arrivals, and EG-admitted policy rows."""
+    from repro.core import engine, fast_sim
+
+    rng = np.random.default_rng(SEED)
+    trace = paper_market(seed=29, days=3).window(0, HORIZON + 1)
+    from repro.core.predictor import NoisyPredictor
+
+    pred = NoisyPredictor(trace, KIND, LEVEL, seed=SEED).matrix(
+        fast_sim.W1MAX - 1
+    )[:HORIZON].astype(np.float32)
+    prices = trace.prices[:HORIZON].astype(np.float32)
+    avail = trace.avail[:HORIZON].astype(np.int64)
+    arrivals = rng.integers(0, ARRIVAL_SPAN, size=N_JOBS)
+
+    # pilot selection: learn EG weights on a small job stream, then admit
+    # the whole fleet from them (SelectionResult.admission_rows)
+    pilot_trace = paper_market(seed=31, days=40)
+    pilot_jobs = job_stream_arrays(rng, PILOT_JOBS, DEADLINE)
+    t0s = rng.integers(0, len(pilot_trace) - DEADLINE - 1, size=PILOT_JOBS)
+    seeds = SEED * 100003 + np.arange(PILOT_JOBS)
+    res = engine.simulate_and_select(
+        arrs, pilot_jobs, PAPER_TPUT,
+        *engine.prepare_noisy_inputs(
+            pilot_trace, t0s, DEADLINE, KIND, LEVEL, seeds
+        ),
+        mesh=mesh,
+    )
+    rows, idx = res.admission_rows(arrs, N_JOBS, rng=rng)
+    return trace, prices, avail, pred, arrivals, rows, idx
+
+
+def _loop_fleet(pool, idx, jobs_cfg, arrivals, trace, pred):
+    """The numpy oracle, end to end: fresh python policy objects per run
+    (submit resets them), utilities in submission order."""
+    from repro.core.multi_job import MultiJobScheduler
+
+    sched = MultiJobScheduler(PAPER_TPUT, trace)
+    for i in range(N_JOBS):
+        sched.submit(int(arrivals[i]), jobs_cfg, pool[int(idx[i])].build(),
+                     pred=pred)
+    res = {r.job_id: r for r in sched.run(HORIZON)}
+    return np.array([res[i].utility for i in range(N_JOBS)])
+
+
+def run():
+    from repro.core import fast_sim, fleet
+    from repro.core.policy_pool import (
+        baseline_specs,
+        paper_pool,
+        rand_deadline_pool,
+        specs_to_arrays,
+    )
+    from repro.launch.mesh import make_pool_mesh, parse_pool_mesh_shape
+
+    pool = paper_pool() + rand_deadline_pool() + baseline_specs()
+    arrs = specs_to_arrays(pool)
+    mesh = make_pool_mesh(
+        shape=parse_pool_mesh_shape(os.environ.get("POOL_SIM_MESH", ""))
+    )
+    trace, prices, avail, pred, arrivals, rows, idx = _workload(
+        arrs, len(pool), mesh
+    )
+    jobs = fast_sim.stack_jobs([PAPER_JOB] * N_JOBS)
+
+    engine_fn = lambda: jax.block_until_ready(
+        fleet.simulate_fleet_sharded(
+            rows, jobs, arrivals, PAPER_TPUT, prices, avail, pred, mesh=mesh
+        )["utility"]
+    )
+    u_dev, secs_engine = _timeit(engine_fn)
+
+    u_loop, secs_loop = _timeit(
+        lambda: _loop_fleet(pool, idx, PAPER_JOB, arrivals, trace, pred)
+    )
+
+    diff = np.abs(np.asarray(u_dev) - u_loop)
+    match = float(np.mean(diff <= UTIL_ATOL))
+    ratio = secs_loop / secs_engine
+    # peak concurrency: arrivals span < deadline, so at slot ARRIVAL_SPAN
+    # every still-running job is live together
+    peak = int(max(
+        np.sum((arrivals <= t) & (t < arrivals + DEADLINE))
+        for t in range(HORIZON)
+    ))
+
+    rows_out = [
+        ("fleet_sim_engine", secs_engine * 1e6, N_JOBS / secs_engine),
+        ("fleet_sim_loop", secs_loop * 1e6, N_JOBS / secs_loop),
+        ("fleet_sim_engine_vs_loop", 0.0, ratio),
+        ("fleet_sim_utility_match", 0.0, match),
+        ("fleet_sim_peak_concurrency", 0.0, float(peak)),
+    ]
+    kinds, counts = np.unique(
+        np.asarray(rows["kind"]), return_counts=True
+    )
+    merge_bench_rows(_JSON_PATH, "fleet_sim", "fleet", rows_out, {
+        "workload": {
+            "jobs": N_JOBS, "slots": HORIZON, "arrival_span": ARRIVAL_SPAN,
+            "policies": len(pool), "pilot_jobs": PILOT_JOBS,
+            "noise": f"{KIND}@{LEVEL:g}",
+        },
+        "pool_mesh": "x".join(map(str, mesh.devices.shape)),
+        "engine_vs_loop": ratio,
+        "utility_match": match,
+        "max_abs_utility_diff": float(diff.max()),
+        "admitted_kinds": {int(k): int(c) for k, c in zip(kinds, counts)},
+    })
+    return rows_out
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run())

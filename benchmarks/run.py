@@ -36,6 +36,7 @@ MODULES = [
     "pool_sim_bench",
     "region_sim",
     "selection_e2e",
+    "fleet_sim",
 ]
 
 

@@ -109,6 +109,19 @@ class SelectionResult:
             m, int(self.state.k)
         )
 
+    def admission_rows(self, pool_arrays: dict, n: int, rng=None,
+                       greedy: bool = False):
+        """Per-job policy rows for fleet admission, drawn from the final
+        EG weights — the select -> admit loop: ``core.fleet`` consumes the
+        returned rows as each arriving job's policy. Returns ``(rows,
+        idx)`` like :func:`fleet.policy_rows_from_weights`."""
+        from repro.core import fleet  # deferred: fleet must not import engine
+
+        return fleet.policy_rows_from_weights(
+            pool_arrays, np.asarray(self.state.weights), n,
+            rng=rng, greedy=greedy,
+        )
+
 
 def simulate_and_select(
     pool_arrays: dict,

@@ -393,7 +393,13 @@ def _ahap_rule_batch(jcfg, j: JobArrays, tput, v, backend, z, t, price, av,
     (P, W1MAX, 2), plans is (P, VMAX, W1MAX, 2). The CHC solve is ONE
     ``solve_window_batch`` call across all lanes — a single fused kernel
     launch per slot on the Pallas backends. Elementwise ops broadcast over
-    the lane axis, so results are bitwise-equal to the per-lane rule."""
+    the lane axis, so results are bitwise-equal to the per-lane rule.
+
+    ``t`` may be a scalar (all lanes share the slot clock, the pool path)
+    or a (P,) vector of per-lane local clocks (the fleet path, where lanes
+    are jobs with different arrivals); scalar callers are unchanged
+    bitwise. In the vector case ``jcfg``/``j``/``av`` may be per-lane too —
+    ``solve_window_batch`` and the elementwise rules broadcast them."""
     p = z.shape[0]
     ahead = z >= zee_t
     chc_o, chc_s, _ = solve_window_batch(
@@ -407,7 +413,9 @@ def _ahap_rule_batch(jcfg, j: JobArrays, tput, v, backend, z, t, price, av,
     ).astype(jnp.float32)                               # (P, W1MAX, 2)
     plans = jnp.concatenate([plan[:, None], plans[:, :-1]], axis=1)
     kk = jnp.arange(VMAX)
-    valid = ((kk[None, :] < v[:, None]) & (kk <= t)[None, :])
+    t_arr = jnp.asarray(t)
+    made = kk[None, :] <= (t_arr[:, None] if t_arr.ndim else t_arr)
+    valid = (kk[None, :] < v[:, None]) & made
     valid = valid[..., None].astype(jnp.float32)        # (P, VMAX, 1)
     diag = plans[:, kk, jnp.minimum(kk, W1MAX - 1)]     # (P, VMAX, 2)
     cnt = jnp.maximum(valid.sum(axis=(1, 2)), 1.0)      # (P,)
@@ -757,11 +765,9 @@ def _run_partitioned_sharded(pool_arrays, jobs, tput, prices, avail, pred,
     (prices/avail/pred) is sharded over jobs and replicated only across the
     lane axis, where every lane shard genuinely needs all of it."""
     from repro import sharding as shardlib
+    from repro.launch.mesh import pool_mesh_job_axes
 
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    n_lane_dev = int(sizes.get("lanes", 1))
-    jobs_axes = tuple(a for a in mesh.axis_names if a != "lanes")
-    n_jobs_dev = int(np.prod([sizes[a] for a in jobs_axes])) if jobs_axes else 1
+    jobs_axes, n_jobs_dev, n_lane_dev = pool_mesh_job_axes(mesh)
 
     n_jobs = int(np.shape(jobs.workload)[0])
     pad_j = (-n_jobs) % n_jobs_dev

@@ -1,0 +1,400 @@
+"""Device-resident fleet-scale multi-job contention engine.
+
+The paper's Sec. III-A extension — jobs arriving over time and competing
+for one finite spot pool under least-slack-first arbitration — as a single
+``lax.scan`` over market slots with the job axis batched (and optionally
+sharded over the pool mesh). Semantics are pinned bit-for-bit-in-spirit to
+the numpy parity oracle ``core.multi_job.MultiJobScheduler``:
+
+  * **demand phase** — every live job's policy decides against the FULL
+    slot supply. AHAP jobs run the slot-major batched window DP
+    (``fast_sim._ahap_rule_batch`` over per-job local clocks ``t -
+    arrival``); the five cheap kinds run their vectorized rules;
+  * **waterfall phase** — spot demand is granted least-slack-first as a
+    sort + cumulative-supply clip instead of a Python loop: with demands
+    sorted by the float32 slack key (job-id tie-break), ``grant_i =
+    clip(S - (cumsum(d)_i - d_i), 0, d_i)`` makes cumulative grants equal
+    ``min(cumsum(d), S)`` — integer-exact, identical to the oracle's
+    sequential residual loop;
+  * **execute phase** — ``fast_sim._execute`` on the granted spot (its
+    internal feasibility clip reduces to exactly the oracle's post-grant
+    N^min top-up), with arrivals/retirements gated by ``t - arrival``
+    masks so jobs stream in and out without host round-trips.
+
+Sharding lays the job axis over the pool mesh's ``"jobs"`` axis (2-D
+meshes replicate over ``"lanes"``: the fleet has no lane axis). Each
+device holds an equal ``[AHAP block | cheap block]`` slice — both kind
+blocks pad to device divisibility independently, so the static AHAP split
+is uniform across shards — and the waterfall runs on an ``all_gather`` of
+(demand, slack, id), every device granting the identical global order and
+keeping its own slice. Padded jobs carry ``arrival = T`` (never live,
+demand 0), so they cannot perturb real grants in any sort position:
+sharded results are bitwise-equal to the single-device scan.
+
+Per-job policy rows come from the EG selector weights that
+``engine.simulate_and_select`` produces (``policy_rows_from_weights`` /
+``SelectionResult.admission_rows``), closing the select -> admit loop.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ThroughputConfig
+from repro.core import fast_sim
+from repro.core.fast_sim import VMAX, W1MAX, JobArrays
+from repro.core.policy_pool import KIND_AHAP
+
+_POLICY_KEYS = ("kind", "omega", "v", "sigma", "rho", "cfrac")
+
+
+# ---------------------------------------------------------------------------
+# Least-slack-first waterfall
+# ---------------------------------------------------------------------------
+
+def _waterfall(demand, slack, ids, supply):
+    """Grant ``demand`` (i32) in ascending ``(slack, id)`` order against a
+    scalar ``supply``. Cumulative grants equal ``min(cumsum(demand),
+    supply)`` — the vectorized form of "each job takes ``min(demand,
+    residual)``" — so the result is integer-exact, not an approximation."""
+    order = jnp.lexsort((ids, slack))
+    d_sorted = demand[order]
+    cum = jnp.cumsum(d_sorted)
+    g_sorted = jnp.clip(supply - (cum - d_sorted), 0, d_sorted)
+    return jnp.zeros_like(demand).at[order].set(g_sorted)
+
+
+# ---------------------------------------------------------------------------
+# The fleet scan (runs whole on one device, or per shard under shard_map)
+# ---------------------------------------------------------------------------
+
+def _fleet_scan(pol, jobs, arrivals, ids, tput, prices, avail, pred,
+                backend: str, n_ahap: int, axis_name: Optional[str] = None):
+    """One ``lax.scan`` over market slots for a fleet (shard).
+
+    ``jobs``/``arrivals``/``ids`` are (Jl,) leaves ordered ``[AHAP block |
+    cheap block]`` with the static split at ``n_ahap``; ``pol`` holds the
+    per-job policy rows in the same order. ``prices``/``avail``/``pred``
+    are the full shared market ((T,), (T,), (T, W1MAX, 2)); the present-
+    slot forecast row is pre-clamped to the pool supply by the callers.
+    Under ``shard_map`` (``axis_name="jobs"``) the waterfall all-gathers
+    (demand, slack, id) so every shard grants the identical global order.
+    """
+    prices = jnp.asarray(prices, jnp.float32)
+    av_i = jnp.asarray(avail).astype(jnp.int32)
+    dmax = prices.shape[0]
+    n_jobs = arrivals.shape[0]
+    has_ahap = n_ahap > 0
+    has_cheap = n_jobs - n_ahap > 0
+    ts = jnp.arange(dmax)
+    # AHANP observes last slot's availability; in the fleet every job sees
+    # the shared pool, so the "previous avail" is just the shifted supply
+    # (a job's first live slot sees the current supply, like the python
+    # policy's first decide).
+    sup_prev = jnp.concatenate([av_i[:1], av_i[:-1]])
+
+    ja = fast_sim.slice_jobs(jobs, 0, n_ahap)
+    jc = fast_sim.slice_jobs(jobs, n_ahap, n_jobs)
+    if has_ahap:
+        jcfg_a = fast_sim._job_cfg(ja)
+        v_a = pol["v"][:n_ahap]
+        arr_a = arrivals[:n_ahap]
+        # scan-invariant AHAP scaffolding, slot-major like
+        # _simulate_lanes_ahap, but on per-job local clocks t - arrival
+        # (pre-arrival rows are garbage-but-finite; the plans-validity mask
+        # k <= local_t in _ahap_rule_batch keeps them out of every average)
+        pr, thr_s, z_exp_end, eff_slots = jax.vmap(
+            lambda t, pm: jax.vmap(
+                lambda jr, w, s, r, a: fast_sim._ahap_precompute(
+                    jr, w, s, r, t - a, pm
+                )
+            )(ja, pol["omega"][:n_ahap], pol["sigma"][:n_ahap],
+              pol["rho"][:n_ahap], arr_a)
+        )(ts, pred)
+    if has_cheap:
+        kind_c = pol["kind"][n_ahap:]
+        sigma_c = pol["sigma"][n_ahap:]
+        cfrac_c = pol["cfrac"][n_ahap:]
+
+    if axis_name is None:
+        ids_all, start = ids, 0
+    else:
+        ids_all = jax.lax.all_gather(ids, axis_name, tiled=True)
+        start = jax.lax.axis_index(axis_name) * n_jobs
+
+    h_max = tput.alpha * jobs.n_max.astype(jnp.float32) + tput.beta
+
+    def step(carry, xs):
+        z, n_prev, cost, done, T, plans = carry
+        if has_ahap:
+            price, sup, sup_p, t, pr_t, thr_t, zee_t, eff_t = xs
+        else:
+            price, sup, sup_p, t = xs
+        lt = t - arrivals
+        live = (lt >= 0) & (lt < jobs.deadline) & ~done
+
+        # ---- demand phase: every policy decides at the FULL supply
+        d_o_parts, d_s_parts = [], []
+        if has_ahap:
+            d_o_a, d_s_a, plans = fast_sim._ahap_rule_batch(
+                jcfg_a, ja, tput, v_a, backend, z[:n_ahap], lt[:n_ahap],
+                price, sup, plans, pr_t, thr_t, zee_t, eff_t,
+            )
+            d_o_parts.append(d_o_a)
+            d_s_parts.append(d_s_a)
+        if has_cheap:
+            ltc = lt[n_ahap:]
+            zc, npv = z[n_ahap:], n_prev[n_ahap:]
+            pa = jnp.where(ltc >= 1, sup_p, sup)
+            an_o, an_s = fast_sim._ahanp_rule(
+                jc, sigma_c, zc, ltc, price, sup, npv, pa)
+            od_o, od_s = fast_sim._od_rule(jc, tput, zc, ltc, price, sup)
+            ms_o, ms_s = fast_sim._msu_rule(jc, tput, zc, ltc, price, sup)
+            up_o, up_s = fast_sim._up_rule(jc, tput, zc, ltc, price, sup)
+            rd_o, rd_s = fast_sim._rand_rule(
+                jc, tput, cfrac_c, zc, ltc, price, sup)
+            sel = [kind_c == 1, kind_c == 2, kind_c == 3, kind_c == 4,
+                   kind_c == 5]
+            d_o_parts.append(jnp.select(sel, [an_o, od_o, ms_o, up_o, rd_o]))
+            d_s_parts.append(jnp.select(sel, [an_s, od_s, ms_s, up_s, rd_s]))
+        d_o = d_o_parts[0] if len(d_o_parts) == 1 else jnp.concatenate(d_o_parts)
+        d_s = d_s_parts[0] if len(d_s_parts) == 1 else jnp.concatenate(d_s_parts)
+        # demand clip against the full pool; dead jobs demand nothing
+        d_s = jnp.clip(d_s, 0, jnp.minimum(sup, jobs.n_max))
+        d_o = jnp.clip(d_o, 0, jobs.n_max - d_s)
+        d_s = jnp.where(live, d_s, 0)
+        d_o = jnp.where(live, d_o, 0)
+
+        # ---- waterfall phase: least-slack-first grants (global order)
+        slack = ((arrivals + jobs.deadline - t).astype(jnp.float32)
+                 - jnp.maximum(jobs.workload - z, 0.0) / h_max)
+        if axis_name is None:
+            grant = _waterfall(d_s, slack, ids, sup)
+        else:
+            d_all = jax.lax.all_gather(d_s, axis_name, tiled=True)
+            s_all = jax.lax.all_gather(slack, axis_name, tiled=True)
+            g_all = _waterfall(d_all, s_all, ids_all, sup)
+            grant = jax.lax.dynamic_slice(g_all, (start,), (n_jobs,))
+
+        # ---- execute phase: local clock, pre-arrival masked to inactive
+        mt = jnp.where(lt >= 0, lt, jobs.deadline)
+        z, n_prev, cost, done, T, n_o, n_s, _ = fast_sim._execute(
+            jobs, tput, z, n_prev, cost, done, T, mt, d_o, grant, price,
+            grant,
+        )
+        return (z, n_prev, cost, done, T, plans), (n_o, n_s)
+
+    init = (
+        jnp.zeros((n_jobs,), jnp.float32), jnp.zeros((n_jobs,), jnp.int32),
+        jnp.zeros((n_jobs,), jnp.float32), jnp.zeros((n_jobs,), jnp.bool_),
+        jnp.zeros((n_jobs,), jnp.float32),
+        jnp.zeros((n_ahap, VMAX, W1MAX, 2), jnp.float32),
+    )
+    xs = (prices, av_i, sup_prev, ts)
+    if has_ahap:
+        xs = xs + (pr, thr_s, z_exp_end, eff_slots)
+    (z, _, cost, done, T, _), (no_hist, ns_hist) = jax.lax.scan(
+        step, init, xs)
+    return fast_sim._finalize(
+        fast_sim._job_cfg(jobs), jobs, tput, z, cost, done, T,
+        jnp.swapaxes(no_hist, 0, 1), jnp.swapaxes(ns_hist, 0, 1),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tput", "backend", "n_ahap"))
+def _fleet_call(pol, jobs, arrivals, ids, tput, prices, avail, pred,
+                backend: str, n_ahap: int):
+    return _fleet_scan(pol, jobs, arrivals, ids, tput, prices, avail, pred,
+                       backend, n_ahap)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_fleet_call(mesh, tput, backend: str, n_ahap: int):
+    """jit(shard_map)-wrapped fleet runner, cached on the static
+    configuration (same reasoning as fast_sim._sharded_pool_call: a fresh
+    shard_map closure per call would re-lower the whole program)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    jspec, rspec = P("jobs"), P()
+
+    def local(pol, jobs, arrivals, ids, prices, avail, pred):
+        return _fleet_scan(pol, jobs, arrivals, ids, tput, prices, avail,
+                           pred, backend, n_ahap, axis_name="jobs")
+
+    return jax.jit(shard_map(
+        local, mesh=mesh,
+        in_specs=(jspec, jspec, jspec, jspec, rspec, rspec, rspec),
+        out_specs=jspec, check_rep=False,
+    ))
+
+
+# ---------------------------------------------------------------------------
+# Host-side prep: policy rows, market tensors, kind blocking
+# ---------------------------------------------------------------------------
+
+def _norm_rows(pool_rows):
+    """Per-job policy rows as host arrays with engine dtypes + defaults."""
+    kind = np.asarray(pool_rows["kind"], np.int32)
+    n = kind.shape[0]
+    rows = {
+        "kind": kind,
+        "omega": np.asarray(pool_rows.get("omega", np.zeros(n)), np.int32),
+        "v": np.maximum(
+            np.asarray(pool_rows.get("v", np.ones(n)), np.int32), 1),
+        "sigma": np.asarray(pool_rows.get("sigma", np.zeros(n)), np.float32),
+        "rho": np.asarray(pool_rows.get("rho", np.ones(n)), np.float32),
+        "cfrac": np.asarray(pool_rows.get("cfrac", np.zeros(n)), np.float32),
+    }
+    return rows, n
+
+
+def _prepare_market(prices, avail, pred):
+    """f32/i-typed market tensors with the oracle's present-slot clamp:
+    ``pred[t, 0, 1] <- min(pred[t, 0, 1], avail[t])`` (the pool caps what
+    the present slot can deliver; future rows stay the global forecast).
+    ``pred=None`` falls back to a persistence forecast (present price and
+    supply repeated over the horizon)."""
+    prices = np.asarray(prices, np.float32)
+    avail = np.asarray(avail)
+    dmax = prices.shape[0]
+    if pred is None:
+        base = np.stack([prices, avail.astype(np.float32)], axis=-1)
+        pred = np.broadcast_to(base[:, None, :], (dmax, W1MAX, 2))
+    pred = np.array(pred, dtype=np.float32, copy=True)
+    pred[:, 0, 1] = np.minimum(pred[:, 0, 1], avail.astype(np.float32))
+    return prices, avail, pred
+
+
+def _take_jobs(jobs: JobArrays, idx) -> JobArrays:
+    idx = jnp.asarray(idx)
+    return JobArrays(*[jnp.asarray(f)[idx] for f in jobs])
+
+
+def simulate_fleet(pool_rows, jobs: JobArrays, arrivals, tput, prices,
+                   avail, pred=None, backend: str = "xla"):
+    """Simulate a fleet of jobs contending for one spot pool, on device.
+
+    ``pool_rows`` — per-job policy rows (``kind``/``omega``/``v``/``sigma``
+    /``rho``/``cfrac``, each (J,)), e.g. from
+    :func:`policy_rows_from_weights`. ``jobs`` — stacked (J,) JobArrays
+    (``fast_sim.stack_jobs``). ``arrivals`` — (J,) absolute arrival slots.
+    ``prices``/``avail``/``pred`` — ONE shared market trace ((T,), (T,),
+    optional (T, W1MAX, 2) absolute-time forecasts).
+
+    Returns the ``fast_sim._finalize`` dict (utility/value/cost/
+    completion_time/z_ddl/completed + (J, T) allocation histories), in
+    submission order. Semantics match ``multi_job.MultiJobScheduler`` (the
+    numpy oracle): completion times are on each job's local clock.
+    """
+    rows, n = _norm_rows(pool_rows)
+    assert n == int(np.shape(jobs.workload)[0]) == int(np.shape(arrivals)[0])
+    prices, avail_np, pred = _prepare_market(prices, avail, pred)
+    aidx = np.flatnonzero(rows["kind"] == KIND_AHAP)
+    cidx = np.flatnonzero(rows["kind"] != KIND_AHAP)
+    order = np.concatenate([aidx, cidx]).astype(np.int32)
+    pos = np.argsort(order, kind="stable")
+    pol = {k: jnp.asarray(v[order]) for k, v in rows.items()}
+    out = _fleet_call(
+        pol, _take_jobs(jobs, order),
+        jnp.asarray(np.asarray(arrivals, np.int32)[order]),
+        jnp.asarray(order), tput, jnp.asarray(prices),
+        jnp.asarray(avail_np), jnp.asarray(pred), backend, len(aidx),
+    )
+    take = jnp.asarray(pos)
+    return {k: jnp.take(v, take, axis=0) for k, v in out.items()}
+
+
+def simulate_fleet_sharded(pool_rows, jobs: JobArrays, arrivals, tput,
+                           prices, avail, pred=None, backend: str = "xla",
+                           mesh=None):
+    """:func:`simulate_fleet` with the job axis laid over the pool mesh.
+
+    Default mesh: ``launch.mesh.make_pool_mesh()`` (1-D over every visible
+    device). On a 2-D ``("jobs", "lanes")`` mesh only the ``"jobs"`` axis
+    shards (the fleet has no lane axis; lanes replicate), so a lanes-only
+    ``(1, n)`` mesh — like a single device — falls through to the
+    unsharded scan. Each kind block pads to device divisibility with
+    ``arrival = T`` sentinel jobs (never live, zero demand: provably
+    inert in the waterfall), and results are bitwise-equal to
+    :func:`simulate_fleet` (pinned in tests/test_fleet.py)."""
+    from repro.launch.mesh import make_pool_mesh, pool_mesh_job_axes
+
+    mesh = make_pool_mesh() if mesh is None else mesh
+    _, n_jobs_dev, _ = pool_mesh_job_axes(mesh)
+    if n_jobs_dev <= 1:
+        return simulate_fleet(pool_rows, jobs, arrivals, tput, prices,
+                              avail, pred, backend)
+
+    rows, n = _norm_rows(pool_rows)
+    assert n == int(np.shape(jobs.workload)[0]) == int(np.shape(arrivals)[0])
+    prices, avail_np, pred = _prepare_market(prices, avail, pred)
+    dmax = prices.shape[0]
+    arr_np = np.asarray(arrivals, np.int32)
+    aidx = np.flatnonzero(rows["kind"] == KIND_AHAP)
+    cidx = np.flatnonzero(rows["kind"] != KIND_AHAP)
+    d = n_jobs_dev
+    j_a = -(-len(aidx) // d) if len(aidx) else 0   # per-device block sizes
+    j_c = -(-len(cidx) // d) if len(cidx) else 0
+
+    def block(idx, per_dev):
+        lay = np.full(d * per_dev, -1, np.int64)
+        lay[: len(idx)] = idx
+        return lay.reshape(d, per_dev)
+
+    # interleave [AHAP block | cheap block] per device: every shard gets
+    # the same static (j_a + j_c) structure with the AHAP split at j_a
+    lay = np.concatenate([block(aidx, j_a), block(cidx, j_c)], axis=1)
+    lay = lay.reshape(-1)
+    fill = np.concatenate([
+        np.full((d, j_a), aidx[0] if len(aidx) else 0, np.int64),
+        np.full((d, j_c), cidx[0] if len(cidx) else 0, np.int64),
+    ], axis=1).reshape(-1)
+    gidx = np.where(lay >= 0, lay, fill)
+    is_pad = lay < 0
+    arr_l = arr_np[gidx].copy()
+    arr_l[is_pad] = dmax                       # sentinel: never live
+    ids_l = np.where(is_pad, n + np.arange(lay.shape[0]), lay)
+
+    pol = {k: jnp.asarray(v[gidx]) for k, v in rows.items()}
+    call = _sharded_fleet_call(mesh, tput, backend, j_a)
+    out = call(
+        pol, _take_jobs(jobs, gidx), jnp.asarray(arr_l),
+        jnp.asarray(ids_l.astype(np.int32)), jnp.asarray(prices),
+        jnp.asarray(avail_np), jnp.asarray(pred),
+    )
+    # rows of real ids 0..n-1 in submission order; pads (ids >= n) dropped
+    take = jnp.asarray(np.argsort(ids_l, kind="stable")[:n])
+    return {k: jnp.take(v, take, axis=0) for k, v in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# EG-weighted admission (select -> admit loop)
+# ---------------------------------------------------------------------------
+
+def policy_rows_from_weights(pool_arrays, weights, n, rng=None,
+                             greedy: bool = False):
+    """Per-job policy rows drawn from EG selector weights.
+
+    Algorithm 2's Line 6 "select" generalized to fleet admission: each of
+    the ``n`` arriving jobs samples its policy i.i.d. from the selector
+    distribution (``greedy=True`` admits everyone on the argmax instead).
+    ``pool_arrays`` is the ``specs_to_arrays`` dict the weights were
+    learned over. Returns ``(rows, idx)`` — the per-job row dict
+    :func:`simulate_fleet` consumes, plus the (n,) pool indices (handy for
+    building python oracle policies via ``pool[i].build()``)."""
+    from repro.core.selector import sample_policies
+
+    w = np.asarray(weights, np.float64)
+    if greedy:
+        idx = np.full(int(n), int(np.argmax(w)), np.int64)
+    else:
+        rng = np.random.default_rng(0) if rng is None else rng
+        idx = sample_policies(w, int(n), rng)
+    rows = {k: np.asarray(pool_arrays[k])[idx]
+            for k in _POLICY_KEYS if k in pool_arrays}
+    return rows, idx.astype(np.int32)

@@ -5,18 +5,22 @@ Jobs arrive over time and COMPETE for the same finite spot pool; each job
 runs its own policy instance (chosen by the per-job EG selector state), and
 a simple priority mechanism arbitrates the shared capacity:
 
-  * spot supply is allocated in order of *deadline slack* (least-slack
-    first): jobs closest to violating their SLO get spot first — the
-    textbook EDF-style rule adapted to elastic allocations;
+  * every live job first *demands* spot against the full slot supply (its
+    policy sees the real market, so single-job semantics are intact and a
+    solo job matches the reference simulator exactly);
+  * spot grants then run a least-slack-first waterfall (deadline slack,
+    float32, job-id tie-break): jobs closest to violating their SLO drain
+    the supply first — the textbook EDF-style rule adapted to elastic
+    allocations — and each job executes with what it was granted;
   * on-demand is unlimited (cloud semantics), so contention only reshapes
-    the cheap-capacity split.
+    the cheap-capacity split (a job whose grant fell below N^min tops up
+    with on-demand, exactly like the single-job feasibility repair).
 
-The scheduler keeps the single-job policy semantics intact: every policy
-sees a *virtual* market whose availability is the residual supply after
-higher-priority jobs took their share. Utilities therefore remain
-comparable with single-job simulation, and Theorem 2 applies per job
-unchanged (the pool's utility estimates are computed on each job's
-realized residual market).
+This demand-then-grant formulation is order-free on the decision side —
+which is what lets core.fleet run the identical semantics as one batched
+``lax.scan`` on device. This module is the numpy parity oracle for that
+engine: the slack key is computed in float32 with the same op order, and
+ties break on job id, so the two waterfalls sort identical keys.
 """
 from __future__ import annotations
 
@@ -45,17 +49,18 @@ class ActiveJob:
     alloc_spot: List[int] = field(default_factory=list)
     alloc_od: List[int] = field(default_factory=list)
 
-    def slack(self, t: int, tput: ThroughputConfig) -> float:
-        """Slots to spare if finished at N^max from now on (can be < 0)."""
-        remaining = max(self.job.workload - self.z, 0.0)
-        h_max = tput.alpha * self.job.n_max + tput.beta
-        need = remaining / h_max
-        deadline_abs = self.arrival + self.job.deadline
-        return (deadline_abs - t) - need
+    def slack(self, t: int, tput: ThroughputConfig) -> np.float32:
+        """Slots to spare if finished at N^max from now on (can be < 0).
 
-    @property
-    def local_t(self) -> int:
-        return -1  # set per step by the scheduler
+        float32 on purpose: the device fleet engine (core.fleet) sorts the
+        same key, so the waterfall priority order cannot drift between the
+        oracle and the batched scan.
+        """
+        remaining = np.float32(max(self.job.workload - self.z, 0.0))
+        h_max = (np.float32(tput.alpha) * np.float32(self.job.n_max)
+                 + np.float32(tput.beta))
+        deadline_abs = self.arrival + self.job.deadline
+        return np.float32(deadline_abs - t) - remaining / h_max
 
 
 @dataclass
@@ -88,56 +93,80 @@ class MultiJobScheduler:
 
     # ------------------------------------------------------------------
     def step(self, t: int):
-        """One market slot: least-slack-first spot arbitration."""
+        """One market slot: demand at full supply, then least-slack grants."""
         price = float(self.trace.prices[t])
         supply = int(self.trace.avail[t])
-        order = sorted(self.active, key=lambda a: a.slack(t, self.tput))
-        for aj in order:
-            local_t = t - aj.arrival
-            if local_t >= aj.job.deadline:
-                continue  # termination config handles it at finalize
+        live = [aj for aj in self.active
+                if 0 <= t - aj.arrival < aj.job.deadline]
+
+        # Phase 1 — every live job demands against the FULL slot supply.
+        demands = []
+        for aj in live:
             pred = None
             if aj.pred is not None:
-                pred = aj.pred[t]
-                pred = np.array(pred, copy=True)
-                # residual supply for the present slot; forecasts stay global
+                pred = np.array(aj.pred[t], copy=True)
+                # the pool caps what the present slot can deliver;
+                # future rows stay the global forecast
                 pred[0, 1] = min(pred[0, 1], supply)
-            obs = Obs(t=local_t, price=price, avail=supply, z_prev=aj.z,
-                      n_prev=aj.n_prev, pred=pred)
+            obs = Obs(t=t - aj.arrival, price=price, avail=supply,
+                      z_prev=aj.z, n_prev=aj.n_prev, pred=pred)
             n_o, n_s = aj.policy.decide(obs)
             n_s = int(np.clip(n_s, 0, min(supply, aj.job.n_max)))
             n_o = int(np.clip(n_o, 0, aj.job.n_max - n_s))
+            demands.append((aj, n_o, n_s))
+
+        # Phase 2 — least-slack-first waterfall over the shared pool;
+        # job-id tie-break keeps the order total (and matches core.fleet).
+        demands.sort(key=lambda d: (d[0].slack(t, self.tput), d[0].job_id))
+        residual = supply
+        a32 = np.float32(self.tput.alpha)
+        b32 = np.float32(self.tput.beta)
+        for aj, n_o, n_s in demands:
+            n_s = min(n_s, residual)
+            residual -= n_s
             n = n_o + n_s
-            if 0 < n < aj.job.n_min:
+            if 0 < n < aj.job.n_min:  # grant fell below N^min: top up with od
                 n_o += aj.job.n_min - n
                 n = n_o + n_s
-            supply -= n_s
+            local_t = t - aj.arrival
 
             mu = 1.0 if n == aj.n_prev else (
                 self.tput.mu1 if n > aj.n_prev else self.tput.mu2
             )
             if n == 0 and aj.n_prev == 0:
                 mu = 1.0
-            work = mu * (self.tput.alpha * n + (self.tput.beta if n > 0 else 0.0))
+            # float32 execution arithmetic, op-for-op the device engine's
+            # _execute: progress trajectories stay bitwise-aligned with
+            # core.fleet, so discrete policy decisions downstream of z (the
+            # window DP's argmax sits on near-ties) cannot flip between the
+            # oracle and the batched scan.
+            wl32 = np.float32(aj.job.workload)
+            z32 = np.float32(aj.z)
+            work = np.float32(mu) * (
+                a32 * np.float32(n) + b32 if n > 0 else np.float32(0.0)
+            )
             aj.cost += n_s * price + n_o * aj.job.on_demand_price
             aj.alloc_spot.append(n_s)
             aj.alloc_od.append(n_o)
-            if work > 0 and aj.z + work >= aj.job.workload and aj.t_complete is None:
-                aj.t_complete = local_t + (aj.job.workload - aj.z) / work
-            aj.z = min(aj.z + work, aj.job.workload)
+            if work > 0 and z32 + work >= wl32 and aj.t_complete is None:
+                frac = (wl32 - z32) / max(work, np.float32(1e-9))
+                aj.t_complete = float(np.float32(local_t) + frac)
+            aj.z = float(min(z32 + work, wl32))
             aj.n_prev = n
 
         # retire finished / past-deadline jobs
         still = []
         for aj in self.active:
-            local_t = t - aj.arrival
-            if aj.t_complete is not None:
-                self.done.append(self._finalize(aj))
-            elif local_t + 1 >= aj.job.deadline:
+            if self._retired(aj, t):
                 self.done.append(self._finalize(aj))
             else:
                 still.append(aj)
         self.active = still
+
+    @staticmethod
+    def _retired(aj: ActiveJob, t: int) -> bool:
+        """Completed, or the deadline passes before the next slot."""
+        return aj.t_complete is not None or t - aj.arrival + 1 >= aj.job.deadline
 
     # ------------------------------------------------------------------
     def _finalize(self, aj: ActiveJob) -> JobResult:

@@ -103,6 +103,19 @@ def best_policy(state) -> int:
     return int(np.argmax(state.weights))
 
 
+def sample_policies(state_or_weights, n: int,
+                    rng: np.random.Generator) -> np.ndarray:
+    """``n`` i.i.d. draws from the selector distribution — Line 6 of
+    Alg. 2 vectorized for fleet admission (one policy per arriving job).
+    Accepts a SelectorState/EGState or a bare weight vector; weights are
+    renormalized in f64 (the device state is f32)."""
+    w = np.asarray(getattr(state_or_weights, "weights", state_or_weights),
+                   np.float64)
+    w = np.maximum(w, 0.0)
+    w = w / w.sum()
+    return rng.choice(len(w), size=int(n), p=w)
+
+
 # ---------------------------------------------------------------------------
 # Device-resident EG: jitted lax.scan over a (K, M) utility matrix
 # ---------------------------------------------------------------------------

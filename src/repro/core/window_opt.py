@@ -47,6 +47,20 @@ from repro.core.job import tilde_value
 
 _BIG = 1.0e9
 
+# Deterministic near-tie resolution. The paper's round constants (p^o = 1,
+# value/deadline ratios) make "the marginal unit is exactly free" a
+# structural occurrence, and at an exact f32 tie the argmax is at the mercy
+# of compilation: XLA may or may not emit FMA for the cost/gain products
+# depending on the surrounding program, so two jit programs of this very
+# file can disagree by 1 ulp and pick opposite sides of the tie (observed:
+# the python-policy jit entry vs the fleet scan). Biasing the gain by
+# -TIE_EPS per unit makes every near-tie (true marginal value < TIE_EPS)
+# resolve to FEWER units in every compilation — 2^-10 is exact in f32
+# (no new rounding), ~2 orders above FMA noise at the objective's scale,
+# and ~2 orders below any real marginal value. The reported objective is
+# un-biased before returning, so achieved-utility pins are unaffected.
+TIE_EPS = np.float32(2.0 ** -10)
+
 BACKENDS = ("xla", "xla-gather", "pallas", "pallas-interpret")
 
 
@@ -75,7 +89,7 @@ def _unit_cost_table(job, tput, z0, slots_to_deadline, prices, avail, p_o, tn):
 
     u_grid = jnp.arange(w1 * tn + 1)
     zs = jnp.asarray(z0, jnp.float32) + tput.alpha * u_grid.astype(jnp.float32)
-    gain = tilde_value(job, tput, zs)
+    gain = tilde_value(job, tput, zs) - TIE_EPS * u_grid.astype(jnp.float32)
     return slot_cost, spot_units, gain
 
 
@@ -204,6 +218,11 @@ def solve_window_batch(
     lane-batched shifted-slice DP. Bitwise-equal per lane to
     ``jax.vmap(solve_window)`` (pinned in tests/test_window_dp_kernel.py).
 
+    ``job`` fields (and ``p_o``) may also be (B,) vectors — one job per
+    batch row, the fleet engine's shape — in which case the unit table is
+    built per row. Every op in ``_unit_cost_table`` is elementwise in the
+    job fields, so the shared-job lane path is unchanged bitwise.
+
     Returns (n_o (B, w1), n_s (B, w1), objective (B,)).
     """
     assert backend in BACKENDS, backend
@@ -212,12 +231,28 @@ def solve_window_batch(
     tn = int(table_n)
     assert tn > 0, "solve_window_batch needs a static table_n"
 
-    slot_cost, spot_units, gain = jax.vmap(
-        lambda z, std, pr, av: _unit_cost_table(
-            job, tput, z, std, pr, av, p_o, tn
+    if jnp.asarray(job.workload).ndim:
+        b = prices.shape[0]
+        bc = lambda x: jnp.broadcast_to(jnp.asarray(x), (b,))
+
+        def _row_table(z, std, pr, av, wl, dl, nmin, nmax, val, gam, po):
+            row_job = JobConfig(workload=wl, deadline=dl, n_min=nmin,
+                                n_max=nmax, value=val, gamma=gam,
+                                on_demand_price=po)
+            return _unit_cost_table(row_job, tput, z, std, pr, av, po, tn)
+
+        slot_cost, spot_units, gain = jax.vmap(_row_table)(
+            jnp.asarray(z0, jnp.float32), jnp.asarray(slots_to_deadline),
+            prices, avail, bc(job.workload), bc(job.deadline), bc(job.n_min),
+            bc(job.n_max), bc(job.value), bc(job.gamma), bc(p_o),
         )
-    )(jnp.asarray(z0, jnp.float32), jnp.asarray(slots_to_deadline),
-      prices, avail)
+    else:
+        slot_cost, spot_units, gain = jax.vmap(
+            lambda z, std, pr, av: _unit_cost_table(
+                job, tput, z, std, pr, av, p_o, tn
+            )
+        )(jnp.asarray(z0, jnp.float32), jnp.asarray(slots_to_deadline),
+          prices, avail)
 
     if backend in ("pallas", "pallas-interpret"):
         from repro.kernels.window_dp import window_dp
@@ -234,6 +269,7 @@ def solve_window_batch(
 
     n_s = jnp.minimum(n_tot, spot_units).astype(jnp.int32)
     n_o = n_tot - n_s
+    obj_star = obj_star + TIE_EPS * jnp.sum(n_tot, axis=1).astype(jnp.float32)
     return n_o, n_s, obj_star
 
 
@@ -277,6 +313,7 @@ def solve_window(
 
     n_s = jnp.minimum(n_tot, spot_units).astype(jnp.int32)
     n_o = n_tot - n_s
+    obj_star = obj_star + TIE_EPS * jnp.sum(n_tot).astype(jnp.float32)
     return n_o, n_s, obj_star
 
 

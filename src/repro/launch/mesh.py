@@ -61,6 +61,23 @@ def make_pool_mesh(devices=None, shape=None):
     return Mesh(np.asarray(devices).reshape(shape), axes)
 
 
+def pool_mesh_job_axes(mesh):
+    """How a pool mesh splits the simulation grid.
+
+    Returns ``(jobs_axes, n_jobs_dev, n_lane_dev)``: the mesh axis names
+    that shard the job dimension, the total device count along them, and
+    the lane-axis device count (1 on a 1-D mesh). Shared by the pool
+    simulator (jobs x lanes grids) and the fleet engine (jobs only,
+    replicated over ``"lanes"``)."""
+    import numpy as np
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_lane_dev = int(sizes.get("lanes", 1))
+    jobs_axes = tuple(a for a in mesh.axis_names if a != "lanes")
+    n_jobs_dev = int(np.prod([sizes[a] for a in jobs_axes])) if jobs_axes else 1
+    return jobs_axes, n_jobs_dev, n_lane_dev
+
+
 def parse_pool_mesh_shape(spec: str):
     """``"4"`` -> (4,), ``"2x2"`` -> (2, 2) — the POOL_SIM_MESH knob format.
     Empty/``"auto"`` -> None (make_pool_mesh's 1-D default)."""

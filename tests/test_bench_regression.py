@@ -19,9 +19,14 @@ tests are opt-in:
         tests/test_bench_regression.py
 
 Knobs: POOL_SIM_JOBS / POOL_SIM_REPEAT / POOL_SIM_SCALE_JOBS /
-POOL_SIM_SCALE_REPEAT / POOL_SIM_MESH / SEL_E2E_JOBS / SEL_E2E_REPEAT
-shrink or reshape the workloads (the guards set small defaults for
-themselves below).
+POOL_SIM_SCALE_REPEAT / POOL_SIM_MESH / SEL_E2E_JOBS / SEL_E2E_REPEAT /
+FLEET_SIM_JOBS / FLEET_SIM_REPEAT shrink or reshape the workloads (the
+guards set small defaults for themselves below).
+
+Since the fleet PR the guard set also covers the multi-job contention
+engine: core.fleet at the 1000-job scale must be no slower than the
+MultiJobScheduler host loop AND must reproduce every per-job utility the
+numpy oracle computes (fleet_sim_utility_match == 1.0).
 """
 import json
 import os
@@ -159,3 +164,39 @@ def test_selection_engine_not_slower_than_host_loop():
     )
     # both pipelines must land on the same winning policy
     assert rows["selection_e2e_same_winner"]["derived"] == 1.0
+
+
+def test_fleet_engine_not_slower_than_host_loop_4dev():
+    """The fleet guard (multi-job contention PR): at the 1000-job fleet
+    scale, the device-resident contention engine must be no slower than the
+    per-job-python-policy MultiJobScheduler host loop, on 4 forced host
+    devices — and the two must agree on EVERY per-job utility within the
+    repo's python-vs-f32-device tolerance (the window DP's deterministic
+    near-tie resolution makes exact agreement achievable; a drop below 1.0
+    means compilation-dependent argmax flips are back).
+    FLEET_SIM_JOBS in the caller env shrinks the workload for local runs."""
+    payload = _run_pool_bench(
+        defaults={
+            "FLEET_SIM_JOBS": "1000",
+            "FLEET_SIM_REPEAT": "1",
+        },
+        force={
+            "XLA_FLAGS": (os.environ.get("XLA_FLAGS", "")
+                          + " --xla_force_host_platform_device_count=4"
+                          ).strip(),
+        },
+        only="fleet_sim",
+    )
+    assert payload["devices"] == 4, payload["devices"]
+    rows = {r["name"]: r for r in payload["rows"]}
+    assert "fleet_sim_engine_vs_loop" in rows, sorted(rows)
+    ratio = rows["fleet_sim_engine_vs_loop"]["derived"]
+    assert ratio >= MIN_ENGINE_RATIO, (
+        f"fleet engine regressed: {ratio:.2f}x < {MIN_ENGINE_RATIO}x the "
+        f"MultiJobScheduler host loop\n"
+        f"rows: { {n: r['derived'] for n, r in rows.items()} }"
+    )
+    assert rows["fleet_sim_utility_match"]["derived"] == 1.0, (
+        "per-job utility parity with the numpy oracle broke:\n"
+        f"rows: { {n: r['derived'] for n, r in rows.items()} }"
+    )

@@ -1,0 +1,321 @@
+"""Fleet-engine parity: core.fleet vs its two references.
+
+``simulate_fleet`` must (a) collapse to the single-job pool simulator
+bitwise when there is no contention — the per-job decision rules are the
+very same jitted code — and (b) match the numpy ``MultiJobScheduler``
+oracle through the demand-then-waterfall contention semantics at the
+repo's python-vs-f32-device tolerance (1e-2 on utilities). On top of the
+parity pins: capacity conservation, the least-slack-first grant order,
+arrival/retirement masking, padded-job inertness, and the EG-weighted
+admission helpers. The multi-device half mirrors tests/test_sharded_pool —
+a subprocess forces 4 host devices and pins ``simulate_fleet_sharded``
+bitwise against the unsharded engine across mesh shapes and padding cases.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+
+from benchmarks.common import job_stream  # noqa: E402
+from repro.configs.base import JobConfig, ThroughputConfig  # noqa: E402
+from repro.core import fast_sim, fleet  # noqa: E402
+from repro.core.market import vast_like_trace  # noqa: E402
+from repro.core.multi_job import MultiJobScheduler  # noqa: E402
+from repro.core.policy_pool import (  # noqa: E402
+    baseline_specs,
+    paper_pool,
+    rand_deadline_pool,
+    specs_to_arrays,
+)
+from repro.core.predictor import NoisyPredictor  # noqa: E402
+
+TPUT = ThroughputConfig(mu1=0.9, mu2=0.95)
+D = 10
+
+
+def _small_pool():
+    return (paper_pool(omegas=(2,), sigmas=(0.5,))
+            + rand_deadline_pool((0.4,)) + baseline_specs())
+
+
+def _market(T, seed=5, noise_seed=3):
+    tr = vast_like_trace(seed=seed, days=2).window(0, T + 1)
+    prices = tr.prices[:T].astype(np.float32)
+    avail = tr.avail[:T].astype(np.int64)
+    pred = NoisyPredictor(tr, "fixed_uniform", 0.2, seed=noise_seed).matrix(
+        fast_sim.W1MAX - 1
+    )[:T].astype(np.float32)
+    return tr, prices, avail, pred
+
+
+def _rows(arrs, idx):
+    return {k: np.asarray(arrs[k])[idx]
+            for k in ("kind", "omega", "v", "sigma", "rho", "cfrac")}
+
+
+# ---------------------------------------------------------------------------
+# single job: no contention -> bitwise the pool simulator
+# ---------------------------------------------------------------------------
+
+def test_single_job_bitwise_matches_pool_sim():
+    pool = _small_pool()
+    arrs = specs_to_arrays(pool)
+    job = JobConfig(workload=40, deadline=D, n_min=1, n_max=10, value=80.0)
+    _, prices, avail, pred = _market(D, seed=1, noise_seed=0)
+    stacked1 = fast_sim.stack_jobs([job])
+    base = fast_sim.simulate_pool_jobs(
+        arrs, stacked1, TPUT, prices[None], avail[None], pred[None]
+    )
+    for li in range(len(pool)):
+        out = fleet.simulate_fleet(
+            _rows(arrs, [li]), stacked1, [0], TPUT, prices, avail, pred
+        )
+        for k in ("utility", "cost", "completion_time", "z_ddl", "completed",
+                  "n_od", "n_spot"):
+            np.testing.assert_array_equal(
+                np.asarray(base[k])[0, li], np.asarray(out[k])[0],
+                err_msg=f"{k} lane={pool[li].name}",
+            )
+
+
+# ---------------------------------------------------------------------------
+# multi-job: the numpy oracle, conservation, padding, 1-device fallback
+# ---------------------------------------------------------------------------
+
+def _contended_fleet(J=12, T=24):
+    pool = _small_pool()
+    arrs = specs_to_arrays(pool)
+    rng = np.random.default_rng(7)
+    tr, prices, avail, pred = _market(T)
+    jobs = list(job_stream(rng, J, deadline=D))
+    arrivals = rng.integers(0, 8, size=J)
+    idx = rng.integers(0, len(pool), size=J)
+    rows = _rows(arrs, idx)
+    out = fleet.simulate_fleet(rows, fast_sim.stack_jobs(jobs), arrivals,
+                               TPUT, prices, avail, pred)
+    return pool, idx, jobs, arrivals, tr, prices, avail, pred, rows, out
+
+
+def test_multi_job_matches_numpy_oracle():
+    (pool, idx, jobs, arrivals, tr, _, _, pred, _, out) = _contended_fleet()
+    T = len(tr.prices) - 1
+    sched = MultiJobScheduler(TPUT, tr)
+    for i in range(len(jobs)):
+        sched.submit(int(arrivals[i]), jobs[i], pool[int(idx[i])].build(),
+                     pred=pred)
+    res = {r.job_id: r for r in sched.run(T)}
+    for i in range(len(jobs)):
+        for field, key in (("utility", "utility"), ("cost", "cost"),
+                           ("completion_time", "completion_time")):
+            np.testing.assert_allclose(
+                float(np.asarray(out[key])[i]), getattr(res[i], field),
+                atol=1e-2, err_msg=f"job {i} ({pool[int(idx[i])].name}) {key}",
+            )
+
+
+def test_spot_grants_conserve_supply():
+    (*_, avail, _, _, out) = _contended_fleet()
+    granted = np.asarray(out["n_spot"]).sum(axis=0)
+    assert np.all(granted <= avail), (granted, avail)
+
+
+def test_padded_jobs_are_inert():
+    (pool, idx, jobs, arrivals, tr, prices, avail, pred, rows, out) = \
+        _contended_fleet()
+    T = len(prices)
+    J = len(jobs)
+    jobs_p = jobs + [jobs[0]]
+    rows_p = {k: np.concatenate([v, v[:1]]) for k, v in rows.items()}
+    arr_p = np.concatenate([arrivals, [T]])  # arrival = T: never live
+    out_p = fleet.simulate_fleet(rows_p, fast_sim.stack_jobs(jobs_p), arr_p,
+                                 TPUT, prices, avail, pred)
+    for k in out:
+        np.testing.assert_array_equal(
+            np.asarray(out[k]), np.asarray(out_p[k])[:J], err_msg=k
+        )
+
+
+def test_sharded_single_device_fallback_bitwise():
+    import jax
+
+    assert jax.device_count() == 1
+    (_, _, jobs, arrivals, _, prices, avail, pred, rows, out) = \
+        _contended_fleet()
+    sh = fleet.simulate_fleet_sharded(rows, fast_sim.stack_jobs(jobs),
+                                      arrivals, TPUT, prices, avail, pred)
+    for k in out:
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(sh[k]),
+                                      err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# waterfall order + masking semantics, pinned on a hand-checkable scenario
+# ---------------------------------------------------------------------------
+
+def test_least_slack_first_and_completion_release():
+    """Two all-spot (MSU) jobs against a constant 8-unit pool: the tight
+    deadline drains first (6 of 8), the slack one rides the residual (2)
+    until it completes at slot 2 — after which it stops demanding and the
+    supply it held is NOT granted to anyone (sum drops), while the tight
+    job keeps its full grant through its deadline and nothing is allocated
+    outside either job's live window."""
+    T = 8
+    prices = np.full(T, 0.5, np.float32)
+    avail = np.full(T, 8, np.int64)
+    tight = JobConfig(workload=60, deadline=5, n_min=1, n_max=6, value=80.0)
+    slackj = JobConfig(workload=4, deadline=10, n_min=1, n_max=6, value=80.0)
+    from repro.core.policy_pool import KIND_MSU
+
+    rows = {"kind": np.array([KIND_MSU, KIND_MSU])}
+    out = fleet.simulate_fleet(rows, fast_sim.stack_jobs([tight, slackj]),
+                               [0, 0], TPUT, prices, avail, None)
+    ns = np.asarray(out["n_spot"])
+    # tight job: full 6-unit grant on every live slot, nothing after d=5
+    np.testing.assert_array_equal(ns[0], [6, 6, 6, 6, 6, 0, 0, 0])
+    # slack job: residual 2 until it completes during slot 2, then retired
+    np.testing.assert_array_equal(ns[1], [2, 2, 2, 0, 0, 0, 0, 0])
+    assert bool(np.asarray(out["completed"])[1])
+    # slot-2 progress: 1.8 (ramp-up mu1) + 2.0 + 2.0 covers workload 4
+    np.testing.assert_allclose(float(np.asarray(out["completion_time"])[1]),
+                               2.1, atol=1e-6)
+    assert not bool(np.asarray(out["completed"])[0])
+
+
+def test_arrival_masks_allocations():
+    """A job arriving at t=a never holds capacity outside [a, a+d)."""
+    (_, _, jobs, arrivals, _, _, _, _, _, out) = _contended_fleet()
+    ns = np.asarray(out["n_spot"])
+    no = np.asarray(out["n_od"])
+    T = ns.shape[1]
+    ts = np.arange(T)[None, :]
+    a = np.asarray(arrivals)[:, None]
+    d = np.asarray([j.deadline for j in jobs])[:, None]
+    outside = (ts < a) | (ts >= a + d)
+    assert not np.any(ns[outside]), "spot allocated outside live window"
+    assert not np.any(no[outside]), "on-demand allocated outside live window"
+
+
+# ---------------------------------------------------------------------------
+# EG-weighted admission
+# ---------------------------------------------------------------------------
+
+def test_policy_rows_from_weights():
+    import jax.numpy as jnp
+
+    from repro.core import engine, selector
+
+    pool = _small_pool()
+    arrs = specs_to_arrays(pool)
+    w = np.zeros(len(pool))
+    w[3], w[5] = 2.0, 1.0
+
+    rows, idx = fleet.policy_rows_from_weights(arrs, w, 8, greedy=True)
+    assert np.all(idx == 3)
+    for k in rows:
+        np.testing.assert_array_equal(np.asarray(rows[k]),
+                                      np.asarray(arrs[k])[idx], err_msg=k)
+
+    rows2, idx2 = fleet.policy_rows_from_weights(
+        arrs, w, 256, rng=np.random.default_rng(0)
+    )
+    assert set(np.unique(idx2)) <= {3, 5}
+    assert 0.5 < float(np.mean(idx2 == 3)) < 0.85  # ~2/3 from the 2:1 weights
+    for k in rows2:
+        np.testing.assert_array_equal(np.asarray(rows2[k]),
+                                      np.asarray(arrs[k])[idx2], err_msg=k)
+
+    # rng=None must be deterministic (fixed seed), not time-dependent
+    _, ia = fleet.policy_rows_from_weights(arrs, w, 16)
+    _, ib = fleet.policy_rows_from_weights(arrs, w, 16)
+    np.testing.assert_array_equal(ia, ib)
+
+    # the engine-side hook delegates here with the selector's final weights
+    st = selector.eg_init(len(pool), 16)._replace(
+        weights=jnp.asarray(w / w.sum(), jnp.float32)
+    )
+    res = engine.SelectionResult(
+        state=st, mean_utility=np.zeros(len(pool)),
+        max_weight=np.zeros(1), regret=np.zeros(1), n_jobs=0,
+    )
+    _, idx3 = res.admission_rows(arrs, 8, greedy=True)
+    np.testing.assert_array_equal(idx3, idx)
+
+
+# ---------------------------------------------------------------------------
+# sharded engine == unsharded engine, bitwise, on 4 forced host devices
+# ---------------------------------------------------------------------------
+
+# Job counts 3/5/9 exercise the under-, padding- and non-dividing layouts of
+# the interleaved [AHAP | cheap] per-device blocks; the mesh list covers the
+# default 1-D jobs mesh, the 2-D (jobs, lanes) mesh (fleet replicates over
+# "lanes"), lanes-only (jobs axis size 1 -> unsharded fallback) and an
+# explicit 1-D shape.
+_CHILD = r"""
+import numpy as np
+import jax
+
+assert jax.device_count() == 4, jax.devices()
+
+from benchmarks.common import job_stream
+from repro.configs.base import ThroughputConfig
+from repro.core import fast_sim, fleet
+from repro.core.market import vast_like_trace
+from repro.core.policy_pool import (
+    baseline_specs, paper_pool, rand_deadline_pool, specs_to_arrays,
+)
+from repro.core.predictor import NoisyPredictor
+from repro.launch.mesh import make_pool_mesh
+
+TPUT = ThroughputConfig(mu1=0.9, mu2=0.95)
+d = 10
+T = 20
+pool = (paper_pool(omegas=(2,), sigmas=(0.5,))
+        + rand_deadline_pool((0.4,)) + baseline_specs())
+arrs = specs_to_arrays(pool)
+tr = vast_like_trace(seed=5, days=1).window(0, T + 1)
+prices = tr.prices[:T].astype(np.float32)
+avail = tr.avail[:T].astype(np.int64)
+pred = NoisyPredictor(tr, "fixed_uniform", 0.2, seed=3).matrix(
+    fast_sim.W1MAX - 1)[:T].astype(np.float32)
+rng = np.random.default_rng(11)
+MESHES = [None, (2, 2), (1, 4), (4,)]
+for J in (3, 5, 9):
+    jobs = list(job_stream(rng, J, deadline=d))
+    arrivals = rng.integers(0, 8, size=J)
+    idx = rng.integers(0, len(pool), size=J)
+    rows = {k: np.asarray(arrs[k])[idx] for k in
+            ("kind", "omega", "v", "sigma", "rho", "cfrac")}
+    stacked = fast_sim.stack_jobs(jobs)
+    base = fleet.simulate_fleet(rows, stacked, arrivals, TPUT,
+                                prices, avail, pred)
+    for shape in MESHES:
+        sh = fleet.simulate_fleet_sharded(
+            rows, stacked, arrivals, TPUT, prices, avail, pred,
+            mesh=None if shape is None else make_pool_mesh(shape=shape))
+        for k in base:
+            np.testing.assert_array_equal(
+                np.asarray(base[k]), np.asarray(sh[k]),
+                err_msg=f"{k} J={J} mesh={shape}")
+print("FLEET-SHARDED-OK")
+"""
+
+
+def test_fleet_sharded_matches_unsharded_4dev_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=4"
+    ).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [SRC, os.path.dirname(SRC)] + env.get("PYTHONPATH", "").split(os.pathsep)
+    ).rstrip(os.pathsep)
+    out = subprocess.run(
+        [sys.executable, "-c", _CHILD], capture_output=True, text=True,
+        env=env, timeout=900,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "FLEET-SHARDED-OK" in out.stdout
