@@ -28,18 +28,24 @@ def timed(fn: Callable, *args, repeat: int = 1, **kw):
     return out, dt * 1e6  # us
 
 
-def job_stream_arrays(rng: np.random.Generator, n: int, deadline: int = 10):
+def job_stream_arrays(rng: np.random.Generator, n: int, deadline: int = 10,
+                      workload_scale: float = 1.0):
     """Fig. 9 job distribution as stacked fast_sim.JobArrays — ONE vectorized
     rng call per field (the engine-scale path; no per-job python loop).
     L ~ U[70,120], Nmin in [1,4), Nmax in [12,17); value/gamma/on-demand
     price from the paper job. Leaf dtypes match fast_sim.stack_jobs, so
     ``stack_jobs(list(job_stream(rng, n)))`` equals
-    ``job_stream_arrays(rng2, n)`` bitwise for equal rng states."""
+    ``job_stream_arrays(rng2, n)`` bitwise for equal rng states.
+
+    ``workload_scale`` multiplies the drawn workloads (in f64, before the
+    f32 cast) — the scenario grid's deadline-tightness axis: the deadline
+    stays 10 slots so market tensors stay uniform, while the same base
+    draws get proportionally more or less work. 1.0 is a bitwise no-op."""
     from repro.core.fast_sim import JobArrays
 
     cfg = JobConfig(deadline=deadline, value=PAPER_JOB.value)
     return JobArrays(
-        workload=rng.uniform(70, 120, n).astype(np.float32),
+        workload=(rng.uniform(70, 120, n) * workload_scale).astype(np.float32),
         deadline=np.full(n, cfg.deadline, np.int32),
         n_min=rng.integers(1, 4, n).astype(np.int32),
         n_max=rng.integers(12, 17, n).astype(np.int32),

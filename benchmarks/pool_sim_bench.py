@@ -242,9 +242,9 @@ def run():
         ],
         "speedup_partitioned_vs_seed": speedup,
     }
-    # benchmarks/region_sim.py and benchmarks/selection_e2e.py merge their
-    # rows into the same file in place; a pool_sim rerun must carry them
-    # over, not clobber them
+    # benchmarks/{region_sim,selection_e2e,fleet_sim,scenario_grid}.py merge
+    # their rows into the same file in place; a pool_sim rerun must carry
+    # them over, not clobber them
     try:
         with open(_JSON_PATH) as f:
             prev = json.load(f)
@@ -252,9 +252,10 @@ def run():
         prev = {}
     payload["rows"] += [
         r for r in prev.get("rows", [])
-        if str(r.get("name", "")).startswith(("region_sim", "selection_e2e"))
+        if str(r.get("name", "")).startswith(
+            ("region_sim", "selection_e2e", "fleet_sim", "scenario_grid"))
     ]
-    for key in ("region", "selection"):
+    for key in ("region", "selection", "fleet", "scenario_grid"):
         if key in prev:
             payload[key] = prev[key]
     with open(_JSON_PATH, "w") as f:

@@ -37,7 +37,20 @@ MODULES = [
     "region_sim",
     "selection_e2e",
     "fleet_sim",
+    "scenario_grid",
 ]
+
+
+def select_modules(only: str):
+    """Resolve a comma-separated ``--only`` prefix list against MODULES.
+    Returns ``(selected, unknown)`` — ``unknown`` holds every prefix that
+    matched nothing, so a typo (``--only pool_sim,felt_sim``) is an error
+    callers can surface instead of a silently skipped benchmark."""
+    sel = [s for s in only.split(",") if s]
+    selected = [m for m in MODULES
+                if not sel or any(m.startswith(s) for s in sel)]
+    unknown = [s for s in sel if not any(m.startswith(s) for m in MODULES)]
+    return selected, unknown
 
 
 def main() -> None:
@@ -46,15 +59,18 @@ def main() -> None:
     ap.add_argument("--json", default="",
                     help="also write all rows to this path as JSON")
     args = ap.parse_args()
-    sel = [s for s in args.only.split(",") if s]
+    selected, unknown = select_modules(args.only)
+    if unknown:
+        raise SystemExit(
+            f"unknown benchmark name(s): {', '.join(unknown)}\n"
+            f"known modules: {', '.join(MODULES)}"
+        )
 
     print("name,us_per_call,derived")
     failures = 0
     json_rows = []
     t_start = time.time()
-    for mod_name in MODULES:
-        if sel and not any(mod_name.startswith(s) for s in sel):
-            continue
+    for mod_name in selected:
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])

@@ -45,7 +45,7 @@ from repro.core.market import gather_windows
 from repro.core.predictor import noisy_matrix_batch
 
 
-def prepare_noisy_inputs(trace, t0s, deadline: int, kind: str, level: float,
+def prepare_noisy_inputs(trace, t0s, deadline: int, kind: str, level,
                          seeds, horizon: Optional[int] = None,
                          avail_max: int = 16):
     """Batched Fig. 9-style prep: gather the K job windows in one indexing
@@ -53,7 +53,9 @@ def prepare_noisy_inputs(trace, t0s, deadline: int, kind: str, level: float,
     Returns ``(prices (K, d) f32, avail (K, d) i64, preds (K, d, W1MAX, 2)
     f32)`` ready for ``simulate_pool_jobs[_sharded]``. Row k equals the
     per-job ``NoisyPredictor(trace.window(t0s[k], d+1), ..., seed=seeds[k])``
-    construction it replaces."""
+    construction it replaces. ``level`` may be a scalar or a per-row (K,)
+    array (``noisy_matrix_batch``'s contract) — the scenario grid passes
+    per-regime noise levels through one call this way."""
     horizon = fast_sim.W1MAX - 1 if horizon is None else horizon
     pw, aw = gather_windows(trace, t0s, deadline + 1)
     preds = noisy_matrix_batch(pw, aw, kind, level, seeds, horizon,

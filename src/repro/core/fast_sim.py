@@ -1187,6 +1187,19 @@ def slice_jobs(jobs: JobArrays, start: int, stop: int) -> JobArrays:
     return JobArrays(*[f[start:stop] for f in jobs])
 
 
+def concat_jobs(parts) -> JobArrays:
+    """Concatenate stacked JobArrays along the job axis (host numpy leaves)
+    — the inverse of repeated :func:`slice_jobs`; how the scenario grid
+    stacks per-regime job blocks regime-major onto one jobs axis."""
+    parts = list(parts)
+    if len(parts) == 1:
+        return parts[0]
+    return JobArrays(*[
+        np.concatenate([np.asarray(getattr(p, f)) for p in parts])
+        for f in JobArrays._fields
+    ])
+
+
 def unstack_jobs(jobs: JobArrays):
     """Stacked (K,) JobArrays -> list of JobConfig (host scalars) — the
     inverse of :func:`stack_jobs`, for python-reference paths that need

@@ -58,7 +58,7 @@ def true_future_batch(prices: np.ndarray, avail: np.ndarray,
 
 
 def noisy_matrix_batch(prices: np.ndarray, avail: np.ndarray, kind: str,
-                       level: float, seeds, horizon: int,
+                       level, seeds, horizon: int,
                        avail_max: int = 16) -> np.ndarray:
     """Batched :class:`NoisyPredictor`: the whole (K, T, horizon+1, 2)
     forecast stack in one vectorized pass over (K, T) market windows.
@@ -70,7 +70,13 @@ def noisy_matrix_batch(prices: np.ndarray, avail: np.ndarray, kind: str,
     ``np.random.default_rng(seeds[k])`` exactly as the per-job constructor
     would — the per-seed draw is the one per-row op left (independent
     streams have no batch API); everything around it is vectorized, which
-    is what collapses Fig. 9's per-job predictor loop into array code."""
+    is what collapses Fig. 9's per-job predictor loop into array code.
+
+    ``level`` may be a scalar (one noise level for every row) or a (K,)
+    array of per-row levels — how the scenario grid realizes its
+    prediction-noise axis inside one batched call; row k then matches the
+    per-job construction at ``level[k]`` (level 0 rows reduce to the
+    perfect forecast)."""
     assert kind in NOISE_KINDS, kind
     prices = np.asarray(prices, float)
     avail = np.asarray(avail, float)
@@ -78,7 +84,12 @@ def noisy_matrix_batch(prices: np.ndarray, avail: np.ndarray, kind: str,
     out = true_future_batch(prices, avail, horizon)
     K = out.shape[0]
     assert seeds.shape == (K,), (seeds.shape, K)
-    scale = level * np.sqrt(np.arange(horizon + 1))  # 0 at j=0
+    level = np.asarray(level, float)
+    if level.ndim == 0:
+        scale = level * np.sqrt(np.arange(horizon + 1))          # 0 at j=0
+    else:
+        assert level.shape == (K,), (level.shape, K)
+        scale = level[:, None] * np.sqrt(np.arange(horizon + 1))  # (K, h+1)
     ref = np.stack([
         np.broadcast_to(prices.mean(axis=1)[:, None], prices.shape),
         np.broadcast_to(avail.mean(axis=1)[:, None], avail.shape),
@@ -93,7 +104,10 @@ def noisy_matrix_batch(prices: np.ndarray, avail: np.ndarray, kind: str,
             np.clip(np.random.default_rng(int(s)).standard_t(3, shape), -8, 8)
             for s in seeds
         ]) / np.sqrt(3)
-    eps = eps * scale[None, None, :, None]
+    if scale.ndim == 1:
+        eps = eps * scale[None, None, :, None]
+    else:
+        eps = eps * scale[:, None, :, None]
     if kind.startswith("magdep"):
         noisy = out * (1.0 + eps)
     else:

@@ -21,12 +21,16 @@ tests are opt-in:
 Knobs: POOL_SIM_JOBS / POOL_SIM_REPEAT / POOL_SIM_SCALE_JOBS /
 POOL_SIM_SCALE_REPEAT / POOL_SIM_MESH / SEL_E2E_JOBS / SEL_E2E_REPEAT /
 FLEET_SIM_JOBS / FLEET_SIM_REPEAT shrink or reshape the workloads (the
-guards set small defaults for themselves below).
+guards set small defaults for themselves below; the scenario-grid winner
+pins force their own SCENARIO_GRID_* config so the pinned map always
+refers to one fixed workload).
 
 Since the fleet PR the guard set also covers the multi-job contention
 engine: core.fleet at the 1000-job scale must be no slower than the
 MultiJobScheduler host loop AND must reproduce every per-job utility the
-numpy oracle computes (fleet_sim_utility_match == 1.0).
+numpy oracle computes (fleet_sim_utility_match == 1.0). Since the
+scenario-grid PR it also pins the per-regime winner map of a 16-regime
+shrunken grid — behavioral, not timing, so the pins are exact.
 """
 import json
 import os
@@ -164,6 +168,74 @@ def test_selection_engine_not_slower_than_host_loop():
     )
     # both pipelines must land on the same winning policy
     assert rows["selection_e2e_same_winner"]["derived"] == 1.0
+
+
+# Per-regime winner pins for the scenario grid's forced shrunken config
+# (2 avail x 1 sigma x 2 tight x 2 mu x 2 noise = 16 regimes, 8 jobs each,
+# full 124-lane pool). The derived column of each winner row is the lane
+# INDEX in paper_pool() + rand_deadline_pool() + baseline_specs() order;
+# the names are recorded here for the reader. The map is the measured form
+# of "the selector adapts": scarce/cheap-restart regimes flip to MSU or
+# short-window AHAP lanes, abundant regimes keep the Fig. 9 winner
+# ahap(w=5,v=1,s=0.3). Utilities are bitwise-deterministic under tier-1
+# conditions (CPU, x64 off; sharded == single-device is pinned), so a
+# changed cell means a real behavior change, not noise.
+SCENARIO_WINNER_PINS = {
+    "a3.5_s0.5_t0.8_m0.9_n0": 122,      # msu
+    "a3.5_s0.5_t0.8_m0.9_n0.3": 122,    # msu
+    "a3.5_s0.5_t1.15_m0.9_n0": 77,      # ahap(w=5,v=2,s=0.3)
+    "a3.5_s0.5_t1.15_m0.9_n0.3": 42,    # ahap(w=4,v=1,s=0.3)
+    "a9_s0.5_t0.8_m0.9_n0": 70,         # ahap(w=5,v=1,s=0.3)
+    "a9_s0.5_t0.8_m0.9_n0.3": 70,       # ahap(w=5,v=1,s=0.3)
+    "a9_s0.5_t1.15_m0.9_n0": 70,        # ahap(w=5,v=1,s=0.3)
+    "a9_s0.5_t1.15_m0.9_n0.3": 70,      # ahap(w=5,v=1,s=0.3)
+    "a3.5_s0.5_t0.8_m0.7_n0": 28,       # ahap(w=3,v=2,s=0.3)
+    "a3.5_s0.5_t0.8_m0.7_n0.3": 70,     # ahap(w=5,v=1,s=0.3)
+    "a3.5_s0.5_t1.15_m0.7_n0": 28,      # ahap(w=3,v=2,s=0.3)
+    "a3.5_s0.5_t1.15_m0.7_n0.3": 11,    # ahap(w=2,v=1,s=0.7)
+    "a9_s0.5_t0.8_m0.7_n0": 21,         # ahap(w=3,v=1,s=0.3)
+    "a9_s0.5_t0.8_m0.7_n0.3": 21,       # ahap(w=3,v=1,s=0.3)
+    "a9_s0.5_t1.15_m0.7_n0": 5,         # ahap(w=1,v=1,s=0.8)
+    "a9_s0.5_t1.15_m0.7_n0.3": 4,       # ahap(w=1,v=1,s=0.7)
+}
+
+
+def test_scenario_grid_winner_pins():
+    """The scenario-grid guard: a future PR that silently flips a winner
+    map cell must fail here. Drives the bench with a forced 16-regime
+    config (the workload knobs always win over caller env so the pins
+    mean one fixed workload) and compares every per-regime winner row
+    against the recorded map."""
+    payload = _run_pool_bench(
+        defaults={},
+        force={
+            "SCENARIO_GRID_JOBS": "8",
+            "SCENARIO_GRID_AVAIL": "3.5,9.0",
+            "SCENARIO_GRID_SIGMA": "0.5",
+            "SCENARIO_GRID_TIGHT": "0.8,1.15",
+            "SCENARIO_GRID_MU": "0.9:0.95,0.7:0.85",
+            "SCENARIO_GRID_NOISE": "0.0,0.3",
+            "SCENARIO_GRID_REPEAT": "1",
+        },
+        only="scenario_grid",
+    )
+    rows = {r["name"]: r for r in payload["rows"]}
+    assert rows["scenario_grid_regimes"]["derived"] == len(
+        SCENARIO_WINNER_PINS
+    )
+    mismatches = {}
+    for key, want in SCENARIO_WINNER_PINS.items():
+        row = rows.get(f"scenario_grid_winner__{key}")
+        assert row is not None, (key, sorted(rows))
+        if int(row["derived"]) != want:
+            mismatches[key] = (want, int(row["derived"]))
+    assert not mismatches, (
+        "scenario-grid winner map changed (regime: expected_idx -> got_idx):"
+        f" {mismatches}\n(lane indices are paper_pool + rand_deadline +"
+        " baselines order; see benchmarks/scenario_grid.py)"
+    )
+    # adaptivity itself is part of the pin: several distinct winners
+    assert rows["scenario_grid_winner_diversity"]["derived"] >= 5.0
 
 
 def test_fleet_engine_not_slower_than_host_loop_4dev():

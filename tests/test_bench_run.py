@@ -1,0 +1,42 @@
+"""benchmarks/run.py CLI: --only resolution must error on unknown names
+instead of silently skipping typos (a misspelled ``--only pool_sim,felt_sim``
+used to drop the fleet bench without a word)."""
+import sys
+
+import pytest
+
+from benchmarks.run import MODULES, main, select_modules
+
+
+def test_select_modules_empty_selects_all():
+    selected, unknown = select_modules("")
+    assert selected == MODULES
+    assert unknown == []
+
+
+def test_select_modules_prefixes():
+    selected, unknown = select_modules("pool_sim,scenario_grid")
+    assert selected == ["pool_sim_bench", "scenario_grid"]
+    assert unknown == []
+    # prefix semantics: fig1 matches fig10_adaptation too? no — fig1 is a
+    # prefix of both fig1_throughput and fig10_adaptation, and both match
+    selected, _ = select_modules("fig1")
+    assert selected == ["fig1_throughput", "fig10_adaptation"]
+
+
+def test_select_modules_reports_unknown():
+    selected, unknown = select_modules("pool_sim,felt_sim")
+    assert selected == ["pool_sim_bench"]
+    assert unknown == ["felt_sim"]
+
+
+def test_main_errors_on_unknown_name(monkeypatch):
+    """The CLI refuses a typo'd --only up front (before importing or
+    running any benchmark module) and names the offender."""
+    monkeypatch.setattr(
+        sys, "argv", ["benchmarks.run", "--only", "pool_sim,felt_sim"]
+    )
+    with pytest.raises(SystemExit) as exc_info:
+        main()
+    assert "felt_sim" in str(exc_info.value)
+    assert "pool_sim_bench" in str(exc_info.value)  # lists known modules

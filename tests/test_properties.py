@@ -127,3 +127,93 @@ def test_noise_matrix_valid(seed, level):
     assert np.all(M[..., 0] > 0)
     assert np.all(M[..., 1] >= 0) and np.all(M[..., 1] <= 16)
     np.testing.assert_allclose(M[:, 0, 0], tr.prices, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Fleet waterfall under grid-style random market regimes (core/fleet.py)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 99999), supply=st.integers(0, 40),
+       extra=st.integers(0, 25), j=st.integers(1, 12))
+def test_waterfall_feasible_and_monotone_in_supply(seed, supply, extra, j):
+    """The per-slot supply-grant law: grants are within [0, demand], total
+    granted units equal min(total demand, supply) — and are monotone
+    non-decreasing in supply, elementwise (grant_i = clip(S - (cum - d_i),
+    0, d_i) only grows with S; the sort order is supply-independent)."""
+    import jax.numpy as jnp
+
+    from repro.core.fleet import _waterfall
+
+    rng = np.random.default_rng(seed)
+    demand = rng.integers(0, 10, j)
+    slack = rng.integers(0, 4, j).astype(np.float32)  # coarse: forces ties
+    ids = rng.permutation(j).astype(np.int32)
+    args = (jnp.asarray(demand, jnp.int32), jnp.asarray(slack),
+            jnp.asarray(ids))
+    g_lo = np.asarray(_waterfall(*args, supply))
+    g_hi = np.asarray(_waterfall(*args, supply + extra))
+    for g in (g_lo, g_hi):
+        assert np.all(g >= 0) and np.all(g <= demand)
+    assert g_lo.sum() == min(demand.sum(), supply)
+    assert g_hi.sum() == min(demand.sum(), supply + extra)
+    assert np.all(g_hi >= g_lo)  # elementwise monotone in supply
+
+
+# two fixed kind mixes (with and without AHAP lanes) keep the fleet scan at
+# two compiled programs across all hypothesis examples
+_FLEET_MIXES = ((0, 0, 1, 3, 4, 5), (1, 2, 3, 4, 5, 5))
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 9999), avail_mean=st.floats(1.0, 12.0),
+       price_sigma=st.floats(0.05, 0.6),
+       mix=st.sampled_from(_FLEET_MIXES))
+def test_fleet_invariants_under_random_regimes(seed, avail_mean,
+                                               price_sigma, mix):
+    """Fleet-engine invariants under a grid-style random market regime
+    (availability level x price volatility, scenario-grid axes): granted
+    spot never exceeds the slot supply, jobs outside their live window
+    (pre-arrival / past-deadline) and completed ('done') jobs never
+    receive grants."""
+    from benchmarks.common import PAPER_TPUT
+    from repro.core import fleet
+    from repro.core.fast_sim import JobArrays
+    from repro.core.market import vast_like_trace
+
+    J, T = len(mix), 16
+    tr = vast_like_trace(seed=seed % 64, days=T / 48, mean_price=0.7,
+                         price_sigma=price_sigma, avail_mean=avail_mean,
+                         avail_season_amp=3.0)
+    rng = np.random.default_rng(seed)
+    jobs = JobArrays(
+        workload=rng.uniform(10, 60, J).astype(np.float32),
+        deadline=rng.integers(4, 10, J).astype(np.int32),
+        n_min=rng.integers(1, 3, J).astype(np.int32),
+        n_max=rng.integers(4, 10, J).astype(np.int32),
+        value=np.full(J, 120.0, np.float32),
+        gamma=np.full(J, 2.0, np.float32),
+        p_o=np.full(J, 1.0, np.float32),
+    )
+    arrivals = rng.integers(0, 8, J)
+    rows = {"kind": np.asarray(mix), "omega": np.full(J, 3),
+            "v": np.full(J, 1), "sigma": np.full(J, 0.7),
+            "rho": np.full(J, 1.0), "cfrac": np.full(J, -1.0)}
+    out = fleet.simulate_fleet(rows, jobs, arrivals, PAPER_TPUT,
+                               tr.prices, tr.avail)
+    ns = np.asarray(out["n_spot"])
+    no = np.asarray(out["n_od"])
+    assert np.all(ns >= 0) and np.all(no >= 0)
+    # grants never exceed the slot supply, summed over the fleet
+    assert np.all(ns.sum(axis=0) <= tr.avail)
+    # no grants outside each job's live window (local clock t - arrival)
+    lt = np.arange(T)[None, :] - arrivals[:, None]
+    live = (lt >= 0) & (lt < np.asarray(jobs.deadline)[:, None])
+    assert np.all(ns[~live] == 0) and np.all(no[~live] == 0)
+    # done jobs never receive grants: once a job completes (local
+    # completion time ct), every later local slot allocates nothing
+    ct = np.asarray(out["completion_time"])
+    completed = np.asarray(out["completed"])
+    for j in np.flatnonzero(completed):
+        done = lt[j] >= np.ceil(ct[j] - 1e-6)
+        assert np.all(ns[j][done] == 0) and np.all(no[j][done] == 0)

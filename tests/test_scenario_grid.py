@@ -1,0 +1,235 @@
+"""Scenario-grid harness (benchmarks/scenario_grid.py) and the plumbing it
+rides on.
+
+Pins, per the tentpole's contracts:
+  * ``market_regime_batch`` bitwise row-parity with per-regime
+    ``vast_like_trace`` (the vectorized generator IS the scalar one);
+  * one batched-grid cell bitwise-equal to an independent single-regime
+    ``simulate_pool_jobs`` run (grid stacking adds nothing and loses
+    nothing), in BOTH throughput groups, and with ``job_chunk`` streaming;
+  * seed-determinism of the full grid (winner map included);
+  * directional sanity across regime axes: scarce availability never
+    increases the oracle-best mean utility (the availability axis is a
+    pointwise-paired draw), and zero prediction noise weakly dominates
+    high noise for the prediction-based (AHAP) lanes;
+  * per-row noise levels in ``noisy_matrix_batch`` (scalar parity, level-0
+    rows reduce to the perfect forecast);
+  * ``concat_jobs`` / ``workload_scale`` round-trips.
+
+The tests use a 13-lane sub-pool (8 AHAP + 2 AHANP + 3 baselines) for
+speed; the bench itself runs the full 124-lane pool over 48 regimes.
+"""
+import numpy as np
+
+from benchmarks import scenario_grid as sg
+from benchmarks.common import job_stream_arrays
+from repro.configs.base import ThroughputConfig
+from repro.core import engine, fast_sim
+from repro.core.market import vast_like_trace
+from repro.core.policy_pool import (
+    KIND_AHAP,
+    baseline_specs,
+    paper_pool,
+    specs_to_arrays,
+)
+from repro.core.predictor import noisy_matrix_batch, true_future_batch
+from repro.data.synthetic import market_regime_batch
+
+
+def _small_pool():
+    pool = paper_pool(omegas=(1, 3), sigmas=(0.3, 0.7)) + baseline_specs()
+    return pool, specs_to_arrays(pool)
+
+
+def _small_grid(n_jobs=6, **axes):
+    kw = dict(avail=(3.5, 9.0), sigma=(0.5,), tight=(1.15,),
+              mu=((0.9, 0.95), (0.7, 0.85)), noise=(0.3,))
+    kw.update(axes)
+    regimes = sg.grid_regimes(**kw)
+    jobs, prices, avail, preds, t0s = sg.build_grid_inputs(
+        regimes, n_jobs=n_jobs
+    )
+    return regimes, jobs, prices, avail, preds, t0s
+
+
+def test_market_regime_batch_matches_vast_like_trace():
+    """Row r of the vectorized generator is bitwise the scalar trace built
+    from row r's (seed, params) — across availability, volatility, price
+    level and seed variation."""
+    params = [
+        dict(mean_price=0.7, price_sigma=0.5, avail_mean=3.5,
+             avail_season_amp=3.0),
+        dict(mean_price=0.7, price_sigma=0.25, avail_mean=9.0,
+             avail_season_amp=3.0),
+        dict(mean_price=0.45, price_sigma=0.32, avail_mean=8.0,
+             avail_season_amp=3.5),
+    ]
+    seeds = [11, 11, 5]
+    pr, av = market_regime_batch(
+        np.asarray(seeds), days=4.0,
+        mean_price=[p["mean_price"] for p in params],
+        price_sigma=[p["price_sigma"] for p in params],
+        avail_mean=[p["avail_mean"] for p in params],
+        avail_season_amp=[p["avail_season_amp"] for p in params],
+    )
+    assert pr.shape == av.shape == (3, 192)
+    assert av.dtype == np.int64
+    for r, (s, p) in enumerate(zip(seeds, params)):
+        tr = vast_like_trace(seed=s, days=4.0, **p)
+        np.testing.assert_array_equal(pr[r], tr.prices)
+        np.testing.assert_array_equal(av[r], tr.avail)
+
+
+def test_grid_cell_bitwise_vs_single_regime():
+    """One batched-grid cell == an independent single-regime pipeline
+    (trace -> prepare_noisy_inputs -> simulate_pool_jobs), bitwise — in
+    both throughput groups; and chunked streaming doesn't change a bit."""
+    _, arrs = _small_pool()
+    regimes, jobs, prices, avail, preds, t0s = _small_grid()
+    K = 6
+    util = sg.evaluate_grid(arrs, regimes, jobs, prices, avail, preds,
+                            n_jobs=K)
+    assert util.shape == (len(regimes), K, int(arrs["kind"].shape[0]))
+
+    # job_chunk streaming (incl. a size that doesn't divide the block)
+    util_c = sg.evaluate_grid(arrs, regimes, jobs, prices, avail, preds,
+                              n_jobs=K, job_chunk=5)
+    np.testing.assert_array_equal(util, util_c)
+
+    for ri in (1, 3):  # one cell per throughput group
+        r = regimes[ri]
+        tr = vast_like_trace(
+            seed=sg.MARKET_SEED, days=sg.GRID_DAYS,
+            mean_price=sg.MEAN_PRICE, price_sigma=r.price_sigma,
+            avail_mean=r.avail_mean, avail_season_amp=sg.AVAIL_SEASON_AMP,
+        )
+        t0s_i = np.random.default_rng(sg.JOB_SEED + 1).integers(
+            0, len(tr) - sg.DEADLINE - 1, K
+        )
+        np.testing.assert_array_equal(t0s_i, t0s)
+        seeds = sg.JOB_SEED * 100003 + np.arange(K)
+        pr, av, pd_ = engine.prepare_noisy_inputs(
+            tr, t0s_i, sg.DEADLINE, sg.NOISE_KIND, r.noise, seeds
+        )
+        jb = job_stream_arrays(np.random.default_rng(sg.JOB_SEED), K,
+                               sg.DEADLINE, workload_scale=r.tight)
+        out = fast_sim.simulate_pool_jobs(
+            arrs, jb,
+            ThroughputConfig(alpha=1.0, beta=0.0, mu1=r.mu1, mu2=r.mu2),
+            pr, av, pd_,
+        )
+        np.testing.assert_array_equal(np.asarray(out["utility"]), util[ri])
+
+
+def test_grid_seed_determinism():
+    """Building and evaluating the grid twice is bitwise-identical —
+    utilities, winner map and regret table."""
+    pool, arrs = _small_pool()
+    runs = []
+    for _ in range(2):
+        regimes, jobs, prices, avail, preds, _ = _small_grid(n_jobs=4)
+        util = sg.evaluate_grid(arrs, regimes, jobs, prices, avail, preds,
+                                n_jobs=4)
+        res = sg.analyze_grid(pool, regimes, util, jobs)
+        runs.append((util, res))
+    np.testing.assert_array_equal(runs[0][0], runs[1][0])
+    assert [p["winner"] for p in runs[0][1]["per_regime"]] == \
+        [p["winner"] for p in runs[1][1]["per_regime"]]
+    np.testing.assert_array_equal(runs[0][1]["regret_fixed"],
+                                  runs[1][1]["regret_fixed"])
+    assert [p["eg_regret_ratio"] for p in runs[0][1]["per_regime"]] == \
+        [p["eg_regret_ratio"] for p in runs[1][1]["per_regime"]]
+
+
+def test_grid_directional_sanity():
+    """Axis direction checks on a matched-pair mini-grid (shared market
+    seed and job draws): scarcer availability never increases the
+    oracle-best mean utility, and zero prediction noise weakly dominates
+    high noise for the prediction-based (AHAP) lanes — best lane AND
+    per-lane means."""
+    pool, arrs = _small_pool()
+    ahap = np.array([i for i, s in enumerate(pool) if s.kind == KIND_AHAP])
+    K = 8
+    regimes, jobs, prices, avail, preds, _ = _small_grid(
+        n_jobs=K, tight=(1.0,), mu=((0.9, 0.95),), noise=(0.0, 1.2)
+    )
+    util = sg.evaluate_grid(arrs, regimes, jobs, prices, avail, preds,
+                            n_jobs=K)
+    mean_u = {r.key: util[i].mean(axis=0) for i, r in enumerate(regimes)}
+    eps = 1e-4
+    for nz in ("0", "1.2"):
+        scarce = mean_u[f"a3.5_s0.5_t1_m0.9_n{nz}"]
+        rich = mean_u[f"a9_s0.5_t1_m0.9_n{nz}"]
+        assert scarce.max() <= rich.max() + eps, (nz, scarce.max(), rich.max())
+    for a in ("3.5", "9"):
+        zero = mean_u[f"a{a}_s0.5_t1_m0.9_n0"]
+        high = mean_u[f"a{a}_s0.5_t1_m0.9_n1.2"]
+        assert zero[ahap].max() >= high[ahap].max() - eps, a
+        assert np.all(zero[ahap] >= high[ahap] - eps), a
+
+
+def test_noisy_matrix_batch_per_row_levels():
+    """Per-row ``level`` rows match per-row scalar calls bitwise; a
+    constant level vector equals the scalar path; level-0 rows reduce to
+    the perfect forecast."""
+    rng = np.random.default_rng(3)
+    P = rng.uniform(0.1, 1.2, (5, 9))
+    A = rng.integers(0, 16, (5, 9))
+    seeds = 40 + np.arange(5)
+    levels = np.array([0.0, 0.1, 0.4, 0.0, 0.25])
+    for kind in ("fixed_uniform", "magdep_heavytail"):
+        batch = noisy_matrix_batch(P, A, kind, levels, seeds, 5)
+        for k in range(5):
+            one = noisy_matrix_batch(P[k:k + 1], A[k:k + 1], kind,
+                                     float(levels[k]), seeds[k:k + 1], 5)
+            np.testing.assert_array_equal(batch[k], one[0])
+        const = noisy_matrix_batch(P, A, kind, 0.2, seeds, 5)
+        const_vec = noisy_matrix_batch(P, A, kind, np.full(5, 0.2), seeds, 5)
+        np.testing.assert_array_equal(const, const_vec)
+        perfect = true_future_batch(P, A, 5)
+        np.testing.assert_array_equal(batch[0], perfect[0])
+        np.testing.assert_array_equal(batch[3], perfect[3])
+
+
+def test_concat_jobs_roundtrip_and_workload_scale():
+    rng = np.random.default_rng(5)
+    jobs = job_stream_arrays(rng, 9)
+    parts = [fast_sim.slice_jobs(jobs, 0, 4), fast_sim.slice_jobs(jobs, 4, 9)]
+    cat = fast_sim.concat_jobs(parts)
+    for f in fast_sim.JobArrays._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(cat, f)), np.asarray(getattr(jobs, f))
+        )
+    # workload_scale: 1.0 is a bitwise no-op; s scales the same base draws
+    base = job_stream_arrays(np.random.default_rng(5), 9, workload_scale=1.0)
+    np.testing.assert_array_equal(base.workload, jobs.workload)
+    scaled = job_stream_arrays(np.random.default_rng(5), 9,
+                               workload_scale=1.15)
+    np.testing.assert_array_equal(
+        scaled.workload,
+        (np.random.default_rng(5).uniform(70, 120, 9) * 1.15)
+        .astype(np.float32),
+    )
+    np.testing.assert_array_equal(scaled.n_min, jobs.n_min)
+
+
+def test_grid_regimes_mu_major_and_count():
+    """Default axes produce the >= 36-regime grid the bench sweeps, with
+    the throughput axis varying slowest (contiguous tput groups)."""
+    regimes = sg.grid_regimes()
+    assert len(regimes) == (
+        len(sg.AVAIL_AXIS) * len(sg.SIGMA_AXIS) * len(sg.TIGHT_AXIS)
+        * len(sg.MU_AXIS) * len(sg.NOISE_AXIS)
+    )
+    if all(len(ax) > 1 for ax in (
+            sg.AVAIL_AXIS, sg.SIGMA_AXIS, sg.TIGHT_AXIS, sg.NOISE_AXIS)) \
+            and len(sg.AVAIL_AXIS) >= 3:
+        assert len(regimes) >= 36
+    mus = [(r.mu1, r.mu2) for r in regimes]
+    seen = []
+    for m in mus:
+        if not seen or seen[-1] != m:
+            seen.append(m)
+    assert len(seen) == len(set(mus))  # each tput group is one contiguous run
+    keys = [r.key for r in regimes]
+    assert len(set(keys)) == len(keys)

@@ -251,13 +251,16 @@ def test_engine_matches_host_loop_pipeline():
 def test_engine_chunked_equals_unchunked():
     """Job-chunked streaming (K >> memory mode): trajectories and final
     weights bitwise, the mean-utility accumulator to f32 tolerance —
-    including a chunk size that does not divide K."""
+    across the edge cases too: chunk == 1 (K single-job calls),
+    interior sizes that do and don't divide K (5, 6 with K = 18),
+    chunk == K (one full chunk) and chunk > K (clamped to one chunk)."""
     _, arrs, jobs, prices, avail, preds = _small_workload()
+    n = int(np.shape(jobs.workload)[0])
     whole = engine.simulate_and_select(
         arrs, jobs, PAPER_TPUT, prices, avail, preds,
         track_history=True, return_utilities=True,
     )
-    for chunk in (5, 6):
+    for chunk in (1, 5, 6, n, n + 7):
         part = engine.simulate_and_select(
             arrs, jobs, PAPER_TPUT, prices, avail, preds, job_chunk=chunk,
             track_history=True, return_utilities=True,
