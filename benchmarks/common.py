@@ -3,6 +3,8 @@
 computation, derived is the figure's headline number."""
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 import time
 from typing import Callable, List, Tuple
 
@@ -19,13 +21,67 @@ PAPER_JOB = JobConfig(workload=80.0, deadline=10, n_min=1, n_max=12,
 PAPER_TPUT = ThroughputConfig(alpha=1.0, beta=0.0, mu1=0.9, mu2=0.95)
 
 
-def timed(fn: Callable, *args, repeat: int = 1, **kw):
+def _block(x) -> None:
+    """Recursively block until every jax array inside ``x`` is ready.
+    Duck-typed (``block_until_ready``) so numpy/python leaves are free and
+    no jax import is needed; descends dicts, sequences, NamedTuples and
+    dataclasses (SelectionResult, EGState, result dicts...)."""
+    if x is None:
+        return
+    if hasattr(x, "block_until_ready"):
+        x.block_until_ready()
+    elif isinstance(x, dict):
+        for v in x.values():
+            _block(v)
+    elif isinstance(x, (list, tuple)):
+        for v in x:
+            _block(v)
+    elif dataclasses.is_dataclass(x) and not isinstance(x, type):
+        for f in dataclasses.fields(x):
+            _block(getattr(x, f.name))
+
+
+def timed(fn: Callable, *args, repeat: int = 1, block: bool = True, **kw):
+    """Wall-time ``fn(*args, **kw)`` averaged over ``repeat`` calls.
+
+    ``block=True`` (the default) blocks on every jax array reachable from
+    the return value INSIDE the timed region — jax dispatch is async, so
+    without it a benchmark measures enqueue time, not compute time.
+    ``block=False`` restores the raw dispatch measurement."""
     t0 = time.perf_counter()
     out = None
     for _ in range(repeat):
         out = fn(*args, **kw)
+        if block:
+            _block(out)
     dt = (time.perf_counter() - t0) / repeat
     return out, dt * 1e6  # us
+
+
+class StageTimer:
+    """Accumulating named stage clock for a benchmark's prep/simulate/select
+    split. ``with st.stage("simulate"): ...`` adds that block's wall time
+    (blocking on ``block_on`` if given); ``rows(prefix)`` emits standard
+    bench rows (derived = share of total)."""
+
+    def __init__(self):
+        self.totals: dict = {}
+
+    @contextlib.contextmanager
+    def stage(self, name: str, block_on=None):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            if block_on is not None:
+                _block(block_on() if callable(block_on) else block_on)
+            self.totals[name] = (self.totals.get(name, 0.0)
+                                 + time.perf_counter() - t0)
+
+    def rows(self, prefix: str) -> List[Row]:
+        total = sum(self.totals.values()) or 1.0
+        return [(f"{prefix}_stage_{name}", dt * 1e6, dt / total)
+                for name, dt in self.totals.items()]
 
 
 def job_stream_arrays(rng: np.random.Generator, n: int, deadline: int = 10,

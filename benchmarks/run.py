@@ -1,13 +1,21 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Run:
-    PYTHONPATH=src python -m benchmarks.run [--only fig5,fig9] [--json out.json]
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,fig9] \
+        [--json out.json] [--profile-dir traces/]
 
 ``--json <path>`` additionally captures every module's rows as a
-machine-readable payload ``{backend, devices, elapsed_s, rows: [{module,
-name, us_per_call, derived}, ...]}`` — the mechanism behind the repo's
-``BENCH_*.json`` perf-trajectory files and the opt-in CI regression guard
-(tests/test_bench_regression.py reads the pool_sim speedup rows from it).
+machine-readable payload ``{schema_version, backend, devices, elapsed_s,
+provenance, rows: [{module, name, us_per_call, derived}, ...]}`` — the
+mechanism behind the repo's ``BENCH_*.json`` perf-trajectory files and the
+opt-in CI regression guard (tests/test_bench_regression.py reads the
+pool_sim speedup rows from it). ``provenance`` pins what produced the
+numbers: git sha, jax/python versions, platform, device count, UTC
+timestamp.
+
+``--profile-dir <dir>`` wraps the whole module loop in a
+``jax.profiler.trace`` capture (viewable in TensorBoard / Perfetto) —
+opt-in because tracing adds overhead and trace files are large.
 """
 from __future__ import annotations
 
@@ -16,6 +24,38 @@ import json
 import sys
 import time
 import traceback
+
+# bump when the --json payload layout changes shape
+JSON_SCHEMA_VERSION = 2
+
+
+def provenance() -> dict:
+    """Best-effort environment fingerprint for the --json payload. Every
+    field degrades to None rather than failing the benchmark run."""
+    import platform as _platform
+    import subprocess
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10,
+        ).stdout.strip() or None
+    except Exception:
+        sha = None
+    try:
+        import jax
+        jax_version = jax.__version__
+        device_count = jax.device_count()
+    except Exception:
+        jax_version = device_count = None
+    return {
+        "git_sha": sha,
+        "jax_version": jax_version,
+        "python_version": _platform.python_version(),
+        "platform": _platform.platform(),
+        "device_count": device_count,
+        "timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    }
 
 MODULES = [
     "fig1_throughput",
@@ -58,6 +98,8 @@ def main() -> None:
     ap.add_argument("--only", default="", help="comma-separated module prefixes")
     ap.add_argument("--json", default="",
                     help="also write all rows to this path as JSON")
+    ap.add_argument("--profile-dir", default="",
+                    help="capture a jax.profiler trace of the run here")
     args = ap.parse_args()
     selected, unknown = select_modules(args.only)
     if unknown:
@@ -65,6 +107,14 @@ def main() -> None:
             f"unknown benchmark name(s): {', '.join(unknown)}\n"
             f"known modules: {', '.join(MODULES)}"
         )
+
+    profile_ctx = None
+    if args.profile_dir:
+        import jax
+
+        profile_ctx = jax.profiler.trace(args.profile_dir)
+        profile_ctx.__enter__()
+        print(f"# profiling to {args.profile_dir}", flush=True)
 
     print("name,us_per_call,derived")
     failures = 0
@@ -90,13 +140,17 @@ def main() -> None:
             })
             traceback.print_exc(file=sys.stderr)
         print(f"# {mod_name} done in {time.time()-t0:.1f}s", flush=True)
+    if profile_ctx is not None:
+        profile_ctx.__exit__(None, None, None)
     if args.json:
         import jax  # benchmark modules have long since initialized it
 
         payload = {
+            "schema_version": JSON_SCHEMA_VERSION,
             "backend": jax.default_backend(),
             "devices": jax.device_count(),
             "elapsed_s": time.time() - t_start,
+            "provenance": provenance(),
             "rows": json_rows,
         }
         with open(args.json, "w") as f:

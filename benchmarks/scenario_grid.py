@@ -40,7 +40,10 @@ SCENARIO_GRID_AVAIL / SCENARIO_GRID_SIGMA / SCENARIO_GRID_TIGHT /
 SCENARIO_GRID_NOISE (comma-separated values per axis), SCENARIO_GRID_MU
 (comma-separated ``mu1:mu2`` pairs), SCENARIO_GRID_CHUNK (job_chunk for
 the streamed simulation, 0 = one shot), SCENARIO_GRID_REPEAT,
-SCENARIO_GRID_JSON; POOL_SIM_MESH / POOL_SIM_JSON as everywhere else.
+SCENARIO_GRID_JSON, SCENARIO_GRID_TELEMETRY (path: run an untimed
+``collect=True`` flight-recorder pass, write the per-regime telemetry
+ledger there, and pin it bitwise against the timed pass's utilities);
+POOL_SIM_MESH / POOL_SIM_JSON as everywhere else.
 
 tests/test_scenario_grid.py pins one batched-grid cell bitwise against an
 independent single-regime ``simulate_pool_jobs`` run, seed-determinism of
@@ -57,7 +60,8 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
-from benchmarks.common import PAPER_TPUT, job_stream_arrays, merge_bench_rows
+from benchmarks.common import (PAPER_TPUT, StageTimer, job_stream_arrays,
+                               merge_bench_rows)
 from benchmarks.pool_sim_bench import _JSON_PATH
 
 
@@ -84,6 +88,10 @@ TIGHT_AXIS = _floats("SCENARIO_GRID_TIGHT", "0.8,1.15")
 MU_AXIS = _mu_pairs("SCENARIO_GRID_MU", "0.9:0.95,0.7:0.85")
 NOISE_AXIS = _floats("SCENARIO_GRID_NOISE", "0.0,0.3")
 GRID_JSON = os.environ.get("SCENARIO_GRID_JSON", "")
+# non-empty: run a second collect=True pass (outside the timed sweep, so
+# timings stay clean), write the per-regime telemetry ledger here, and pin
+# it bitwise against the timed pass's utilities
+TELEMETRY_JSON = os.environ.get("SCENARIO_GRID_TELEMETRY", "")
 
 # every regime shares the market seed (so e.g. the availability axis is a
 # pointwise-comparable paired draw) and paper_market's scarce-regime price
@@ -187,18 +195,21 @@ def build_grid_inputs(regimes: List[Regime], n_jobs: int = N_JOBS,
 def evaluate_grid(pool_arrays: dict, regimes: List[Regime], jobs, prices,
                   avail, preds, n_jobs: int = N_JOBS, *,
                   job_chunk: int = CHUNK, mesh=None,
-                  backend: str = "xla") -> np.ndarray:
+                  backend: str = "xla", collect: bool = False):
     """Run the stacked grid through the engine: one ``simulate_and_select``
     call per distinct throughput config (contiguous mu-major block), each
     covering every regime in the block on the jobs axis — no per-regime
     host loop over ``simulate_pool_jobs``. Returns (R, K, M) raw utilities
-    in regime order."""
+    in regime order; with ``collect=True``, ``(util, sim_out)`` where
+    ``sim_out`` is the merged flight-recorder dict ((R*K, M, ...) leaves,
+    regime-major) for ``obs.ledger.grid_ledger``."""
     from repro.configs.base import ThroughputConfig
     from repro.core import engine, fast_sim
 
     R = len(regimes)
     M = int(np.asarray(pool_arrays["kind"]).shape[0])
     util = np.empty((R, n_jobs, M), np.float32)
+    sim_chunks = []
     lo = 0
     while lo < R:
         hi = lo + 1
@@ -212,10 +223,18 @@ def evaluate_grid(pool_arrays: dict, regimes: List[Regime], jobs, prices,
             pool_arrays, fast_sim.slice_jobs(jobs, a, b), tput,
             prices[a:b], avail[a:b], preds[a:b],
             mesh=mesh, backend=backend, job_chunk=job_chunk,
-            return_utilities=True,
+            return_utilities=True, collect=collect,
         )
         util[lo:hi] = res.utilities.reshape(hi - lo, n_jobs, M)
+        if collect:
+            sim_chunks.append(res.sim_out)
         lo = hi
+    if collect:
+        sim_out = {k: (np.asarray(sim_chunks[0][k]) if len(sim_chunks) == 1
+                       else np.concatenate(
+                           [np.asarray(c[k]) for c in sim_chunks]))
+                   for k in sim_chunks[0]}
+        return util, sim_out
     return util
 
 
@@ -283,17 +302,22 @@ def run():
     mesh = make_pool_mesh(
         shape=parse_pool_mesh_shape(os.environ.get("POOL_SIM_MESH", ""))
     )
-    jobs, prices, avail, preds, _ = build_grid_inputs(regimes)
+    st = StageTimer()
+    with st.stage("prep"):
+        jobs, prices, avail, preds, _ = build_grid_inputs(regimes)
 
     ev = lambda: evaluate_grid(arrs, regimes, jobs, prices, avail, preds,
                                mesh=mesh)
-    util = ev()                     # warm-up call pays compilation
+    with st.stage("compile"):
+        util = ev()                 # warm-up call pays compilation
     t0 = time.perf_counter()
-    for _ in range(max(REPEAT, 1)):
-        ev()
+    with st.stage("simulate"):
+        for _ in range(max(REPEAT, 1)):
+            ev()
     secs = (time.perf_counter() - t0) / max(REPEAT, 1)
 
-    res = analyze_grid(pool, regimes, util, jobs)
+    with st.stage("analyze"):
+        res = analyze_grid(pool, regimes, util, jobs)
     eg_ratios = [p["eg_regret_ratio"] for p in res["per_regime"]]
     units = len(regimes) * util.shape[1] * len(pool) * DEADLINE
     rows = [
@@ -314,6 +338,44 @@ def run():
         (f"scenario_grid_winner__{p['key']}", 0.0, float(p["winner_idx"]))
         for p in res["per_regime"]
     ]
+
+    telemetry = None
+    if TELEMETRY_JSON:
+        from repro.configs.base import ThroughputConfig
+        from repro.obs import grid_ledger
+
+        # flight-recorder pass OUTSIDE the timed sweep: collect=False above
+        # keeps the timings on the exact shipped program, and the bitwise
+        # self-check below proves the collect path didn't perturb it
+        with st.stage("telemetry"):
+            util_t, sim_out = evaluate_grid(
+                arrs, regimes, jobs, prices, avail, preds, mesh=mesh,
+                collect=True,
+            )
+            tputs = [ThroughputConfig(alpha=PAPER_TPUT.alpha,
+                                      beta=PAPER_TPUT.beta,
+                                      mu1=r.mu1, mu2=r.mu2)
+                     for r in regimes]
+            meta = [{"key": r.key, "avail_mean": r.avail_mean,
+                     "price_sigma": r.price_sigma, "tight": r.tight,
+                     "mu1": r.mu1, "mu2": r.mu2, "noise": r.noise}
+                    for r in regimes]
+            telemetry = grid_ledger(meta, util_t, sim_out, jobs, tputs,
+                                    util.shape[1],
+                                    lane_names=[p.name for p in pool])
+        bitwise = bool(np.array_equal(util, util_t))
+        rows += [
+            ("scenario_grid_tel_bitwise_match", 0.0, float(bitwise)),
+            ("scenario_grid_tel_cost_residual", 0.0,
+             telemetry["max_abs_cost_residual"]),
+            ("scenario_grid_tel_utility_residual", 0.0,
+             telemetry["max_abs_utility_residual"]),
+        ]
+        os.makedirs(os.path.dirname(TELEMETRY_JSON) or ".", exist_ok=True)
+        with open(TELEMETRY_JSON, "w") as f:
+            json.dump(telemetry, f, indent=2)
+
+    rows += st.rows("scenario_grid")
 
     extra = {
         "workload": {

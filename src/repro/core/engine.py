@@ -65,21 +65,23 @@ def prepare_noisy_inputs(trace, t0s, deadline: int, kind: str, level,
             preds.astype(np.float32))
 
 
-@functools.partial(jax.jit, static_argnames=("track_history",))
+@functools.partial(jax.jit, static_argnames=("track_history", "collect"))
 def _normalize_and_scan(jobs: fast_sim.JobArrays, u, state: selector.EGState,
-                        track_history: bool):
+                        track_history: bool, collect: bool = False):
     """The fused select stage: per-job [0,1] normalization of the (K, M)
     raw-utility matrix + the EG lax.scan, one device call."""
     un = normalize_utility_batch(jobs, u)
-    return selector.run_eg_scan(state, un, track_history=track_history)
+    return selector.run_eg_scan(state, un, track_history=track_history,
+                                collect=collect)
 
 
 def select_from_utilities(jobs: fast_sim.JobArrays, utilities,
                           state: selector.EGState,
-                          track_history: bool = False):
+                          track_history: bool = False,
+                          collect: bool = False):
     """Public wrapper over the fused normalize+scan stage (the engine's
     'select' leg, also what benchmarks/selection_e2e.py times)."""
-    return _normalize_and_scan(jobs, utilities, state, track_history)
+    return _normalize_and_scan(jobs, utilities, state, track_history, collect)
 
 
 @dataclass
@@ -97,6 +99,9 @@ class SelectionResult:
     n_jobs: int
     weight_history: Optional[np.ndarray] = None   # (K, M), track_history only
     utilities: Optional[np.ndarray] = None        # (K, M), return_utilities only
+    entropy: Optional[np.ndarray] = None          # (K,), collect only
+    top_policy: Optional[np.ndarray] = None       # (K,) i32, collect only
+    sim_out: Optional[dict] = None                # full sim dict, collect only
 
     def best_policy(self) -> int:
         return selector.best_policy(self.state)
@@ -139,6 +144,7 @@ def simulate_and_select(
     job_chunk: int = 0,
     track_history: bool = False,
     return_utilities: bool = False,
+    collect: bool = False,
 ) -> SelectionResult:
     """Run the whole online-selection workload in one call: sharded pool
     simulation of every (job, policy) cell, batched utility normalization,
@@ -152,7 +158,15 @@ def simulate_and_select(
     an earlier stream (defaults to a fresh uniform selector with Thm. 2's
     eta for K jobs); ``job_chunk`` > 0 streams the job axis in chunks of
     that size so K >> device memory works — equal-size chunks reuse the
-    jitted partition runners' compilation cache."""
+    jitted partition runners' compilation cache.
+
+    ``collect=True`` turns on the flight recorder end to end: the
+    simulator emits its per-slot ``tel_*`` series (kept whole in
+    ``sim_out``, chunk-concatenated along the job axis), and the EG scan
+    adds per-job weight ``entropy`` and the ``top_policy`` leader trace.
+    The flag is static and only ADDS scan outputs, so ``collect=False``
+    runs the identical compiled program (pinned in
+    tests/test_telemetry.py)."""
     n_jobs = int(np.shape(jobs.workload)[0])
     n_pol = int(np.asarray(pool_arrays["kind"]).shape[0])
     if state is None:
@@ -163,31 +177,41 @@ def simulate_and_select(
 
     u_sum = jnp.zeros((n_pol,), jnp.float32)
     max_w, regrets, hist, raw = [], [], [], []
+    ent, top, sim_chunks = [], [], []
     for lo in range(0, n_jobs, chunk):
         hi = min(lo + chunk, n_jobs)
         jb = fast_sim.slice_jobs(jobs, lo, hi)
         if sharded:
             out = fast_sim.simulate_pool_jobs_sharded(
                 pool_arrays, jb, tput, prices[lo:hi], avail[lo:hi],
-                preds[lo:hi], backend=backend, mesh=mesh,
+                preds[lo:hi], backend=backend, mesh=mesh, collect=collect,
             )
         else:
             out = fast_sim.simulate_pool_jobs(
                 pool_arrays, jb, tput, prices[lo:hi], avail[lo:hi],
-                preds[lo:hi], backend=backend,
+                preds[lo:hi], backend=backend, collect=collect,
             )
         u = out["utility"]                       # (k, M), device-resident
         u_sum = u_sum + jnp.sum(u, axis=0)
-        state, traj = _normalize_and_scan(jb, u, state, track_history)
+        state, traj = _normalize_and_scan(jb, u, state, track_history,
+                                          collect)
         max_w.append(traj["max_weight"])
         regrets.append(traj["regret"])
         if track_history:
             hist.append(traj["weights"])
         if return_utilities:
             raw.append(u)
+        if collect:
+            ent.append(traj["entropy"])
+            top.append(traj["top_policy"])
+            sim_chunks.append(out)
 
     cat = (lambda parts: np.asarray(parts[0]) if len(parts) == 1
            else np.concatenate([np.asarray(p) for p in parts]))
+    sim_out = None
+    if collect:
+        sim_out = {k: cat([c[k] for c in sim_chunks])
+                   for k in sim_chunks[0]}
     return SelectionResult(
         state=state,
         mean_utility=np.asarray(u_sum) / n_jobs,
@@ -196,4 +220,7 @@ def simulate_and_select(
         n_jobs=n_jobs,
         weight_history=cat(hist) if track_history else None,
         utilities=cat(raw) if return_utilities else None,
+        entropy=cat(ent) if collect else None,
+        top_policy=cat(top) if collect else None,
+        sim_out=sim_out,
     )

@@ -302,6 +302,40 @@ def _execute(j: JobArrays, tput, z, n_prev, cost, done, T, t, n_o, n_s,
     return z, n_prev, cost, done, T, n_o, n_s, active
 
 
+# flight-recorder slot series (repro.obs): emitted as extra stacked scan
+# outputs when a pool entry point runs with collect=True, riding the result
+# dict as flat "tel_*" keys (same (.., T) layout as n_od/n_spot) so the
+# scatter-merge / shard_map / padding plumbing carries them unchanged.
+# Order matches _slot_telemetry's return tuple.
+_TEL_SLOTS = ("tel_spot_cost", "tel_od_cost", "tel_progress", "tel_active",
+              "tel_up", "tel_down", "tel_preempt")
+
+
+def _slot_telemetry(j: JobArrays, n_prev_before, z, n_o, n_s, active,
+                    price, av):
+    """One flight-recorder sample, taken AFTER :func:`_execute` ran the
+    slot: the spot/on-demand cost split billed this slot, cumulative
+    progress, and the reconfiguration events — ``preempt`` flags a shrink
+    forced by supply (available spot — the fleet's waterfall grant — fell
+    below last slot's allocation). Pure elementwise ops; the collect=False
+    path never traces this function, which is what keeps the default
+    program bitwise-identical to the pre-telemetry build."""
+    n = n_o + n_s
+    act_f = active.astype(jnp.float32)
+    up = active & (n > n_prev_before)
+    down = active & (n < n_prev_before)
+    preempt = down & (av < n_prev_before)
+    return (
+        act_f * n_s.astype(jnp.float32) * price,
+        act_f * n_o.astype(jnp.float32) * j.p_o,
+        z,
+        active,
+        up,
+        down,
+        preempt,
+    )
+
+
 def _finalize(jcfg, j: JobArrays, tput, z, cost, done, T, no_hist, ns_hist):
     """Termination configuration (N^max on-demand past the deadline)."""
     h_max = tput.alpha * j.n_max.astype(jnp.float32) + tput.beta
@@ -430,12 +464,15 @@ def _ahap_rule_batch(jcfg, j: JobArrays, tput, v, backend, z, t, price, av,
 
 
 def _simulate_lanes_ahap(omega, v, sigma, rho, j: JobArrays, tput,
-                         prices, avail, pred, backend: str):
+                         prices, avail, pred, backend: str,
+                         collect: bool = False):
     """All AHAP lanes in ONE scan over slots. Each scan slot issues a single
     batched (P_ahap, w1, tn+1) window DP instead of relying on vmap's
     per-lane grid batching (``_simulate_one_ahap`` under vmap — kept below
     as the equivalence oracle). Scan-invariant scaffolding is precomputed
-    per (lane, slot) and fed slot-major through the scan xs."""
+    per (lane, slot) and fed slot-major through the scan xs. ``collect``
+    (static) appends the ``_TEL_SLOTS`` flight-recorder series to the scan
+    ys — the False branch traces the identical program."""
     dmax = prices.shape[0]
     p = omega.shape[0]
     jcfg = _job_cfg(j)
@@ -460,10 +497,15 @@ def _simulate_lanes_ahap(omega, v, sigma, rho, j: JobArrays, tput,
             jcfg, j, tput, v, backend, z, t, price, av, plans,
             pr_t, thr_t, zee_t, eff_t,
         )
-        z, n_prev, cost, done, T, n_o, n_s, _ = _execute(
+        n_prev0 = n_prev
+        z, n_prev, cost, done, T, n_o, n_s, active = _execute(
             j, tput, z, n_prev, cost, done, T, t, n_o, n_s, price, av
         )
-        return (z, n_prev, cost, done, T, plans), (n_o, n_s)
+        ys = (n_o, n_s)
+        if collect:
+            ys = ys + _slot_telemetry(j, n_prev0, z, n_o, n_s, active,
+                                      price, av)
+        return (z, n_prev, cost, done, T, plans), ys
 
     init = (
         jnp.zeros((p,), jnp.float32), jnp.zeros((p,), jnp.int32),
@@ -471,12 +513,16 @@ def _simulate_lanes_ahap(omega, v, sigma, rho, j: JobArrays, tput,
         jnp.zeros((p,), jnp.float32),
         jnp.zeros((p, VMAX, W1MAX, 2), jnp.float32),
     )
-    (z, _, cost, done, T, _), (no_hist, ns_hist) = jax.lax.scan(
+    (z, _, cost, done, T, _), ys = jax.lax.scan(
         step, init,
         (prices, avail.astype(jnp.int32), pr, thr_s, z_exp_end, eff_slots, ts),
     )
-    return _finalize(jcfg, j, tput, z, cost, done, T,
-                     jnp.swapaxes(no_hist, 0, 1), jnp.swapaxes(ns_hist, 0, 1))
+    out = _finalize(jcfg, j, tput, z, cost, done, T,
+                    jnp.swapaxes(ys[0], 0, 1), jnp.swapaxes(ys[1], 0, 1))
+    if collect:
+        for key, hist in zip(_TEL_SLOTS, ys[2:]):
+            out[key] = jnp.swapaxes(hist, 0, 1)
+    return out
 
 
 def _simulate_one_ahap(omega, v, sigma, rho, j: JobArrays, tput,
@@ -517,9 +563,11 @@ def _simulate_one_ahap(omega, v, sigma, rho, j: JobArrays, tput,
     return _finalize(jcfg, j, tput, z, cost, done, T, no_hist, ns_hist)
 
 
-def _simulate_one_cheap(kind, sigma, cfrac, j: JobArrays, tput, prices, avail):
+def _simulate_one_cheap(kind, sigma, cfrac, j: JobArrays, tput, prices, avail,
+                        collect: bool = False):
     """Non-AHAP lane (AHANP/OD/MSU/UP/RAND_DEADLINE): no forecasts, no
-    window DP — the whole step is a handful of VPU ops."""
+    window DP — the whole step is a handful of VPU ops. ``collect``
+    (static) appends the ``_TEL_SLOTS`` series to the scan ys."""
     dmax = prices.shape[0]
     jcfg = _job_cfg(j)
 
@@ -539,56 +587,70 @@ def _simulate_one_cheap(kind, sigma, cfrac, j: JobArrays, tput, prices, avail):
             [kind == 1, kind == 2, kind == 3, kind == 4, kind == 5],
             [an_s, od_s, ms_s, up_s, rd_s],
         )
+        n_prev0 = n_prev
         z, n_prev, cost, done, T, n_o, n_s, active = _execute(
             j, tput, z, n_prev, cost, done, T, t, n_o, n_s, price, av
         )
         prev_avail = jnp.where(active, av, prev_avail)
-        return (z, n_prev, cost, done, T, prev_avail), (n_o, n_s)
+        ys = (n_o, n_s)
+        if collect:
+            ys = ys + _slot_telemetry(j, n_prev0, z, n_o, n_s, active,
+                                      price, av)
+        return (z, n_prev, cost, done, T, prev_avail), ys
 
     init = (
         jnp.float32(0.0), jnp.int32(0), jnp.float32(0.0),
         jnp.bool_(False), jnp.float32(0.0), avail[0].astype(jnp.int32),
     )
-    (z, _, cost, done, T, _), (no_hist, ns_hist) = jax.lax.scan(
+    (z, _, cost, done, T, _), ys = jax.lax.scan(
         step, init, (prices, avail.astype(jnp.int32), jnp.arange(dmax))
     )
-    return _finalize(jcfg, j, tput, z, cost, done, T, no_hist, ns_hist)
+    out = _finalize(jcfg, j, tput, z, cost, done, T, ys[0], ys[1])
+    if collect:
+        for key, hist in zip(_TEL_SLOTS, ys[2:]):
+            out[key] = hist
+    return out
 
 
 # ---------------------------------------------------------------------------
 # Pool entry points: partition by kind, scatter back to pool order
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("tput", "backend"))
+@functools.partial(jax.jit, static_argnames=("tput", "backend", "collect"))
 def _pool_ahap(omega, v, sigma, rho, j: JobArrays, tput, prices, avail, pred,
-               backend: str):
+               backend: str, collect: bool = False):
     return _simulate_lanes_ahap(
-        omega, v, sigma, rho, j, tput, prices, avail, pred, backend
+        omega, v, sigma, rho, j, tput, prices, avail, pred, backend,
+        collect=collect,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("tput",))
-def _pool_cheap(kind, sigma, cfrac, j: JobArrays, tput, prices, avail):
-    fn = lambda k, s, c: _simulate_one_cheap(k, s, c, j, tput, prices, avail)
+@functools.partial(jax.jit, static_argnames=("tput", "collect"))
+def _pool_cheap(kind, sigma, cfrac, j: JobArrays, tput, prices, avail,
+                collect: bool = False):
+    fn = lambda k, s, c: _simulate_one_cheap(k, s, c, j, tput, prices, avail,
+                                             collect=collect)
     return jax.vmap(fn)(kind, sigma, cfrac)
 
 
-@functools.partial(jax.jit, static_argnames=("tput", "backend"))
+@functools.partial(jax.jit, static_argnames=("tput", "backend", "collect"))
 def _pool_jobs_ahap(omega, v, sigma, rho, jobs: JobArrays, tput,
-                    prices, avail, pred, backend: str):
+                    prices, avail, pred, backend: str, collect: bool = False):
     def per_job(job_row, pr_, av_, pm_):
         return _simulate_lanes_ahap(
-            omega, v, sigma, rho, job_row, tput, pr_, av_, pm_, backend
+            omega, v, sigma, rho, job_row, tput, pr_, av_, pm_, backend,
+            collect=collect,
         )
 
     return jax.vmap(per_job)(jobs, prices, avail, pred)
 
 
-@functools.partial(jax.jit, static_argnames=("tput",))
-def _pool_jobs_cheap(kind, sigma, cfrac, jobs: JobArrays, tput, prices, avail):
+@functools.partial(jax.jit, static_argnames=("tput", "collect"))
+def _pool_jobs_cheap(kind, sigma, cfrac, jobs: JobArrays, tput, prices, avail,
+                     collect: bool = False):
     def per_job(job_row, pr_, av_):
         fn = lambda k, s, c: _simulate_one_cheap(
-            k, s, c, job_row, tput, pr_, av_
+            k, s, c, job_row, tput, pr_, av_, collect=collect
         )
         return jax.vmap(fn)(kind, sigma, cfrac)
 
@@ -670,33 +732,39 @@ def _run_partitioned(pool_arrays, ahap_call, cheap_call, axis: int,
 
 
 def simulate_pool(pool_arrays: dict, j: JobArrays, tput: ThroughputConfig,
-                  prices, avail, pred, backend: str = "xla"):
+                  prices, avail, pred, backend: str = "xla",
+                  collect: bool = False):
     """Kind-partitioned pool simulation. pool_arrays from specs_to_arrays;
     results are returned in the original pool order (same leaves/shapes as
-    the seed monolithic path, pinned against simulator.simulate)."""
+    the seed monolithic path, pinned against simulator.simulate).
+    ``collect=True`` adds the (P, T) ``tel_*`` flight-recorder series
+    (repro.obs) to the result; False is the bitwise-pinned default."""
     return _run_partitioned(
         pool_arrays,
         lambda w, v, s, r: _pool_ahap(
-            w, v, s, r, j, tput, prices, avail, pred, backend
+            w, v, s, r, j, tput, prices, avail, pred, backend, collect
         ),
-        lambda k, s, c: _pool_cheap(k, s, c, j, tput, prices, avail),
+        lambda k, s, c: _pool_cheap(k, s, c, j, tput, prices, avail, collect),
         axis=0,
     )
 
 
 def simulate_pool_jobs(pool_arrays: dict, jobs: JobArrays, tput: ThroughputConfig,
-                       prices, avail, pred, backend: str = "xla"):
+                       prices, avail, pred, backend: str = "xla",
+                       collect: bool = False):
     """Double vmap: jobs (leading axis) x policy pool -> dict of (J, P, ...).
 
     ``jobs`` leaves are stacked (J,) arrays; prices/avail: (J, d_max);
     pred: (J, d_max, W1MAX, 2). One XLA call per kind-partition simulates
-    the paper's whole Fig. 9/10 workload."""
+    the paper's whole Fig. 9/10 workload. ``collect=True`` adds the
+    (J, P, T) ``tel_*`` flight-recorder series (repro.obs)."""
     return _run_partitioned(
         pool_arrays,
         lambda w, v, s, r: _pool_jobs_ahap(
-            w, v, s, r, jobs, tput, prices, avail, pred, backend
+            w, v, s, r, jobs, tput, prices, avail, pred, backend, collect
         ),
-        lambda k, s, c: _pool_jobs_cheap(k, s, c, jobs, tput, prices, avail),
+        lambda k, s, c: _pool_jobs_cheap(k, s, c, jobs, tput, prices, avail,
+                                         collect),
         axis=1,
     )
 
@@ -712,12 +780,15 @@ def _pad_leading(x, pad: int):
 
 @functools.lru_cache(maxsize=None)
 def _sharded_pool_call(mesh, tput, backend: str, delta_mig: int,
-                       with_regions: bool, ahap: bool, lspec, jspec, ospec):
+                       with_regions: bool, ahap: bool, lspec, jspec, ospec,
+                       collect: bool = False):
     """jit(shard_map)-wrapped runner for one kind partition, cached on the
-    static configuration. The cache is what keeps the sharded path's
-    per-call cost at dispatch level: a fresh shard_map closure per call
-    would retrace (and re-lower) the whole pool program every invocation —
-    the prime mover of the old 1000-job sharded-scale regression."""
+    static configuration (``collect`` is part of the key: the telemetry
+    program is a different lowering). The cache is what keeps the sharded
+    path's per-call cost at dispatch level: a fresh shard_map closure per
+    call would retrace (and re-lower) the whole pool program every
+    invocation — the prime mover of the old 1000-job sharded-scale
+    regression."""
     from jax.experimental.shard_map import shard_map
 
     if ahap and with_regions:
@@ -730,7 +801,7 @@ def _sharded_pool_call(mesh, tput, backend: str, delta_mig: int,
     elif ahap:
         def local(w, v_, s, r, jb, pr_, av_, pm_):
             return _pool_jobs_ahap(w, v_, s, r, jb, tput, pr_, av_, pm_,
-                                   backend)
+                                   backend, collect)
         n_lane = 4
     elif with_regions:
         def local(k, s, c, rs, rm, jb, pr_, av_, pm_):
@@ -741,7 +812,7 @@ def _sharded_pool_call(mesh, tput, backend: str, delta_mig: int,
     else:
         # pm_ rides along unused: cheap lanes take no forecasts
         def local(k, s, c, jb, pr_, av_, pm_):
-            return _pool_jobs_cheap(k, s, c, jb, tput, pr_, av_)
+            return _pool_jobs_cheap(k, s, c, jb, tput, pr_, av_, collect)
         n_lane = 3
     return jax.jit(shard_map(
         local, mesh=mesh,
@@ -752,7 +823,7 @@ def _sharded_pool_call(mesh, tput, backend: str, delta_mig: int,
 
 def _run_partitioned_sharded(pool_arrays, jobs, tput, prices, avail, pred,
                              backend: str, mesh, *, with_regions: bool = False,
-                             delta_mig: int = 0):
+                             delta_mig: int = 0, collect: bool = False):
     """Sharded twin of :func:`_run_partitioned`: partition by kind on the
     host, then lay each partition's (jobs x lanes) grid over ``mesh``.
 
@@ -796,7 +867,7 @@ def _run_partitioned_sharded(pool_arrays, jobs, tput, prices, avail, pred,
         )
         call = _sharded_pool_call(
             mesh, tput, backend, int(delta_mig), with_regions, ahap,
-            lspec, jspec, ospec,
+            lspec, jspec, ospec, collect,
         )
         out = call(*lane_in, jobs, pr_j, av_j, pm_j)
         if pad_l:
@@ -823,6 +894,7 @@ def simulate_pool_jobs_sharded(
     prices, avail, pred,
     backend: str = "xla",
     mesh=None,
+    collect: bool = False,
 ):
     """Device-sharded :func:`simulate_pool_jobs`: the (jobs x lanes) grid is
     laid over ``mesh`` (default: repro.launch.mesh.make_pool_mesh over every
@@ -840,7 +912,10 @@ def simulate_pool_jobs_sharded(
     both axes, so the result is BITWISE-equal to ``simulate_pool_jobs``
     (pinned in tests/test_sharded_pool.py for the jobs, lanes and 2-D
     layouts). With one visible device this falls through to
-    ``simulate_pool_jobs`` itself.
+    ``simulate_pool_jobs`` itself. ``collect=True`` adds the (J, P, T)
+    ``tel_*`` flight-recorder series (repro.obs); telemetry shards like
+    the allocation histories, so sharded collect runs stay bitwise-equal
+    to unsharded ones.
     """
     from repro.launch.mesh import make_pool_mesh
 
@@ -848,10 +923,12 @@ def simulate_pool_jobs_sharded(
         mesh = make_pool_mesh()
     if int(np.prod(mesh.devices.shape)) == 1:
         return simulate_pool_jobs(
-            pool_arrays, jobs, tput, prices, avail, pred, backend=backend
+            pool_arrays, jobs, tput, prices, avail, pred, backend=backend,
+            collect=collect,
         )
     return _run_partitioned_sharded(
-        pool_arrays, jobs, tput, prices, avail, pred, backend, mesh
+        pool_arrays, jobs, tput, prices, avail, pred, backend, mesh,
+        collect=collect,
     )
 
 

@@ -68,12 +68,33 @@ def _waterfall(demand, slack, ids, supply):
     return jnp.zeros_like(demand).at[order].set(g_sorted)
 
 
+def _demand_rank(demand, slack, ids):
+    """Flight-recorder companion to :func:`_waterfall`: each job's position
+    in the demanders-only grant order (-1 for jobs demanding nothing this
+    slot). Sorting demanders first (extra ``demand <= 0`` key ahead of the
+    same ``(slack, id)`` keys) keeps demander positions identical whether
+    or not zero-demand jobs — including the sharded path's sentinel pads,
+    which never demand — are present, so sharded and unsharded collect
+    runs agree bitwise. Only traced when ``collect=True``."""
+    n = ids.shape[0]
+    order = jnp.lexsort((ids, slack, (demand <= 0).astype(jnp.int32)))
+    pos = jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32)
+    )
+    return jnp.where(demand > 0, pos, -1)
+
+
 # ---------------------------------------------------------------------------
 # The fleet scan (runs whole on one device, or per shard under shard_map)
 # ---------------------------------------------------------------------------
 
+_TEL_FLEET = ("tel_demand", "tel_grant", "tel_slack", "tel_rank",
+              "tel_starved")
+
+
 def _fleet_scan(pol, jobs, arrivals, ids, tput, prices, avail, pred,
-                backend: str, n_ahap: int, axis_name: Optional[str] = None):
+                backend: str, n_ahap: int, axis_name: Optional[str] = None,
+                collect: bool = False):
     """One ``lax.scan`` over market slots for a fleet (shard).
 
     ``jobs``/``arrivals``/``ids`` are (Jl,) leaves ordered ``[AHAP block |
@@ -83,6 +104,12 @@ def _fleet_scan(pol, jobs, arrivals, ids, tput, prices, avail, pred,
     slot forecast row is pre-clamped to the pool supply by the callers.
     Under ``shard_map`` (``axis_name="jobs"``) the waterfall all-gathers
     (demand, slack, id) so every shard grants the identical global order.
+    ``collect`` (static) appends the flight-recorder series to the scan
+    ys: the shared ``fast_sim._TEL_SLOTS`` slot telemetry (preemption =
+    the waterfall grant fell below last slot's allocation) plus the
+    ``_TEL_FLEET`` waterfall series (demand vs grant, slack, demanders-only
+    grant rank, starvation). The False branch traces the identical
+    program as before telemetry existed.
     """
     prices = jnp.asarray(prices, jnp.float32)
     av_i = jnp.asarray(avail).astype(jnp.int32)
@@ -174,19 +201,31 @@ def _fleet_scan(pol, jobs, arrivals, ids, tput, prices, avail, pred,
                  - jnp.maximum(jobs.workload - z, 0.0) / h_max)
         if axis_name is None:
             grant = _waterfall(d_s, slack, ids, sup)
+            if collect:
+                rank = _demand_rank(d_s, slack, ids)
         else:
             d_all = jax.lax.all_gather(d_s, axis_name, tiled=True)
             s_all = jax.lax.all_gather(slack, axis_name, tiled=True)
             g_all = _waterfall(d_all, s_all, ids_all, sup)
             grant = jax.lax.dynamic_slice(g_all, (start,), (n_jobs,))
+            if collect:
+                r_all = _demand_rank(d_all, s_all, ids_all)
+                rank = jax.lax.dynamic_slice(r_all, (start,), (n_jobs,))
 
         # ---- execute phase: local clock, pre-arrival masked to inactive
         mt = jnp.where(lt >= 0, lt, jobs.deadline)
-        z, n_prev, cost, done, T, n_o, n_s, _ = fast_sim._execute(
+        n_prev0 = n_prev
+        z, n_prev, cost, done, T, n_o, n_s, active = fast_sim._execute(
             jobs, tput, z, n_prev, cost, done, T, mt, d_o, grant, price,
             grant,
         )
-        return (z, n_prev, cost, done, T, plans), (n_o, n_s)
+        ys = (n_o, n_s)
+        if collect:
+            ys = ys + fast_sim._slot_telemetry(
+                jobs, n_prev0, z, n_o, n_s, active, price, grant
+            ) + (d_s, grant, jnp.where(live, slack, 0.0), rank,
+                 live & (d_s > 0) & (grant < d_s))
+        return (z, n_prev, cost, done, T, plans), ys
 
     init = (
         jnp.zeros((n_jobs,), jnp.float32), jnp.zeros((n_jobs,), jnp.int32),
@@ -197,23 +236,28 @@ def _fleet_scan(pol, jobs, arrivals, ids, tput, prices, avail, pred,
     xs = (prices, av_i, sup_prev, ts)
     if has_ahap:
         xs = xs + (pr, thr_s, z_exp_end, eff_slots)
-    (z, _, cost, done, T, _), (no_hist, ns_hist) = jax.lax.scan(
-        step, init, xs)
-    return fast_sim._finalize(
+    (z, _, cost, done, T, _), ys = jax.lax.scan(step, init, xs)
+    out = fast_sim._finalize(
         fast_sim._job_cfg(jobs), jobs, tput, z, cost, done, T,
-        jnp.swapaxes(no_hist, 0, 1), jnp.swapaxes(ns_hist, 0, 1),
+        jnp.swapaxes(ys[0], 0, 1), jnp.swapaxes(ys[1], 0, 1),
     )
+    if collect:
+        for key, hist in zip(fast_sim._TEL_SLOTS + _TEL_FLEET, ys[2:]):
+            out[key] = jnp.swapaxes(hist, 0, 1)
+    return out
 
 
-@functools.partial(jax.jit, static_argnames=("tput", "backend", "n_ahap"))
+@functools.partial(jax.jit,
+                   static_argnames=("tput", "backend", "n_ahap", "collect"))
 def _fleet_call(pol, jobs, arrivals, ids, tput, prices, avail, pred,
-                backend: str, n_ahap: int):
+                backend: str, n_ahap: int, collect: bool = False):
     return _fleet_scan(pol, jobs, arrivals, ids, tput, prices, avail, pred,
-                       backend, n_ahap)
+                       backend, n_ahap, collect=collect)
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_fleet_call(mesh, tput, backend: str, n_ahap: int):
+def _sharded_fleet_call(mesh, tput, backend: str, n_ahap: int,
+                        collect: bool = False):
     """jit(shard_map)-wrapped fleet runner, cached on the static
     configuration (same reasoning as fast_sim._sharded_pool_call: a fresh
     shard_map closure per call would re-lower the whole program)."""
@@ -224,7 +268,8 @@ def _sharded_fleet_call(mesh, tput, backend: str, n_ahap: int):
 
     def local(pol, jobs, arrivals, ids, prices, avail, pred):
         return _fleet_scan(pol, jobs, arrivals, ids, tput, prices, avail,
-                           pred, backend, n_ahap, axis_name="jobs")
+                           pred, backend, n_ahap, axis_name="jobs",
+                           collect=collect)
 
     return jax.jit(shard_map(
         local, mesh=mesh,
@@ -276,7 +321,8 @@ def _take_jobs(jobs: JobArrays, idx) -> JobArrays:
 
 
 def simulate_fleet(pool_rows, jobs: JobArrays, arrivals, tput, prices,
-                   avail, pred=None, backend: str = "xla"):
+                   avail, pred=None, backend: str = "xla",
+                   collect: bool = False):
     """Simulate a fleet of jobs contending for one spot pool, on device.
 
     ``pool_rows`` — per-job policy rows (``kind``/``omega``/``v``/``sigma``
@@ -304,6 +350,7 @@ def simulate_fleet(pool_rows, jobs: JobArrays, arrivals, tput, prices,
         jnp.asarray(np.asarray(arrivals, np.int32)[order]),
         jnp.asarray(order), tput, jnp.asarray(prices),
         jnp.asarray(avail_np), jnp.asarray(pred), backend, len(aidx),
+        collect,
     )
     take = jnp.asarray(pos)
     return {k: jnp.take(v, take, axis=0) for k, v in out.items()}
@@ -311,7 +358,7 @@ def simulate_fleet(pool_rows, jobs: JobArrays, arrivals, tput, prices,
 
 def simulate_fleet_sharded(pool_rows, jobs: JobArrays, arrivals, tput,
                            prices, avail, pred=None, backend: str = "xla",
-                           mesh=None):
+                           mesh=None, collect: bool = False):
     """:func:`simulate_fleet` with the job axis laid over the pool mesh.
 
     Default mesh: ``launch.mesh.make_pool_mesh()`` (1-D over every visible
@@ -328,7 +375,7 @@ def simulate_fleet_sharded(pool_rows, jobs: JobArrays, arrivals, tput,
     _, n_jobs_dev, _ = pool_mesh_job_axes(mesh)
     if n_jobs_dev <= 1:
         return simulate_fleet(pool_rows, jobs, arrivals, tput, prices,
-                              avail, pred, backend)
+                              avail, pred, backend, collect)
 
     rows, n = _norm_rows(pool_rows)
     assert n == int(np.shape(jobs.workload)[0]) == int(np.shape(arrivals)[0])
@@ -361,7 +408,7 @@ def simulate_fleet_sharded(pool_rows, jobs: JobArrays, arrivals, tput,
     ids_l = np.where(is_pad, n + np.arange(lay.shape[0]), lay)
 
     pol = {k: jnp.asarray(v[gidx]) for k, v in rows.items()}
-    call = _sharded_fleet_call(mesh, tput, backend, j_a)
+    call = _sharded_fleet_call(mesh, tput, backend, j_a, collect)
     out = call(
         pol, _take_jobs(jobs, gidx), jnp.asarray(arr_l),
         jnp.asarray(ids_l.astype(np.int32)), jnp.asarray(prices),

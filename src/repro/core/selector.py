@@ -143,8 +143,9 @@ def eg_init(n_policies: int, horizon: int,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("track_history",))
-def run_eg_scan(state: EGState, utilities, track_history: bool = False):
+@functools.partial(jax.jit, static_argnames=("track_history", "collect"))
+def run_eg_scan(state: EGState, utilities, track_history: bool = False,
+                collect: bool = False):
     """Run the EG update over every row of ``utilities`` ((K, M), normalized
     to [0, 1] — clipped here exactly like the numpy loop) in one
     ``lax.scan``. Returns ``(final_state, traj)`` where ``traj`` holds the
@@ -153,8 +154,14 @@ def run_eg_scan(state: EGState, utilities, track_history: bool = False):
       max_weight  (K,)  max_m w_k[m] — iters-to-half-weight reads off this
       regret      (K,)  max_m cum_utils - cum_expected after job k
       weights     (K, M) only when ``track_history`` (Fig. 10's heatmap)
+      entropy     (K,)  only when ``collect`` — Shannon entropy of w_k,
+                        the flight recorder's convergence gauge
+      top_policy  (K,)  only when ``collect`` — argmax_m w_k[m] (first-max
+                        ties, matching the numpy loop)
 
-    The update order, the clipping, and first-max argmax ties match
+    Both static flags only ADD scan outputs, so the default call compiles
+    to the identical program. The update order, the clipping, and
+    first-max argmax ties match
     :func:`update` (the numpy loop floors weights at 1e-300 before the log;
     in f32 the floor is the smallest normal instead — weights there are
     zero to f32 anyway). Chain calls by passing the returned state back in:
@@ -174,6 +181,9 @@ def run_eg_scan(state: EGState, utilities, track_history: bool = False):
         ys = {"max_weight": w.max(), "regret": cu.max() - ce}
         if track_history:
             ys["weights"] = w
+        if collect:
+            ys["entropy"] = -jnp.sum(w * jnp.log(jnp.maximum(w, tiny)))
+            ys["top_policy"] = jnp.argmax(w).astype(jnp.int32)
         return ns, ys
 
     return jax.lax.scan(step, state, u_all)

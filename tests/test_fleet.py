@@ -300,6 +300,23 @@ for J in (3, 5, 9):
             np.testing.assert_array_equal(
                 np.asarray(base[k]), np.asarray(sh[k]),
                 err_msg=f"{k} J={J} mesh={shape}")
+
+# collect=True: the telemetry-carrying fleet (including the all-gathered
+# waterfall rank series) shards bitwise too, and its shared keys match the
+# collect=False run (one config — J=9 inputs left in scope by the loop)
+tel = fleet.simulate_fleet(rows, stacked, arrivals, TPUT, prices, avail,
+                           pred, collect=True)
+tel_sh = fleet.simulate_fleet_sharded(
+    rows, stacked, arrivals, TPUT, prices, avail, pred,
+    mesh=make_pool_mesh(shape=(4,)), collect=True)
+assert set(tel) == set(tel_sh) and len(tel) == len(base) + 12, sorted(tel)
+for k in tel:
+    np.testing.assert_array_equal(
+        np.asarray(tel[k]), np.asarray(tel_sh[k]), err_msg=f"collect {k}")
+for k in base:
+    np.testing.assert_array_equal(
+        np.asarray(base[k]), np.asarray(tel[k]),
+        err_msg=f"collect-vs-base {k}")
 print("FLEET-SHARDED-OK")
 """
 

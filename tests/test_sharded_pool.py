@@ -76,6 +76,23 @@ for n_jobs in (1, 3, 5):
                 err_msg=f"{k} n_jobs={n_jobs} mesh={shape}",
             )
 
+# collect=True: the telemetry-carrying program shards bitwise too, and its
+# shared keys match the collect=False run (one config bounds the runtime;
+# the loop leaves n_jobs=5 inputs in scope)
+tel = fast_sim.simulate_pool_jobs(
+    arrs, stacked, TPUT, prices, avail, preds, collect=True)
+tel_sh = fast_sim.simulate_pool_jobs_sharded(
+    arrs, stacked, TPUT, prices, avail, preds,
+    mesh=make_pool_mesh(shape=(2, 2)), collect=True)
+assert set(tel) == set(tel_sh) and len(tel) == len(base) + 7, sorted(tel)
+for k in tel:
+    np.testing.assert_array_equal(
+        np.asarray(tel[k]), np.asarray(tel_sh[k]), err_msg=f"collect {k}")
+for k in base:
+    np.testing.assert_array_equal(
+        np.asarray(base[k]), np.asarray(tel[k]),
+        err_msg=f"collect-vs-base {k}")
+
 # multi-region: same meshes over the (J, R, T) market tensors
 mkt = vast_like_regions(3, seed=1, days=1)
 rarrs = specs_to_arrays(region_pool())

@@ -1,0 +1,324 @@
+"""Flight recorder (repro.obs) pins.
+
+Two families of guarantees:
+
+* **collect=False is the shipped program.** The telemetry flag is static
+  and every if-collect branch only ADDS scan outputs, so a default run
+  must be BITWISE-equal to the pre-telemetry build — pinned here for
+  ``simulate_pool`` / ``simulate_pool_jobs`` / ``simulate_fleet`` /
+  ``simulate_and_select`` (the 4-device sharded twins are pinned in
+  tests/test_sharded_pool.py and tests/test_fleet.py subprocesses).
+
+* **collect=True telemetry is self-consistent.** The per-slot cost split
+  reconciles with the engine's reported cost/utility totals (f32
+  tolerance, residuals carried in the ledger); reconfiguration events
+  replay exactly from the allocation histories on host; waterfall grants
+  never oversubscribe the supply and the demander rank is a valid
+  permutation prefix; the EG entropy/top-policy traces match a host
+  recomputation from the weight history. Ledgers JSON-round-trip and the
+  report renders every kind.
+"""
+import json
+
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, st
+
+from benchmarks.common import (PAPER_TPUT, job_stream, job_stream_arrays,
+                               paper_market)
+from repro.configs.base import ThroughputConfig
+from repro.core import engine, fast_sim, fleet
+from repro.core import selector as sel
+from repro.core.market import vast_like_trace
+from repro.core.policy_pool import (
+    baseline_specs,
+    paper_pool,
+    rand_deadline_pool,
+    specs_to_arrays,
+)
+from repro.core.predictor import NoisyPredictor
+from repro.obs import (
+    SLOT_KEYS,
+    fleet_ledger,
+    frame_from_out,
+    grid_ledger,
+    has_telemetry,
+    pool_ledger,
+    render,
+    selection_ledger,
+)
+
+TPUT = ThroughputConfig(mu1=0.9, mu2=0.95)
+D = 10
+
+
+def _pool_setup(n_jobs=5, seed=3):
+    pool = (paper_pool(omegas=(2,), sigmas=(0.5,))
+            + rand_deadline_pool((0.4,)) + baseline_specs())
+    arrs = specs_to_arrays(pool)
+    rng = np.random.default_rng(seed)
+    jobs = fast_sim.stack_jobs(list(job_stream(rng, n_jobs, deadline=D)))
+    traces = [vast_like_trace(seed=60 + i, days=1).window(0, D + 1)
+              for i in range(n_jobs)]
+    prices = np.stack([t.prices[:D] for t in traces]).astype(np.float32)
+    avail = np.stack([t.avail[:D] for t in traces]).astype(np.int64)
+    preds = np.stack([
+        NoisyPredictor(t, "fixed_uniform", 0.2, seed=i).matrix(
+            fast_sim.W1MAX - 1)[:D]
+        for i, t in enumerate(traces)
+    ]).astype(np.float32)
+    return pool, arrs, jobs, prices, avail, preds
+
+
+def _fleet_setup(J=12, T=24, seed=7):
+    pool = (paper_pool(omegas=(2,), sigmas=(0.5,))
+            + rand_deadline_pool((0.4,)) + baseline_specs())
+    arrs = specs_to_arrays(pool)
+    rng = np.random.default_rng(seed)
+    tr = vast_like_trace(seed=5, days=2).window(0, T + 1)
+    prices = tr.prices[:T].astype(np.float32)
+    avail = tr.avail[:T].astype(np.int64)
+    pred = NoisyPredictor(tr, "fixed_uniform", 0.2, seed=3).matrix(
+        fast_sim.W1MAX - 1)[:T].astype(np.float32)
+    jobs = fast_sim.stack_jobs(list(job_stream(rng, J, deadline=D)))
+    arrivals = rng.integers(0, 8, size=J)
+    idx = rng.integers(0, len(pool), size=J)
+    rows = {k: np.asarray(arrs[k])[idx]
+            for k in ("kind", "omega", "v", "sigma", "rho", "cfrac")}
+    return jobs, arrivals, rows, prices, avail, pred
+
+
+def _replay_events(n_od, n_spot, active, grant=None):
+    """Host oracle for the reconfiguration-event series: replay the
+    ``n_prev`` carry of ``fast_sim._execute`` (updates only on active
+    slots, starts at 0) over the recorded allocation histories."""
+    n_od = np.asarray(n_od)
+    T = n_od.shape[-1]
+    n_prev = np.zeros(n_od.shape[:-1], np.int64)
+    up = np.zeros_like(n_od, bool)
+    down = np.zeros_like(n_od, bool)
+    preempt = np.zeros_like(n_od, bool)
+    for t in range(T):
+        act = np.asarray(active[..., t], bool)
+        n = np.asarray(n_od[..., t] + n_spot[..., t], np.int64)
+        up[..., t] = act & (n > n_prev)
+        down[..., t] = act & (n < n_prev)
+        if grant is not None:
+            preempt[..., t] = down[..., t] & (
+                np.asarray(grant[..., t], np.int64) < n_prev)
+        n_prev = np.where(act, n, n_prev)
+    return up, down, preempt
+
+
+# ---------------------------------------------------------------------------
+# collect=False is bitwise the shipped program; collect=True only adds keys
+# ---------------------------------------------------------------------------
+
+def test_pool_jobs_collect_false_bitwise():
+    _, arrs, jobs, prices, avail, preds = _pool_setup()
+    base = fast_sim.simulate_pool_jobs(arrs, jobs, TPUT, prices, avail, preds)
+    tel = fast_sim.simulate_pool_jobs(arrs, jobs, TPUT, prices, avail, preds,
+                                      collect=True)
+    assert not has_telemetry(base)
+    assert not any(k.startswith("tel_") for k in base)
+    assert has_telemetry(tel)
+    assert set(tel) - set(base) == set(SLOT_KEYS)
+    for k in base:
+        np.testing.assert_array_equal(np.asarray(base[k]), np.asarray(tel[k]),
+                                      err_msg=k)
+
+
+def test_pool_single_job_collect_false_bitwise():
+    _, arrs, jobs, prices, avail, preds = _pool_setup(n_jobs=1)
+    j1 = fast_sim.slice_jobs(jobs, 0, 1)
+    base = fast_sim.simulate_pool_jobs(arrs, j1, TPUT, prices, avail, preds)
+    tel = fast_sim.simulate_pool_jobs(arrs, j1, TPUT, prices, avail, preds,
+                                      collect=True)
+    for k in base:
+        np.testing.assert_array_equal(np.asarray(base[k]), np.asarray(tel[k]),
+                                      err_msg=k)
+    fr = frame_from_out(tel)
+    assert fr.spot_cost.shape == fr.active.shape
+    assert fr.demand is None  # waterfall series are fleet-only
+
+
+def test_fleet_collect_false_bitwise():
+    jobs, arrivals, rows, prices, avail, pred = _fleet_setup()
+    base = fleet.simulate_fleet(rows, jobs, arrivals, TPUT, prices, avail,
+                                pred)
+    tel = fleet.simulate_fleet(rows, jobs, arrivals, TPUT, prices, avail,
+                               pred, collect=True)
+    assert not any(k.startswith("tel_") for k in base)
+    assert set(tel) - set(base) == set(SLOT_KEYS) | {
+        "tel_demand", "tel_grant", "tel_slack", "tel_rank", "tel_starved"}
+    for k in base:
+        np.testing.assert_array_equal(np.asarray(base[k]), np.asarray(tel[k]),
+                                      err_msg=k)
+
+
+def test_engine_collect_false_bitwise_and_chunked():
+    _, arrs, jobs, prices, avail, preds = _pool_setup(n_jobs=6)
+    kw = dict(sharded=False)
+    base = engine.simulate_and_select(arrs, jobs, PAPER_TPUT, prices, avail,
+                                      preds, **kw)
+    tel = engine.simulate_and_select(arrs, jobs, PAPER_TPUT, prices, avail,
+                                     preds, collect=True, **kw)
+    np.testing.assert_array_equal(base.max_weight, tel.max_weight)
+    np.testing.assert_array_equal(base.regret, tel.regret)
+    np.testing.assert_array_equal(np.asarray(base.state.weights),
+                                  np.asarray(tel.state.weights))
+    assert base.entropy is None and base.sim_out is None
+    assert tel.entropy.shape == tel.top_policy.shape == (6,)
+    assert has_telemetry(tel.sim_out)
+    # chunked collect: sim_out concatenates along jobs, trajectories bitwise
+    tel_c = engine.simulate_and_select(arrs, jobs, PAPER_TPUT, prices, avail,
+                                       preds, collect=True, job_chunk=2, **kw)
+    np.testing.assert_array_equal(tel.entropy, tel_c.entropy)
+    np.testing.assert_array_equal(tel.top_policy, tel_c.top_policy)
+    for k in tel.sim_out:
+        np.testing.assert_array_equal(np.asarray(tel.sim_out[k]),
+                                      np.asarray(tel_c.sim_out[k]),
+                                      err_msg=k)
+
+
+def test_eg_scan_collect_parity_and_entropy():
+    rng = np.random.default_rng(2)
+    u = rng.uniform(0, 1, (40, 8)).astype(np.float32)
+    st0 = sel.eg_init(8, 40)
+    stA, trajA = sel.run_eg_scan(st0, u)
+    stB, trajB = sel.run_eg_scan(st0, u, collect=True, track_history=True)
+    np.testing.assert_array_equal(np.asarray(trajA["max_weight"]),
+                                  np.asarray(trajB["max_weight"]))
+    np.testing.assert_array_equal(np.asarray(trajA["regret"]),
+                                  np.asarray(trajB["regret"]))
+    np.testing.assert_array_equal(np.asarray(stA.weights),
+                                  np.asarray(stB.weights))
+    w = np.asarray(trajB["weights"], np.float64)           # (K, M)
+    ent_ref = -(w * np.log(np.maximum(w, 1e-300))).sum(axis=1)
+    np.testing.assert_allclose(np.asarray(trajB["entropy"]), ent_ref,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(trajB["top_policy"]),
+                                  w.argmax(axis=1))
+
+
+# ---------------------------------------------------------------------------
+# collect=True invariants
+# ---------------------------------------------------------------------------
+
+def test_pool_telemetry_invariants():
+    _, arrs, jobs, prices, avail, preds = _pool_setup()
+    tel = fast_sim.simulate_pool_jobs(arrs, jobs, TPUT, prices, avail, preds,
+                                      collect=True)
+    fr = frame_from_out(tel)
+    act = fr.active.astype(bool)
+    # cost split: per-slot billing on active slots only, prices broadcast
+    # (J, 1, T) over lanes
+    np.testing.assert_allclose(
+        fr.spot_cost,
+        np.where(act, fr.n_spot * prices[:, None, :], 0.0), rtol=1e-6)
+    p_o = np.asarray(jobs.p_o)[:, None, None]
+    np.testing.assert_allclose(
+        fr.od_cost, np.where(act, fr.n_od * p_o, 0.0), rtol=1e-6)
+    # events replay exactly from the allocation histories
+    up, down, _ = _replay_events(fr.n_od, fr.n_spot, act)
+    np.testing.assert_array_equal(fr.reconfig_up.astype(bool), up)
+    np.testing.assert_array_equal(fr.reconfig_down.astype(bool), down)
+    # preempt is a supply-forced shrink: a subset of down, never on up
+    pre = fr.preempted.astype(bool)
+    assert not np.any(pre & ~down)
+    # progress (cumulative work) is monotone and ends at z_ddl
+    assert np.all(np.diff(fr.progress, axis=-1) >= -1e-5)
+    np.testing.assert_allclose(fr.progress[..., -1],
+                               np.asarray(tel["z_ddl"]), atol=1e-5)
+
+
+def test_fleet_telemetry_invariants():
+    jobs, arrivals, rows, prices, avail, pred = _fleet_setup()
+    T = prices.shape[0]
+    tel = fleet.simulate_fleet(rows, jobs, arrivals, TPUT, prices, avail,
+                               pred, collect=True)
+    fr = frame_from_out(tel)
+    # waterfall conservation: per-slot total grants never exceed supply
+    assert np.all(fr.grant.sum(axis=0) <= avail)
+    # grants only to demanders; starved implies demanded-but-shorted
+    assert np.all((fr.grant > 0) <= (fr.demand > 0))
+    starved = fr.starved.astype(bool)
+    assert not np.any(starved & ~((fr.demand > 0) & (fr.grant < fr.demand)))
+    # demander rank: a valid permutation prefix each slot, -1 elsewhere
+    for t in range(T):
+        d = fr.demand[:, t] > 0
+        r = fr.waterfall_rank[:, t]
+        assert np.all(r[~d] == -1)
+        assert sorted(r[d]) == list(range(int(d.sum())))
+    # events replay exactly, including grant-forced preemptions
+    act = fr.active.astype(bool)
+    up, down, pre = _replay_events(fr.n_od, fr.n_spot, act, grant=fr.grant)
+    np.testing.assert_array_equal(fr.reconfig_up.astype(bool), up)
+    np.testing.assert_array_equal(fr.reconfig_down.astype(bool), down)
+    np.testing.assert_array_equal(fr.preempted.astype(bool), pre)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), mu1=st.floats(0.5, 1.0),
+       mu2=st.floats(0.5, 1.0))
+def test_cost_reconciliation_property(seed, mu1, mu2):
+    """The ledger's cost decomposition (spot + od + termination) reconciles
+    with the engine's reported cost and utility to f32 tolerance, across
+    random jobs, markets and reconfiguration penalties."""
+    tput = ThroughputConfig(mu1=min(mu1, mu2), mu2=max(mu1, mu2))
+    pool = (paper_pool(omegas=(2,), sigmas=(0.5,)) + baseline_specs())
+    arrs = specs_to_arrays(pool)
+    rng = np.random.default_rng(seed)
+    jobs = job_stream_arrays(rng, 4, deadline=D)
+    traces = [vast_like_trace(seed=seed + i, days=1).window(0, D + 1)
+              for i in range(4)]
+    prices = np.stack([t.prices[:D] for t in traces]).astype(np.float32)
+    avail = np.stack([t.avail[:D] for t in traces]).astype(np.int64)
+    preds = np.stack([
+        NoisyPredictor(t, "fixed_uniform", 0.2, seed=i).matrix(
+            fast_sim.W1MAX - 1)[:D]
+        for i, t in enumerate(traces)
+    ]).astype(np.float32)
+    tel = fast_sim.simulate_pool_jobs(arrs, jobs, tput, prices, avail, preds,
+                                      collect=True)
+    led = pool_ledger(tel, jobs, tput)
+    rc = led["cost_reconciliation"]
+    assert rc["max_abs_cost_residual"] < 1e-3, rc
+    assert rc["max_abs_utility_residual"] < 1e-3, rc
+
+
+# ---------------------------------------------------------------------------
+# ledgers + report
+# ---------------------------------------------------------------------------
+
+def test_ledgers_json_roundtrip_and_render():
+    pool, arrs, jobs, prices, avail, preds = _pool_setup(n_jobs=4)
+    res = engine.simulate_and_select(arrs, jobs, PAPER_TPUT, prices, avail,
+                                     preds, sharded=False, collect=True,
+                                     return_utilities=True)
+    names = [p.name for p in pool]
+
+    pl = pool_ledger(res.sim_out, jobs, PAPER_TPUT, lane_names=names)
+    slc = selection_ledger(res)
+    meta = [{"key": "r0", "avail_mean": 5.5, "noise": 0.2}]
+    gl = grid_ledger(meta, np.asarray(res.utilities)[None], res.sim_out,
+                     jobs, [PAPER_TPUT], 4, lane_names=names)
+
+    fjobs, arrivals, rows, fprices, favail, fpred = _fleet_setup(J=6, T=16)
+    ftel = fleet.simulate_fleet(rows, fjobs, arrivals, TPUT, fprices, favail,
+                                fpred, collect=True)
+    fl = fleet_ledger(ftel, fjobs, TPUT, supply=favail)
+
+    for led in (pl, slc, gl, fl):
+        back = json.loads(json.dumps(led))
+        assert back == led
+        text = render(led)
+        assert text.count("\n") >= 2 and led["kind"] in ("pool", "fleet",
+                                                         "selection",
+                                                         "scenario_grid")
+    assert fl["waterfall"]["max_oversubscription"] <= 0
+    assert slc["entropy_final"] <= slc["entropy_uniform"] + 1e-6
+    with pytest.raises(ValueError):
+        render({"kind": "nope"})
+    with pytest.raises(KeyError):
+        frame_from_out({"n_od": np.zeros((1, 1))})
