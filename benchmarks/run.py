@@ -78,6 +78,7 @@ MODULES = [
     "selection_e2e",
     "fleet_sim",
     "scenario_grid",
+    "chaos_sweep",
 ]
 
 
@@ -131,12 +132,13 @@ def main() -> None:
                     "module": mod_name, "name": name,
                     "us_per_call": float(us), "derived": float(derived),
                 })
-        except Exception:
+        except Exception as e:
             failures += 1
             print(f"{mod_name},0.0,nan  # FAILED", flush=True)
             json_rows.append({
                 "module": mod_name, "name": f"{mod_name}__FAILED",
                 "us_per_call": 0.0, "derived": None,  # null: strict-JSON safe
+                "error": f"{type(e).__name__}: {e}",
             })
             traceback.print_exc(file=sys.stderr)
         print(f"# {mod_name} done in {time.time()-t0:.1f}s", flush=True)

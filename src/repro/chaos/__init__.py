@@ -1,0 +1,34 @@
+"""Chaos engineering for the scheduling engines: seeded fault injection
+over market traces / forecast stacks (:mod:`repro.chaos.faults`) and the
+online prediction-failure fallback the engines degrade to when their
+forecasts go bad (:mod:`repro.chaos.fallback`). Benchmarked end to end by
+benchmarks/chaos_sweep.py."""
+from repro.chaos.fallback import FallbackConfig
+from repro.chaos.faults import (
+    FAULT_KINDS,
+    FORECAST_KINDS,
+    MARKET_KINDS,
+    FaultSpec,
+    blackout_schedule,
+    inject,
+    inject_forecasts,
+    inject_market,
+    storm_schedule,
+    sync_present,
+    window_mask,
+)
+
+__all__ = [
+    "FAULT_KINDS",
+    "MARKET_KINDS",
+    "FORECAST_KINDS",
+    "FaultSpec",
+    "FallbackConfig",
+    "window_mask",
+    "inject_market",
+    "inject_forecasts",
+    "sync_present",
+    "inject",
+    "storm_schedule",
+    "blackout_schedule",
+]

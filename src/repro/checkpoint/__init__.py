@@ -1,4 +1,5 @@
 from repro.checkpoint.ckpt import (
+    CheckpointCorruptError,
     checkpoint_bytes,
     reconfiguration_mu,
     restore,

@@ -11,6 +11,16 @@ from the actual serialized sizes.
 Elastic resharding: checkpoints are *instance-count independent* (full
 logical arrays), so restoring onto a different data-parallel width is a
 no-op — the loader re-shards on the next step.
+
+Hardening (preemption storms hit the checkpoint path exactly when it
+matters most): writes are atomic (tmp + rename, so a preempted writer
+never leaves a torn file at the target path), every blob carries a CRC32
+of its compressed body that is verified on load, and both ``save`` and
+``restore`` retry transient ``OSError``s with exponential backoff.
+Corruption (bad CRC, truncation, undecodable body) raises
+:class:`CheckpointCorruptError` — callers distinguish "retry elsewhere"
+from "this replica's state is gone". Blobs from before the CRC envelope
+restore unchanged (legacy fallback).
 """
 from __future__ import annotations
 
@@ -18,6 +28,7 @@ import io
 import json
 import os
 import tempfile
+import time
 import zlib
 from typing import Any, Dict, Optional, Tuple
 
@@ -32,6 +43,11 @@ except ModuleNotFoundError:  # pragma: no cover - env-dependent
     zstandard = None
 
 _ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """The checkpoint file is damaged: CRC mismatch, truncation, or an
+    undecodable body. Retrying the read will not help."""
 
 
 def _pack_leaf(x) -> dict:
@@ -59,7 +75,11 @@ def serialize(tree, meta: Optional[Dict[str, Any]] = None) -> bytes:
         "meta": json.dumps(meta or {}),
         "leaves": [_pack_leaf(l) for l in leaves],
     }
-    raw = msgpack.packb(payload, use_bin_type=True)
+    inner = msgpack.packb(payload, use_bin_type=True)
+    # CRC envelope: the checksum covers the full inner payload so any
+    # truncation or bit-flip that survives decompression is still caught
+    raw = msgpack.packb(
+        {"body": inner, "crc": zlib.crc32(inner)}, use_bin_type=True)
     if zstandard is not None:
         return zstandard.ZstdCompressor(level=3).compress(raw)
     return zlib.compress(raw, 6)
@@ -72,18 +92,46 @@ def deserialize(blob: bytes, tree_like) -> Tuple[Any, Dict[str, Any]]:
                 "checkpoint was written with zstd but the 'zstandard' package "
                 "is not installed (zlib-written checkpoints need no extra deps)"
             )
-        raw = zstandard.ZstdDecompressor().decompress(blob)
+        decompress = zstandard.ZstdDecompressor().decompress
     else:
-        raw = zlib.decompress(blob)
-    payload = msgpack.unpackb(raw, raw=False)
-    leaves = [_unpack_leaf(d) for d in payload["leaves"]]
+        decompress = zlib.decompress
+    try:
+        raw = decompress(blob)
+        payload = msgpack.unpackb(raw, raw=False)
+        if isinstance(payload, dict) and "body" in payload:
+            inner = payload["body"]
+            if zlib.crc32(inner) != payload["crc"]:
+                raise CheckpointCorruptError(
+                    "checkpoint checksum mismatch: the file decompressed but "
+                    "its body does not match the stored CRC32")
+            payload = msgpack.unpackb(inner, raw=False)
+        # else: legacy blob from before the CRC envelope — restore as-is
+        leaves = [_unpack_leaf(d) for d in payload["leaves"]]
+    except CheckpointCorruptError:
+        raise
+    except Exception as e:
+        raise CheckpointCorruptError(
+            f"checkpoint is undecodable ({type(e).__name__}: {e})") from e
     treedef = jax.tree_util.tree_structure(tree_like)
     return jax.tree_util.tree_unflatten(treedef, leaves), json.loads(payload["meta"])
 
 
-def save(path: str, tree, meta: Optional[Dict[str, Any]] = None) -> int:
-    """Atomic write; returns byte size (feeds the switching-cost model)."""
-    blob = serialize(tree, meta)
+def _with_retries(fn, retries: int, backoff: float):
+    """Run ``fn`` retrying transient ``OSError``s with exponential backoff
+    (``retries`` extra attempts after the first). Corruption is never
+    retried — a bad CRC will not heal on a reread."""
+    for attempt in range(retries + 1):
+        try:
+            return fn()
+        except OSError:
+            if attempt >= retries:
+                raise
+            time.sleep(backoff * (2 ** attempt))
+
+
+def _write_bytes_atomic(path: str, blob: bytes) -> None:
+    """tmp + rename in the target directory, so a crash mid-write never
+    leaves a torn file at ``path`` (split out for fault-injection tests)."""
     d = os.path.dirname(os.path.abspath(path))
     os.makedirs(d, exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
@@ -94,12 +142,27 @@ def save(path: str, tree, meta: Optional[Dict[str, Any]] = None) -> int:
     finally:
         if os.path.exists(tmp):
             os.unlink(tmp)
+
+
+def _read_bytes(path: str) -> bytes:
+    with open(path, "rb") as f:
+        return f.read()
+
+
+def save(path: str, tree, meta: Optional[Dict[str, Any]] = None, *,
+         retries: int = 2, backoff: float = 0.05) -> int:
+    """Atomic write; returns byte size (feeds the switching-cost model).
+    Transient ``OSError``s are retried ``retries`` times with exponential
+    backoff before propagating."""
+    blob = serialize(tree, meta)
+    _with_retries(lambda: _write_bytes_atomic(path, blob), retries, backoff)
     return len(blob)
 
 
-def restore(path: str, tree_like) -> Tuple[Any, Dict[str, Any]]:
-    with open(path, "rb") as f:
-        return deserialize(f.read(), tree_like)
+def restore(path: str, tree_like, *,
+            retries: int = 2, backoff: float = 0.05) -> Tuple[Any, Dict[str, Any]]:
+    blob = _with_retries(lambda: _read_bytes(path), retries, backoff)
+    return deserialize(blob, tree_like)
 
 
 # ---------------------------------------------------------------------------

@@ -41,7 +41,7 @@ import numpy as np
 from repro.configs.base import ThroughputConfig
 from repro.core import fast_sim, selector
 from repro.core.job import normalize_utility_batch
-from repro.core.market import gather_windows
+from repro.core.market import gather_windows, require_finite
 from repro.core.predictor import noisy_matrix_batch
 
 
@@ -60,6 +60,7 @@ def prepare_noisy_inputs(trace, t0s, deadline: int, kind: str, level,
     pw, aw = gather_windows(trace, t0s, deadline + 1)
     preds = noisy_matrix_batch(pw, aw, kind, level, seeds, horizon,
                                avail_max)[:, :deadline]
+    require_finite("forecast stack", preds)
     return (pw[:, :deadline].astype(np.float32),
             aw[:, :deadline].astype(np.int64),
             preds.astype(np.float32))
@@ -145,6 +146,7 @@ def simulate_and_select(
     track_history: bool = False,
     return_utilities: bool = False,
     collect: bool = False,
+    fallback=None,
 ) -> SelectionResult:
     """Run the whole online-selection workload in one call: sharded pool
     simulation of every (job, policy) cell, batched utility normalization,
@@ -166,7 +168,13 @@ def simulate_and_select(
     adds per-job weight ``entropy`` and the ``top_policy`` leader trace.
     The flag is static and only ADDS scan outputs, so ``collect=False``
     runs the identical compiled program (pinned in
-    tests/test_telemetry.py)."""
+    tests/test_telemetry.py).
+
+    ``fallback`` takes a ``repro.chaos.FallbackConfig`` to arm the
+    prediction-failure monitor in the AHAP lanes (see
+    ``repro.chaos.fallback``); ``None`` — the default — is the same
+    static-flag discipline and compiles the identical shipped program
+    (pinned in tests/test_chaos.py)."""
     n_jobs = int(np.shape(jobs.workload)[0])
     n_pol = int(np.asarray(pool_arrays["kind"]).shape[0])
     if state is None:
@@ -185,11 +193,13 @@ def simulate_and_select(
             out = fast_sim.simulate_pool_jobs_sharded(
                 pool_arrays, jb, tput, prices[lo:hi], avail[lo:hi],
                 preds[lo:hi], backend=backend, mesh=mesh, collect=collect,
+                fallback=fallback,
             )
         else:
             out = fast_sim.simulate_pool_jobs(
                 pool_arrays, jb, tput, prices[lo:hi], avail[lo:hi],
                 preds[lo:hi], backend=backend, collect=collect,
+                fallback=fallback,
             )
         u = out["utility"]                       # (k, M), device-resident
         u_sum = u_sum + jnp.sum(u, axis=0)

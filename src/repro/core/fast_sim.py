@@ -310,6 +310,37 @@ def _execute(j: JobArrays, tput, z, n_prev, cost, done, T, t, n_o, n_s,
 _TEL_SLOTS = ("tel_spot_cost", "tel_od_cost", "tel_progress", "tel_active",
               "tel_up", "tel_down", "tel_preempt")
 
+# prediction-health series, emitted ONLY when a collect run also enables
+# the fallback monitor (fallback is not None): plain collect runs keep the
+# exact _TEL_SLOTS key set the subprocess parity tests count on.
+# Order matches the (fallback-active, ewma-error) ys appended by the scans.
+_TEL_FALLBACK = ("tel_fallback", "tel_pred_err")
+
+# floor for the relative-error denominators of the fallback monitor
+# (traces clip prices >= 0.02; availability errors normalize by >= 1 unit)
+_FB_PRICE_EPS = 0.01
+
+
+def _fallback_error(fallback, err, price, av, prev1_t):
+    """One EWMA update of the prediction-health monitor: blend the relative
+    errors of last slot's 1-step-ahead forecast ``prev1_t`` (price, avail)
+    against this slot's observed market. All ``fallback`` fields are static
+    constants baked into the trace; only traced when fallback is enabled."""
+    avf = av.astype(jnp.float32)
+    e_p = jnp.abs(price - prev1_t[0]) / jnp.maximum(price, _FB_PRICE_EPS)
+    e_a = jnp.abs(avf - prev1_t[1]) / jnp.maximum(avf, 1.0)
+    w_p = jnp.float32(fallback.price_weight)
+    e = w_p * e_p + (jnp.float32(1.0) - w_p) * e_a
+    lam = jnp.float32(fallback.lam)
+    return (jnp.float32(1.0) - lam) * err + lam * e
+
+
+def _fallback_prev1(pred):
+    """(T, 2) realized 1-step-ahead forecast series: at slot t, the value
+    the predictor issued at t-1 for t. Slot 0 uses its own observed-present
+    row, so the monitor starts cold (zero error)."""
+    return jnp.concatenate([pred[:1, 0, :], pred[:-1, 1, :]], axis=0)
+
 
 def _slot_telemetry(j: JobArrays, n_prev_before, z, n_o, n_s, active,
                     price, av):
@@ -465,14 +496,25 @@ def _ahap_rule_batch(jcfg, j: JobArrays, tput, v, backend, z, t, price, av,
 
 def _simulate_lanes_ahap(omega, v, sigma, rho, j: JobArrays, tput,
                          prices, avail, pred, backend: str,
-                         collect: bool = False):
+                         collect: bool = False, fallback=None):
     """All AHAP lanes in ONE scan over slots. Each scan slot issues a single
     batched (P_ahap, w1, tn+1) window DP instead of relying on vmap's
     per-lane grid batching (``_simulate_one_ahap`` under vmap — kept below
     as the equivalence oracle). Scan-invariant scaffolding is precomputed
     per (lane, slot) and fed slot-major through the scan xs. ``collect``
     (static) appends the ``_TEL_SLOTS`` flight-recorder series to the scan
-    ys — the False branch traces the identical program."""
+    ys — the False branch traces the identical program.
+
+    ``fallback`` (a static :class:`repro.chaos.FallbackConfig`, or None)
+    arms the online prediction-health monitor: the scan carries a
+    realized-forecast-error EWMA (one scalar — every lane of a job reads
+    the same forecast stack) and, while it exceeds the threshold, every
+    lane's decision is taken from the prediction-free AHANP rule instead
+    of the window solve (the AHANP "previous availability" is the shifted
+    supply, matching the fleet engine's convention). Plans keep updating
+    underneath so recovery resumes AHAP with a warm history. ``None``
+    traces the bitwise-identical shipped program; with collect also on,
+    the ``_TEL_FALLBACK`` series join the ys."""
     dmax = prices.shape[0]
     p = omega.shape[0]
     jcfg = _job_cfg(j)
@@ -489,14 +531,29 @@ def _simulate_lanes_ahap(omega, v, sigma, rho, j: JobArrays, tput,
         )(omega, sigma, rho)
     )(ts, pred)
     # pr (dmax, P, W1MAX, 2); thr_s (dmax, P, W1MAX); rest (dmax, P)
+    av_i = avail.astype(jnp.int32)
+    if fallback is not None:
+        thr = jnp.float32(fallback.threshold)
+        prev1 = _fallback_prev1(pred)                   # (dmax, 2)
+        prev_av = jnp.concatenate([av_i[:1], av_i[:-1]])
 
     def step(carry, xs):
-        z, n_prev, cost, done, T, plans = carry
-        price, av, pr_t, thr_t, zee_t, eff_t, t = xs
+        if fallback is not None:
+            z, n_prev, cost, done, T, plans, err = carry
+            price, av, pr_t, thr_t, zee_t, eff_t, t, p1_t, pav_t = xs
+            err = _fallback_error(fallback, err, price, av, p1_t)
+            fb = err > thr
+        else:
+            z, n_prev, cost, done, T, plans = carry
+            price, av, pr_t, thr_t, zee_t, eff_t, t = xs
         n_o, n_s, plans = _ahap_rule_batch(
             jcfg, j, tput, v, backend, z, t, price, av, plans,
             pr_t, thr_t, zee_t, eff_t,
         )
+        if fallback is not None:
+            an_o, an_s = _ahanp_rule(j, sigma, z, t, price, av, n_prev, pav_t)
+            n_o = jnp.where(fb, an_o, n_o)
+            n_s = jnp.where(fb, an_s, n_s)
         n_prev0 = n_prev
         z, n_prev, cost, done, T, n_o, n_s, active = _execute(
             j, tput, z, n_prev, cost, done, T, t, n_o, n_s, price, av
@@ -505,7 +562,13 @@ def _simulate_lanes_ahap(omega, v, sigma, rho, j: JobArrays, tput,
         if collect:
             ys = ys + _slot_telemetry(j, n_prev0, z, n_o, n_s, active,
                                       price, av)
-        return (z, n_prev, cost, done, T, plans), ys
+            if fallback is not None:
+                ys = ys + (jnp.broadcast_to(fb, n_o.shape),
+                           jnp.broadcast_to(err, n_o.shape))
+        new_carry = (z, n_prev, cost, done, T, plans)
+        if fallback is not None:
+            new_carry = new_carry + (err,)
+        return new_carry, ys
 
     init = (
         jnp.zeros((p,), jnp.float32), jnp.zeros((p,), jnp.int32),
@@ -513,14 +576,16 @@ def _simulate_lanes_ahap(omega, v, sigma, rho, j: JobArrays, tput,
         jnp.zeros((p,), jnp.float32),
         jnp.zeros((p, VMAX, W1MAX, 2), jnp.float32),
     )
-    (z, _, cost, done, T, _), ys = jax.lax.scan(
-        step, init,
-        (prices, avail.astype(jnp.int32), pr, thr_s, z_exp_end, eff_slots, ts),
-    )
+    xs = (prices, av_i, pr, thr_s, z_exp_end, eff_slots, ts)
+    if fallback is not None:
+        init = init + (jnp.float32(0.0),)
+        xs = xs + (prev1, prev_av)
+    (z, _, cost, done, T, *_rest), ys = jax.lax.scan(step, init, xs)
     out = _finalize(jcfg, j, tput, z, cost, done, T,
                     jnp.swapaxes(ys[0], 0, 1), jnp.swapaxes(ys[1], 0, 1))
     if collect:
-        for key, hist in zip(_TEL_SLOTS, ys[2:]):
+        keys = _TEL_SLOTS + (_TEL_FALLBACK if fallback is not None else ())
+        for key, hist in zip(keys, ys[2:]):
             out[key] = jnp.swapaxes(hist, 0, 1)
     return out
 
@@ -564,10 +629,13 @@ def _simulate_one_ahap(omega, v, sigma, rho, j: JobArrays, tput,
 
 
 def _simulate_one_cheap(kind, sigma, cfrac, j: JobArrays, tput, prices, avail,
-                        collect: bool = False):
+                        collect: bool = False, fallback=None):
     """Non-AHAP lane (AHANP/OD/MSU/UP/RAND_DEADLINE): no forecasts, no
     window DP — the whole step is a handful of VPU ops. ``collect``
-    (static) appends the ``_TEL_SLOTS`` series to the scan ys."""
+    (static) appends the ``_TEL_SLOTS`` series to the scan ys. Cheap lanes
+    consume no predictions, so ``fallback`` never changes their decisions;
+    it only (with collect) appends all-zero ``_TEL_FALLBACK`` placeholder
+    series so the merged pool result keeps one uniform key set."""
     dmax = prices.shape[0]
     jcfg = _job_cfg(j)
 
@@ -596,6 +664,8 @@ def _simulate_one_cheap(kind, sigma, cfrac, j: JobArrays, tput, prices, avail,
         if collect:
             ys = ys + _slot_telemetry(j, n_prev0, z, n_o, n_s, active,
                                       price, av)
+            if fallback is not None:
+                ys = ys + (jnp.bool_(False), jnp.float32(0.0))
         return (z, n_prev, cost, done, T, prev_avail), ys
 
     init = (
@@ -607,7 +677,8 @@ def _simulate_one_cheap(kind, sigma, cfrac, j: JobArrays, tput, prices, avail,
     )
     out = _finalize(jcfg, j, tput, z, cost, done, T, ys[0], ys[1])
     if collect:
-        for key, hist in zip(_TEL_SLOTS, ys[2:]):
+        keys = _TEL_SLOTS + (_TEL_FALLBACK if fallback is not None else ())
+        for key, hist in zip(keys, ys[2:]):
             out[key] = hist
     return out
 
@@ -616,41 +687,46 @@ def _simulate_one_cheap(kind, sigma, cfrac, j: JobArrays, tput, prices, avail,
 # Pool entry points: partition by kind, scatter back to pool order
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("tput", "backend", "collect"))
+@functools.partial(jax.jit,
+                   static_argnames=("tput", "backend", "collect", "fallback"))
 def _pool_ahap(omega, v, sigma, rho, j: JobArrays, tput, prices, avail, pred,
-               backend: str, collect: bool = False):
+               backend: str, collect: bool = False, fallback=None):
     return _simulate_lanes_ahap(
         omega, v, sigma, rho, j, tput, prices, avail, pred, backend,
-        collect=collect,
+        collect=collect, fallback=fallback,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("tput", "collect"))
+@functools.partial(jax.jit, static_argnames=("tput", "collect", "fallback"))
 def _pool_cheap(kind, sigma, cfrac, j: JobArrays, tput, prices, avail,
-                collect: bool = False):
+                collect: bool = False, fallback=None):
     fn = lambda k, s, c: _simulate_one_cheap(k, s, c, j, tput, prices, avail,
-                                             collect=collect)
+                                             collect=collect,
+                                             fallback=fallback)
     return jax.vmap(fn)(kind, sigma, cfrac)
 
 
-@functools.partial(jax.jit, static_argnames=("tput", "backend", "collect"))
+@functools.partial(jax.jit,
+                   static_argnames=("tput", "backend", "collect", "fallback"))
 def _pool_jobs_ahap(omega, v, sigma, rho, jobs: JobArrays, tput,
-                    prices, avail, pred, backend: str, collect: bool = False):
+                    prices, avail, pred, backend: str, collect: bool = False,
+                    fallback=None):
     def per_job(job_row, pr_, av_, pm_):
         return _simulate_lanes_ahap(
             omega, v, sigma, rho, job_row, tput, pr_, av_, pm_, backend,
-            collect=collect,
+            collect=collect, fallback=fallback,
         )
 
     return jax.vmap(per_job)(jobs, prices, avail, pred)
 
 
-@functools.partial(jax.jit, static_argnames=("tput", "collect"))
+@functools.partial(jax.jit, static_argnames=("tput", "collect", "fallback"))
 def _pool_jobs_cheap(kind, sigma, cfrac, jobs: JobArrays, tput, prices, avail,
-                     collect: bool = False):
+                     collect: bool = False, fallback=None):
     def per_job(job_row, pr_, av_):
         fn = lambda k, s, c: _simulate_one_cheap(
-            k, s, c, job_row, tput, pr_, av_, collect=collect
+            k, s, c, job_row, tput, pr_, av_, collect=collect,
+            fallback=fallback,
         )
         return jax.vmap(fn)(kind, sigma, cfrac)
 
@@ -733,38 +809,47 @@ def _run_partitioned(pool_arrays, ahap_call, cheap_call, axis: int,
 
 def simulate_pool(pool_arrays: dict, j: JobArrays, tput: ThroughputConfig,
                   prices, avail, pred, backend: str = "xla",
-                  collect: bool = False):
+                  collect: bool = False, fallback=None):
     """Kind-partitioned pool simulation. pool_arrays from specs_to_arrays;
     results are returned in the original pool order (same leaves/shapes as
     the seed monolithic path, pinned against simulator.simulate).
     ``collect=True`` adds the (P, T) ``tel_*`` flight-recorder series
-    (repro.obs) to the result; False is the bitwise-pinned default."""
+    (repro.obs) to the result; False is the bitwise-pinned default.
+    ``fallback`` (static repro.chaos.FallbackConfig) arms the AHAP lanes'
+    online prediction-failure fallback; None is the bitwise-pinned
+    default."""
     return _run_partitioned(
         pool_arrays,
         lambda w, v, s, r: _pool_ahap(
-            w, v, s, r, j, tput, prices, avail, pred, backend, collect
+            w, v, s, r, j, tput, prices, avail, pred, backend, collect,
+            fallback,
         ),
-        lambda k, s, c: _pool_cheap(k, s, c, j, tput, prices, avail, collect),
+        lambda k, s, c: _pool_cheap(k, s, c, j, tput, prices, avail, collect,
+                                    fallback),
         axis=0,
     )
 
 
 def simulate_pool_jobs(pool_arrays: dict, jobs: JobArrays, tput: ThroughputConfig,
                        prices, avail, pred, backend: str = "xla",
-                       collect: bool = False):
+                       collect: bool = False, fallback=None):
     """Double vmap: jobs (leading axis) x policy pool -> dict of (J, P, ...).
 
     ``jobs`` leaves are stacked (J,) arrays; prices/avail: (J, d_max);
     pred: (J, d_max, W1MAX, 2). One XLA call per kind-partition simulates
     the paper's whole Fig. 9/10 workload. ``collect=True`` adds the
-    (J, P, T) ``tel_*`` flight-recorder series (repro.obs)."""
+    (J, P, T) ``tel_*`` flight-recorder series (repro.obs); ``fallback``
+    (static repro.chaos.FallbackConfig) arms the AHAP lanes' online
+    prediction-failure fallback (None — the default — is bitwise-pinned
+    to the shipped program)."""
     return _run_partitioned(
         pool_arrays,
         lambda w, v, s, r: _pool_jobs_ahap(
-            w, v, s, r, jobs, tput, prices, avail, pred, backend, collect
+            w, v, s, r, jobs, tput, prices, avail, pred, backend, collect,
+            fallback,
         ),
         lambda k, s, c: _pool_jobs_cheap(k, s, c, jobs, tput, prices, avail,
-                                         collect),
+                                         collect, fallback),
         axis=1,
     )
 
@@ -781,14 +866,14 @@ def _pad_leading(x, pad: int):
 @functools.lru_cache(maxsize=None)
 def _sharded_pool_call(mesh, tput, backend: str, delta_mig: int,
                        with_regions: bool, ahap: bool, lspec, jspec, ospec,
-                       collect: bool = False):
+                       collect: bool = False, fallback=None):
     """jit(shard_map)-wrapped runner for one kind partition, cached on the
-    static configuration (``collect`` is part of the key: the telemetry
-    program is a different lowering). The cache is what keeps the sharded
-    path's per-call cost at dispatch level: a fresh shard_map closure per
-    call would retrace (and re-lower) the whole pool program every
-    invocation — the prime mover of the old 1000-job sharded-scale
-    regression."""
+    static configuration (``collect`` and ``fallback`` are part of the
+    key: the telemetry and degradation programs are different lowerings).
+    The cache is what keeps the sharded path's per-call cost at dispatch
+    level: a fresh shard_map closure per call would retrace (and re-lower)
+    the whole pool program every invocation — the prime mover of the old
+    1000-job sharded-scale regression."""
     from jax.experimental.shard_map import shard_map
 
     if ahap and with_regions:
@@ -801,7 +886,7 @@ def _sharded_pool_call(mesh, tput, backend: str, delta_mig: int,
     elif ahap:
         def local(w, v_, s, r, jb, pr_, av_, pm_):
             return _pool_jobs_ahap(w, v_, s, r, jb, tput, pr_, av_, pm_,
-                                   backend, collect)
+                                   backend, collect, fallback)
         n_lane = 4
     elif with_regions:
         def local(k, s, c, rs, rm, jb, pr_, av_, pm_):
@@ -812,7 +897,8 @@ def _sharded_pool_call(mesh, tput, backend: str, delta_mig: int,
     else:
         # pm_ rides along unused: cheap lanes take no forecasts
         def local(k, s, c, jb, pr_, av_, pm_):
-            return _pool_jobs_cheap(k, s, c, jb, tput, pr_, av_, collect)
+            return _pool_jobs_cheap(k, s, c, jb, tput, pr_, av_, collect,
+                                    fallback)
         n_lane = 3
     return jax.jit(shard_map(
         local, mesh=mesh,
@@ -823,7 +909,8 @@ def _sharded_pool_call(mesh, tput, backend: str, delta_mig: int,
 
 def _run_partitioned_sharded(pool_arrays, jobs, tput, prices, avail, pred,
                              backend: str, mesh, *, with_regions: bool = False,
-                             delta_mig: int = 0, collect: bool = False):
+                             delta_mig: int = 0, collect: bool = False,
+                             fallback=None):
     """Sharded twin of :func:`_run_partitioned`: partition by kind on the
     host, then lay each partition's (jobs x lanes) grid over ``mesh``.
 
@@ -867,7 +954,7 @@ def _run_partitioned_sharded(pool_arrays, jobs, tput, prices, avail, pred,
         )
         call = _sharded_pool_call(
             mesh, tput, backend, int(delta_mig), with_regions, ahap,
-            lspec, jspec, ospec, collect,
+            lspec, jspec, ospec, collect, fallback,
         )
         out = call(*lane_in, jobs, pr_j, av_j, pm_j)
         if pad_l:
@@ -895,6 +982,7 @@ def simulate_pool_jobs_sharded(
     backend: str = "xla",
     mesh=None,
     collect: bool = False,
+    fallback=None,
 ):
     """Device-sharded :func:`simulate_pool_jobs`: the (jobs x lanes) grid is
     laid over ``mesh`` (default: repro.launch.mesh.make_pool_mesh over every
@@ -915,7 +1003,10 @@ def simulate_pool_jobs_sharded(
     ``simulate_pool_jobs`` itself. ``collect=True`` adds the (J, P, T)
     ``tel_*`` flight-recorder series (repro.obs); telemetry shards like
     the allocation histories, so sharded collect runs stay bitwise-equal
-    to unsharded ones.
+    to unsharded ones. ``fallback`` (static repro.chaos.FallbackConfig)
+    arms the AHAP lanes' online prediction-failure fallback — the monitor
+    is per-(job, lane)-cell local, so sharded fallback runs stay
+    bitwise-equal to unsharded ones too.
     """
     from repro.launch.mesh import make_pool_mesh
 
@@ -924,11 +1015,11 @@ def simulate_pool_jobs_sharded(
     if int(np.prod(mesh.devices.shape)) == 1:
         return simulate_pool_jobs(
             pool_arrays, jobs, tput, prices, avail, pred, backend=backend,
-            collect=collect,
+            collect=collect, fallback=fallback,
         )
     return _run_partitioned_sharded(
         pool_arrays, jobs, tput, prices, avail, pred, backend, mesh,
-        collect=collect,
+        collect=collect, fallback=fallback,
     )
 
 

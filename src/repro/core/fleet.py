@@ -94,7 +94,7 @@ _TEL_FLEET = ("tel_demand", "tel_grant", "tel_slack", "tel_rank",
 
 def _fleet_scan(pol, jobs, arrivals, ids, tput, prices, avail, pred,
                 backend: str, n_ahap: int, axis_name: Optional[str] = None,
-                collect: bool = False):
+                collect: bool = False, fallback=None):
     """One ``lax.scan`` over market slots for a fleet (shard).
 
     ``jobs``/``arrivals``/``ids`` are (Jl,) leaves ordered ``[AHAP block |
@@ -110,6 +110,17 @@ def _fleet_scan(pol, jobs, arrivals, ids, tput, prices, avail, pred,
     ``_TEL_FLEET`` waterfall series (demand vs grant, slack, demanders-only
     grant rank, starvation). The False branch traces the identical
     program as before telemetry existed.
+
+    ``fallback`` (static repro.chaos.FallbackConfig, or None) arms the
+    per-job prediction-health monitor for the AHAP block: a per-job
+    realized-forecast-error EWMA over the shared market forecasts, updated
+    only once a job has arrived, switches that job's demand to the
+    prediction-free AHANP rule while above threshold (AHANP's "previous
+    availability" is the shifted supply ``sup_prev``, the convention the
+    cheap AHANP jobs already use). ``None`` traces the bitwise-identical
+    shipped program; with ``collect`` also on, the per-job
+    ``fast_sim._TEL_FALLBACK`` series join the ys (all-zero for the cheap
+    block, which consumes no predictions).
     """
     prices = jnp.asarray(prices, jnp.float32)
     av_i = jnp.asarray(avail).astype(jnp.int32)
@@ -123,6 +134,12 @@ def _fleet_scan(pol, jobs, arrivals, ids, tput, prices, avail, pred,
     # (a job's first live slot sees the current supply, like the python
     # policy's first decide).
     sup_prev = jnp.concatenate([av_i[:1], av_i[:-1]])
+
+    # fallback monitor state only exists for the prediction-consuming block
+    fb_on = fallback is not None and has_ahap
+    if fb_on:
+        fb_thr = jnp.float32(fallback.threshold)
+        prev1 = fast_sim._fallback_prev1(pred)            # (T, 2)
 
     ja = fast_sim.slice_jobs(jobs, 0, n_ahap)
     jc = fast_sim.slice_jobs(jobs, n_ahap, n_jobs)
@@ -156,10 +173,14 @@ def _fleet_scan(pol, jobs, arrivals, ids, tput, prices, avail, pred,
     h_max = tput.alpha * jobs.n_max.astype(jnp.float32) + tput.beta
 
     def step(carry, xs):
-        z, n_prev, cost, done, T, plans = carry
-        if has_ahap:
+        if fb_on:
+            z, n_prev, cost, done, T, plans, err = carry
+            price, sup, sup_p, t, pr_t, thr_t, zee_t, eff_t, p1_t = xs
+        elif has_ahap:
+            z, n_prev, cost, done, T, plans = carry
             price, sup, sup_p, t, pr_t, thr_t, zee_t, eff_t = xs
         else:
+            z, n_prev, cost, done, T, plans = carry
             price, sup, sup_p, t = xs
         lt = t - arrivals
         live = (lt >= 0) & (lt < jobs.deadline) & ~done
@@ -171,6 +192,23 @@ def _fleet_scan(pol, jobs, arrivals, ids, tput, prices, avail, pred,
                 jcfg_a, ja, tput, v_a, backend, z[:n_ahap], lt[:n_ahap],
                 price, sup, plans, pr_t, thr_t, zee_t, eff_t,
             )
+            if fb_on:
+                lta = lt[:n_ahap]
+                # the monitor only accumulates once the job is watching
+                # the market (arrived); the shared error sample is scalar
+                err = jnp.where(
+                    lta >= 0,
+                    fast_sim._fallback_error(fallback, err, price, sup, p1_t),
+                    err,
+                )
+                fb = err > fb_thr
+                pa_a = jnp.where(lta >= 1, sup_p, sup)
+                an_o, an_s = fast_sim._ahanp_rule(
+                    ja, pol["sigma"][:n_ahap], z[:n_ahap], lta, price, sup,
+                    n_prev[:n_ahap], pa_a,
+                )
+                d_o_a = jnp.where(fb, an_o, d_o_a)
+                d_s_a = jnp.where(fb, an_s, d_s_a)
             d_o_parts.append(d_o_a)
             d_s_parts.append(d_s_a)
         if has_cheap:
@@ -225,7 +263,21 @@ def _fleet_scan(pol, jobs, arrivals, ids, tput, prices, avail, pred,
                 jobs, n_prev0, z, n_o, n_s, active, price, grant
             ) + (d_s, grant, jnp.where(live, slack, 0.0), rank,
                  live & (d_s > 0) & (grant < d_s))
-        return (z, n_prev, cost, done, T, plans), ys
+            if fallback is not None:
+                if fb_on:
+                    pad = (n_jobs - n_ahap,)
+                    fb_all = jnp.concatenate(
+                        [fb, jnp.zeros(pad, jnp.bool_)]) if has_cheap else fb
+                    err_all = jnp.concatenate(
+                        [err, jnp.zeros(pad, jnp.float32)]) if has_cheap else err
+                else:
+                    fb_all = jnp.zeros((n_jobs,), jnp.bool_)
+                    err_all = jnp.zeros((n_jobs,), jnp.float32)
+                ys = ys + (fb_all, err_all)
+        new_carry = (z, n_prev, cost, done, T, plans)
+        if fb_on:
+            new_carry = new_carry + (err,)
+        return new_carry, ys
 
     init = (
         jnp.zeros((n_jobs,), jnp.float32), jnp.zeros((n_jobs,), jnp.int32),
@@ -236,28 +288,34 @@ def _fleet_scan(pol, jobs, arrivals, ids, tput, prices, avail, pred,
     xs = (prices, av_i, sup_prev, ts)
     if has_ahap:
         xs = xs + (pr, thr_s, z_exp_end, eff_slots)
-    (z, _, cost, done, T, _), ys = jax.lax.scan(step, init, xs)
+    if fb_on:
+        init = init + (jnp.zeros((n_ahap,), jnp.float32),)
+        xs = xs + (prev1,)
+    (z, _, cost, done, T, *_rest), ys = jax.lax.scan(step, init, xs)
     out = fast_sim._finalize(
         fast_sim._job_cfg(jobs), jobs, tput, z, cost, done, T,
         jnp.swapaxes(ys[0], 0, 1), jnp.swapaxes(ys[1], 0, 1),
     )
     if collect:
-        for key, hist in zip(fast_sim._TEL_SLOTS + _TEL_FLEET, ys[2:]):
+        keys = fast_sim._TEL_SLOTS + _TEL_FLEET + (
+            fast_sim._TEL_FALLBACK if fallback is not None else ())
+        for key, hist in zip(keys, ys[2:]):
             out[key] = jnp.swapaxes(hist, 0, 1)
     return out
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("tput", "backend", "n_ahap", "collect"))
+@functools.partial(jax.jit, static_argnames=(
+    "tput", "backend", "n_ahap", "collect", "fallback"))
 def _fleet_call(pol, jobs, arrivals, ids, tput, prices, avail, pred,
-                backend: str, n_ahap: int, collect: bool = False):
+                backend: str, n_ahap: int, collect: bool = False,
+                fallback=None):
     return _fleet_scan(pol, jobs, arrivals, ids, tput, prices, avail, pred,
-                       backend, n_ahap, collect=collect)
+                       backend, n_ahap, collect=collect, fallback=fallback)
 
 
 @functools.lru_cache(maxsize=None)
 def _sharded_fleet_call(mesh, tput, backend: str, n_ahap: int,
-                        collect: bool = False):
+                        collect: bool = False, fallback=None):
     """jit(shard_map)-wrapped fleet runner, cached on the static
     configuration (same reasoning as fast_sim._sharded_pool_call: a fresh
     shard_map closure per call would re-lower the whole program)."""
@@ -269,7 +327,7 @@ def _sharded_fleet_call(mesh, tput, backend: str, n_ahap: int,
     def local(pol, jobs, arrivals, ids, prices, avail, pred):
         return _fleet_scan(pol, jobs, arrivals, ids, tput, prices, avail,
                            pred, backend, n_ahap, axis_name="jobs",
-                           collect=collect)
+                           collect=collect, fallback=fallback)
 
     return jax.jit(shard_map(
         local, mesh=mesh,
@@ -322,7 +380,7 @@ def _take_jobs(jobs: JobArrays, idx) -> JobArrays:
 
 def simulate_fleet(pool_rows, jobs: JobArrays, arrivals, tput, prices,
                    avail, pred=None, backend: str = "xla",
-                   collect: bool = False):
+                   collect: bool = False, fallback=None):
     """Simulate a fleet of jobs contending for one spot pool, on device.
 
     ``pool_rows`` — per-job policy rows (``kind``/``omega``/``v``/``sigma``
@@ -350,7 +408,7 @@ def simulate_fleet(pool_rows, jobs: JobArrays, arrivals, tput, prices,
         jnp.asarray(np.asarray(arrivals, np.int32)[order]),
         jnp.asarray(order), tput, jnp.asarray(prices),
         jnp.asarray(avail_np), jnp.asarray(pred), backend, len(aidx),
-        collect,
+        collect, fallback,
     )
     take = jnp.asarray(pos)
     return {k: jnp.take(v, take, axis=0) for k, v in out.items()}
@@ -358,7 +416,7 @@ def simulate_fleet(pool_rows, jobs: JobArrays, arrivals, tput, prices,
 
 def simulate_fleet_sharded(pool_rows, jobs: JobArrays, arrivals, tput,
                            prices, avail, pred=None, backend: str = "xla",
-                           mesh=None, collect: bool = False):
+                           mesh=None, collect: bool = False, fallback=None):
     """:func:`simulate_fleet` with the job axis laid over the pool mesh.
 
     Default mesh: ``launch.mesh.make_pool_mesh()`` (1-D over every visible
@@ -375,7 +433,7 @@ def simulate_fleet_sharded(pool_rows, jobs: JobArrays, arrivals, tput,
     _, n_jobs_dev, _ = pool_mesh_job_axes(mesh)
     if n_jobs_dev <= 1:
         return simulate_fleet(pool_rows, jobs, arrivals, tput, prices,
-                              avail, pred, backend, collect)
+                              avail, pred, backend, collect, fallback)
 
     rows, n = _norm_rows(pool_rows)
     assert n == int(np.shape(jobs.workload)[0]) == int(np.shape(arrivals)[0])
@@ -408,7 +466,7 @@ def simulate_fleet_sharded(pool_rows, jobs: JobArrays, arrivals, tput,
     ids_l = np.where(is_pad, n + np.arange(lay.shape[0]), lay)
 
     pol = {k: jnp.asarray(v[gidx]) for k, v in rows.items()}
-    call = _sharded_fleet_call(mesh, tput, backend, j_a, collect)
+    call = _sharded_fleet_call(mesh, tput, backend, j_a, collect, fallback)
     out = call(
         pol, _take_jobs(jobs, gidx), jnp.asarray(arr_l),
         jnp.asarray(ids_l.astype(np.int32)), jnp.asarray(prices),

@@ -47,6 +47,22 @@ class Trace:
         )
 
 
+def require_finite(name: str, arr) -> None:
+    """Reject NaN/inf before they reach the jitted engines, where they
+    would propagate silently through the scans as garbage utilities.
+    The error names the offender and where it first appears."""
+    arr = np.asarray(arr)
+    if not np.issubdtype(arr.dtype, np.floating):
+        return
+    bad = ~np.isfinite(arr)
+    if bad.any():
+        first = np.unravel_index(int(np.argmax(bad)), arr.shape)
+        raise ValueError(
+            f"{name} contains {int(bad.sum())} non-finite value(s) "
+            f"(NaN/inf), first at index {tuple(int(i) for i in first)}"
+        )
+
+
 def gather_windows(trace: Trace, t0s, length: int):
     """Batched :meth:`Trace.window`: gather K windows of ``length`` slots in
     one fancy-indexing pass — ``(prices (K, length), avail (K, length))``.
@@ -60,6 +76,8 @@ def gather_windows(trace: Trace, t0s, length: int):
             f"windows of length {length} at t0 in [{t0s.min()}, {t0s.max()}] "
             f"out of bounds for trace of length {len(trace)}"
         )
+    require_finite("trace.prices", trace.prices)
+    require_finite("trace.avail", trace.avail)
     idx = t0s[:, None] + np.arange(length)[None, :]
     return trace.prices[idx], trace.avail[idx]
 

@@ -22,7 +22,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.market import Trace
+from repro.core.market import Trace, require_finite
 
 NOISE_KINDS = (
     "magdep_uniform",
@@ -80,6 +80,9 @@ def noisy_matrix_batch(prices: np.ndarray, avail: np.ndarray, kind: str,
     assert kind in NOISE_KINDS, kind
     prices = np.asarray(prices, float)
     avail = np.asarray(avail, float)
+    require_finite("prices", prices)
+    require_finite("avail", avail)
+    require_finite("level", np.asarray(level, float))
     seeds = np.asarray(seeds)
     out = true_future_batch(prices, avail, horizon)
     K = out.shape[0]

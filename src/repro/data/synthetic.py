@@ -101,6 +101,51 @@ def market_regime_batch(
     return prices.astype(np.float64), avail
 
 
+def market_regime_fault_batch(
+    seeds,
+    fault_seeds,
+    days: float = 10.0,
+    slots_per_day: int = 48,
+    *,
+    n_storms=2,
+    storm_len: int = 4,
+    spike_mag: float = 1.0,
+    pred_fault="stale",
+    **regime_kw,
+):
+    """:func:`market_regime_batch` with a per-row seeded preemption-storm
+    schedule on top — faults become one more scenario-grid axis.
+
+    ``fault_seeds`` is (R,) like ``seeds``; ``n_storms`` broadcasts to
+    (R,) so a grid can sweep fault *intensity* across rows (0 storms = the
+    clean regime, bitwise-equal to :func:`market_regime_batch`). Returns
+    ``(prices (R, T), avail (R, T), schedules)`` where ``schedules`` is
+    the R-tuple of per-row ``FaultSpec`` tuples — feed each row's schedule
+    to :func:`repro.chaos.inject` to fault that row's forecast stack the
+    same way.
+    """
+    from repro.chaos import inject_market, storm_schedule
+
+    prices, avail = market_regime_batch(
+        seeds, days, slots_per_day, **regime_kw)
+    fault_seeds = np.asarray(fault_seeds)
+    R, T = prices.shape
+    if fault_seeds.shape != (R,):
+        raise ValueError(
+            f"fault_seeds must be shape ({R},), got {fault_seeds.shape}")
+    ns = np.broadcast_to(np.asarray(n_storms, int), (R,))
+    schedules = tuple(
+        storm_schedule(int(fault_seeds[r]), T, n_storms=int(ns[r]),
+                       storm_len=storm_len, spike_mag=spike_mag,
+                       pred_fault=pred_fault)
+        for r in range(R)
+    )
+    for r, sched in enumerate(schedules):
+        if sched:
+            prices[r], avail[r] = inject_market(prices[r], avail[r], sched)
+    return prices, avail, schedules
+
+
 class MarkovLM:
     """Order-1 Markov chain over the vocab with a few latent 'topics'."""
 

@@ -20,6 +20,7 @@ Host side:
 * :mod:`repro.obs.report` — renders a ledger as a textual dashboard.
 """
 from repro.obs.frame import (
+    FALLBACK_KEYS,
     FLEET_KEYS,
     SLOT_KEYS,
     TEL_PREFIX,
@@ -30,6 +31,7 @@ from repro.obs.frame import (
 from repro.obs.ledger import (
     SCHEMA_VERSION,
     cost_reconciliation,
+    fallback_events,
     fleet_ledger,
     grid_ledger,
     pool_ledger,
@@ -41,6 +43,8 @@ __all__ = [
     "TEL_PREFIX",
     "SLOT_KEYS",
     "FLEET_KEYS",
+    "FALLBACK_KEYS",
+    "fallback_events",
     "TelemetryFrame",
     "frame_from_out",
     "has_telemetry",

@@ -33,6 +33,16 @@ Fleet runs add the waterfall series (``None`` for pool runs):
                 (-1 when the job demanded nothing that slot)
 ``starved``     bool, live, demanded, and granted strictly less
 ==============  ============================================================
+
+Runs with the prediction-failure monitor armed (``fallback=`` a
+``repro.chaos.FallbackConfig``) add two more series (``None`` otherwise;
+cheap lanes, which carry no monitor, report all-zero rows):
+
+==================  ========================================================
+``fallback_active`` bool, the lane ran the prediction-free AHANP rule this
+                    slot (its forecast-error EWMA exceeded the threshold)
+``pred_err``        f32, that realized-forecast-error EWMA after the slot
+==================  ========================================================
 """
 from __future__ import annotations
 
@@ -48,6 +58,8 @@ SLOT_KEYS = ("tel_spot_cost", "tel_od_cost", "tel_progress", "tel_active",
 # waterfall series only the fleet engine emits
 FLEET_KEYS = ("tel_demand", "tel_grant", "tel_slack", "tel_rank",
               "tel_starved")
+# prediction-failure monitor series, only when fallback= is armed
+FALLBACK_KEYS = ("tel_fallback", "tel_pred_err")
 
 
 class TelemetryFrame(NamedTuple):
@@ -66,6 +78,8 @@ class TelemetryFrame(NamedTuple):
     slack: Optional[np.ndarray] = None
     waterfall_rank: Optional[np.ndarray] = None
     starved: Optional[np.ndarray] = None
+    fallback_active: Optional[np.ndarray] = None
+    pred_err: Optional[np.ndarray] = None
 
 
 def has_telemetry(out: dict) -> bool:
@@ -96,4 +110,6 @@ def frame_from_out(out: dict) -> TelemetryFrame:
         slack=a("tel_slack") if "tel_slack" in out else None,
         waterfall_rank=a("tel_rank") if "tel_rank" in out else None,
         starved=a("tel_starved") if "tel_starved" in out else None,
+        fallback_active=a("tel_fallback") if "tel_fallback" in out else None,
+        pred_err=a("tel_pred_err") if "tel_pred_err" in out else None,
     )

@@ -102,6 +102,40 @@ def _event_aggregates(fr: _frame.TelemetryFrame, axis) -> dict:
     }
 
 
+def fallback_events(active) -> dict:
+    """Trigger/recovery accounting over a ``tel_fallback`` series (any
+    leading axes, trailing time axis). A *trigger* is the monitor arming
+    (rising edge, plus rows already armed at slot 0); a *recovery* is the
+    monitor standing down (falling edge). The reconciliation invariant —
+    every trigger is matched by a recovery or is still open at the end —
+    is carried as ``events_reconciled`` so a consumer can check it held."""
+    act = np.asarray(active, bool)
+    if act.size == 0:
+        return {"triggers": 0, "recoveries": 0, "open_at_end": 0,
+                "active_fraction": 0.0, "events_reconciled": True}
+    d = np.diff(act.astype(np.int8), axis=-1)
+    triggers = int((d > 0).sum() + act[..., 0].sum())
+    recoveries = int((d < 0).sum())
+    open_at_end = int(act[..., -1].sum())
+    return {
+        "triggers": triggers,
+        "recoveries": recoveries,
+        "open_at_end": open_at_end,
+        "active_fraction": float(act.mean()),
+        "events_reconciled": triggers == recoveries + open_at_end,
+    }
+
+
+def _fallback_block(fr: _frame.TelemetryFrame) -> Optional[dict]:
+    if fr.fallback_active is None:
+        return None
+    block = fallback_events(fr.fallback_active)
+    block["pred_err_max"] = float(np.asarray(fr.pred_err).max())
+    block["pred_err_final_mean"] = float(
+        np.asarray(fr.pred_err, np.float64)[..., -1].mean())
+    return block
+
+
 def pool_ledger(out: dict, jobs, tput, lane_names: Optional[Sequence[str]] =
                 None) -> dict:
     """Ledger for a ``simulate_pool_jobs[_sharded]`` collect run.
@@ -125,7 +159,7 @@ def pool_ledger(out: dict, jobs, tput, lane_names: Optional[Sequence[str]] =
     }
     if lane_names is not None:
         per_lane["name"] = list(lane_names)
-    return {
+    ledger = {
         "schema_version": SCHEMA_VERSION,
         "kind": "pool",
         "shape": {"n_jobs": n_jobs, "n_lanes": n_lanes,
@@ -133,6 +167,10 @@ def pool_ledger(out: dict, jobs, tput, lane_names: Optional[Sequence[str]] =
         "cost_reconciliation": cost_reconciliation(out, jobs, tput),
         "per_lane": per_lane,
     }
+    fb = _fallback_block(fr)
+    if fb is not None:
+        ledger["fallback"] = fb
+    return ledger
 
 
 def fleet_ledger(out: dict, jobs, tput, supply=None) -> dict:
@@ -175,6 +213,9 @@ def fleet_ledger(out: dict, jobs, tput, supply=None) -> dict:
     if supply is not None:
         over = grant.sum(axis=0) - np.asarray(supply, np.int64)
         ledger["waterfall"]["max_oversubscription"] = int(over.max())
+    fb = _fallback_block(fr)
+    if fb is not None:
+        ledger["fallback"] = fb
     return ledger
 
 

@@ -78,12 +78,14 @@ class ElasticTrainer:
         ckpt_dir: str = "/tmp/repro_elastic",
         bandwidth_bps: float = 800e6,
         seed: int = 0,
+        ckpt_retries: int = 2,
     ):
         self.cfg, self.tcfg, self.job, self.tput = cfg, tcfg, job, tput
         self.policy, self.trace, self.pred = policy, trace, pred_matrix
         self.steps_per_unit = steps_per_unit
         self.ckpt_dir = ckpt_dir
         self.bandwidth_bps = bandwidth_bps
+        self.ckpt_retries = ckpt_retries
 
         rng = jax.random.PRNGKey(tcfg.seed)
         self.params, _ = tf.init_model(rng, cfg)
@@ -103,8 +105,9 @@ class ElasticTrainer:
 
         lora, merge = partition_by_path(self.params, is_lora_path)
         state = {"lora": lora, "opt": self.opt, "step": self.global_step}
-        nbytes = save(path, state, meta={"arch": self.cfg.name})
-        restored, meta = restore(path, state)
+        nbytes = save(path, state, meta={"arch": self.cfg.name},
+                      retries=self.ckpt_retries)
+        restored, meta = restore(path, state, retries=self.ckpt_retries)
         # re-adopt the restored state (exercises the real path)
         self.params = merge(restored["lora"])
         self.opt = restored["opt"]

@@ -30,7 +30,10 @@ engine: core.fleet at the 1000-job scale must be no slower than the
 MultiJobScheduler host loop AND must reproduce every per-job utility the
 numpy oracle computes (fleet_sim_utility_match == 1.0). Since the
 scenario-grid PR it also pins the per-regime winner map of a 16-regime
-shrunken grid — behavioral, not timing, so the pins are exact.
+shrunken grid — behavioral, not timing, so the pins are exact. Since the
+chaos PR it pins the prediction-failure fallback's value under the forced
+storm regime: fallback-on must beat fallback-off on the AHAP lanes and the
+trigger/recovery accounting must reconcile.
 """
 import json
 import os
@@ -272,3 +275,45 @@ def test_fleet_engine_not_slower_than_host_loop_4dev():
         "per-job utility parity with the numpy oracle broke:\n"
         f"rows: { {n: r['derived'] for n, r in rows.items()} }"
     )
+
+
+def test_chaos_fallback_beats_pure_ahap_under_storms():
+    """The chaos guard (robustness PR): under the forced preemption-storm +
+    stale-predictor regime of benchmarks/chaos_sweep.py, the AHAP lanes
+    with the online prediction-failure fallback armed must beat the same
+    lanes running pure AHAP on the bad forecasts (chaos_gain > 0), the
+    fallback must never fire in the clean intensity-0 case, and the
+    trigger/recovery accounting must reconcile. Behavioral, not timing —
+    the utilities are bitwise-deterministic under tier-1 conditions.
+    The workload knobs always win over caller env so the pin refers to one
+    fixed regime (CHAOS_JOBS shrunken from the bench's 64 for speed; the
+    gain sign is stable across job counts for this seed set)."""
+    payload = _run_pool_bench(
+        defaults={},
+        force={
+            "CHAOS_JOBS": "16",
+            "CHAOS_REPEAT": "1",
+            "CHAOS_INTENSITY": "0,2",
+            "CHAOS_THRESHOLD": "0.5",
+            "CHAOS_STORM_LEN": "4",
+            "CHAOS_SPIKE": "2.5",
+            "CHAOS_LAM": "0.5",
+        },
+        only="chaos_sweep",
+    )
+    rows = {r["name"]: r for r in payload["rows"]}
+    assert "chaos_gain__s2" in rows, sorted(rows)
+    gain = rows["chaos_gain__s2"]["derived"]
+    assert gain > 0.0, (
+        f"fallback-on no longer beats fallback-off under the forced storm "
+        f"regime: gain {gain:.3f} <= 0\n"
+        f"rows: { {n: r['derived'] for n, r in rows.items()} }"
+    )
+    # clean market: the monitor must never fire (threshold discipline)
+    assert rows["chaos_triggers__s0"]["derived"] == 0.0
+    assert rows["chaos_fallback_frac__s0"]["derived"] == 0.0
+    # storms: it fires, and every trigger is matched by a recovery or is
+    # still open at the end of the window
+    assert rows["chaos_triggers__s2"]["derived"] > 0.0
+    assert rows["chaos_events_reconciled__s2"]["derived"] == 1.0
+    assert rows["chaos_events_reconciled__s0"]["derived"] == 1.0

@@ -1,7 +1,11 @@
 """benchmarks/run.py CLI: --only resolution must error on unknown names
 instead of silently skipping typos (a misspelled ``--only pool_sim,felt_sim``
-used to drop the fleet bench without a word)."""
+used to drop the fleet bench without a word), and a crashing benchmark
+module must degrade to an error row + nonzero exit instead of taking the
+whole sweep down."""
+import json
 import sys
+import types
 
 import pytest
 
@@ -40,3 +44,37 @@ def test_main_errors_on_unknown_name(monkeypatch):
         main()
     assert "felt_sim" in str(exc_info.value)
     assert "pool_sim_bench" in str(exc_info.value)  # lists known modules
+
+
+def test_failing_module_degrades_to_error_row(monkeypatch, tmp_path, capsys):
+    """One crashing module: the sweep keeps going, the --json payload
+    carries an ``{"error": ...}`` row naming the exception, the healthy
+    module's rows survive, and the exit code is 1."""
+    import benchmarks.run as run_mod
+
+    ok = types.ModuleType("benchmarks.fake_ok")
+    ok.run = lambda: [("ok_row", 1.0, 2.0)]
+    boom = types.ModuleType("benchmarks.fake_boom")
+
+    def _boom():
+        raise RuntimeError("synthetic benchmark failure")
+
+    boom.run = _boom
+    monkeypatch.setitem(sys.modules, "benchmarks.fake_ok", ok)
+    monkeypatch.setitem(sys.modules, "benchmarks.fake_boom", boom)
+    monkeypatch.setattr(run_mod, "MODULES", ["fake_ok", "fake_boom"])
+    out_json = tmp_path / "bench.json"
+    monkeypatch.setattr(
+        sys, "argv", ["benchmarks.run", "--json", str(out_json)])
+    with pytest.raises(SystemExit) as exc_info:
+        main()
+    assert exc_info.value.code == 1
+
+    payload = json.loads(out_json.read_text())
+    by_module = {r["module"]: r for r in payload["rows"]}
+    assert by_module["fake_ok"]["name"] == "ok_row"
+    err_row = by_module["fake_boom"]
+    assert err_row["name"] == "fake_boom__FAILED"
+    assert err_row["derived"] is None
+    assert err_row["error"] == "RuntimeError: synthetic benchmark failure"
+    assert "FAILED" in capsys.readouterr().out

@@ -1,0 +1,401 @@
+"""Chaos harness pins: fault-injection invariants, the prediction-failure
+fallback's static-flag discipline, and the trigger/recovery telemetry.
+
+Three families:
+
+* **Fault transforms are safe.** Hypothesis properties over random fault
+  schedules: injected traces keep ``avail >= 0`` / ``prices >= 0`` /
+  dtypes, faults are the identity outside their windows, an empty
+  schedule is a bitwise no-op, and forecast faults never touch the
+  observed-present column.
+
+* **fallback=None is the shipped program.** Same bitwise pin as
+  ``collect=False`` (the 4-device sharded twins are pinned in
+  tests/test_sharded_pool.py and tests/test_fleet.py subprocesses); an
+  armed monitor whose threshold is never crossed also reproduces the
+  baseline decisions exactly.
+
+* **The monitor works.** Under an injected preemption storm with stale
+  forecasts the lanes trigger (``tel_fallback`` goes high, decisions
+  change), the collect pass rides bitwise on the non-collect one, and
+  the ledger's trigger/recovery accounting reconciles.
+"""
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, st
+
+from benchmarks.common import PAPER_TPUT, job_stream_arrays, paper_market
+from repro.chaos import (
+    FAULT_KINDS,
+    FallbackConfig,
+    FaultSpec,
+    blackout_schedule,
+    inject,
+    inject_forecasts,
+    inject_market,
+    storm_schedule,
+    window_mask,
+)
+from repro.core import engine, fast_sim, fleet
+from repro.core.market import require_finite, vast_like_trace
+from repro.core.policy_pool import (
+    KIND_AHAP,
+    baseline_specs,
+    paper_pool,
+    rand_deadline_pool,
+    specs_to_arrays,
+)
+from repro.core.predictor import NoisyPredictor
+from repro.obs import FALLBACK_KEYS, SLOT_KEYS, fallback_events, pool_ledger
+
+TPUT = PAPER_TPUT
+D = 10
+
+
+def _pool_setup(n_jobs=4, seed=3, fault_seed=None):
+    """Small pool + per-job windows; ``fault_seed`` injects a storm+stale
+    schedule over the windows."""
+    pool = (paper_pool(omegas=(2,), sigmas=(0.5,))
+            + rand_deadline_pool((0.4,)) + baseline_specs())
+    arrs = specs_to_arrays(pool)
+    rng = np.random.default_rng(seed)
+    jobs = job_stream_arrays(rng, n_jobs, deadline=D, workload_scale=1.4)
+    trace = paper_market(11, days=4, avail_mean=9.0, mean_price=0.4,
+                         price_sigma=0.3)
+    t0s = np.random.default_rng(seed + 1).integers(
+        0, len(trace) - D - 1, n_jobs)
+    prices, avail, preds = engine.prepare_noisy_inputs(
+        trace, t0s, D, "magdep_uniform", 0.1, np.arange(n_jobs))
+    if fault_seed is not None:
+        sched = storm_schedule(fault_seed, D, n_storms=2, storm_len=4,
+                               pred_fault="stale", spike_mag=2.5)
+        prices, avail, preds = inject(prices, avail, preds, sched)
+    return arrs, jobs, prices, avail, preds
+
+
+def _fleet_setup(J=8, T=24, seed=7, fault_seed=None):
+    pool = (paper_pool(omegas=(2,), sigmas=(0.5,))
+            + rand_deadline_pool((0.4,)) + baseline_specs())
+    arrs = specs_to_arrays(pool)
+    rng = np.random.default_rng(seed)
+    tr = vast_like_trace(seed=5, days=2).window(0, T + 1)
+    prices = tr.prices[:T].astype(np.float32)
+    avail = tr.avail[:T].astype(np.int64)
+    pred = NoisyPredictor(tr, "fixed_uniform", 0.2, seed=3).matrix(
+        fast_sim.W1MAX - 1)[:T].astype(np.float32)
+    if fault_seed is not None:
+        sched = storm_schedule(fault_seed, T, n_storms=2, storm_len=5,
+                               pred_fault="stale")
+        prices, avail, pred = inject(prices, avail, pred, sched)
+    jobs = job_stream_arrays(rng, J, deadline=D)
+    arrivals = rng.integers(0, 8, size=J)
+    idx = rng.integers(0, len(pool), size=J)
+    rows = {k: np.asarray(arrs[k])[idx]
+            for k in ("kind", "omega", "v", "sigma", "rho", "cfrac")}
+    return jobs, arrivals, rows, prices, avail, pred
+
+
+# ---------------------------------------------------------------------------
+# fault transforms
+# ---------------------------------------------------------------------------
+
+fault_strategy = st.builds(
+    FaultSpec,
+    kind=st.sampled_from(FAULT_KINDS),
+    start=st.integers(0, 30),
+    length=st.integers(0, 12),
+    magnitude=st.floats(0.0, 5.0),
+    region=st.just(-1),
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), f1=fault_strategy, f2=fault_strategy)
+def test_market_fault_invariants(seed, f1, f2):
+    rng = np.random.default_rng(seed)
+    prices = rng.uniform(0.05, 2.0, (3, 24))
+    avail = rng.integers(0, 16, (3, 24))
+    p, a = inject_market(prices, avail, (f1, f2))
+    assert p.dtype == prices.dtype and a.dtype == avail.dtype
+    assert (p >= 0).all() and (a >= 0).all()
+    # identity outside the union of windows
+    m = np.zeros(24, bool)
+    for f in (f1, f2):
+        if f.kind in ("preempt_storm", "blackout", "price_spike"):
+            m |= window_mask(24, f)
+    np.testing.assert_array_equal(p[:, ~m], prices[:, ~m])
+    np.testing.assert_array_equal(a[:, ~m], avail[:, ~m])
+    # inputs untouched
+    assert (avail >= 0).all() and prices.min() >= 0.05
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), f=fault_strategy)
+def test_forecast_fault_invariants(seed, f):
+    rng = np.random.default_rng(seed)
+    preds = rng.uniform(0.0, 8.0, (2, 24, 6, 2)).astype(np.float32)
+    out = inject_forecasts(preds, (f,))
+    assert out.dtype == preds.dtype
+    # the observed-present column is never a predictor's to corrupt
+    np.testing.assert_array_equal(out[..., 0, :], preds[..., 0, :])
+    m = window_mask(24, f) if f.kind.startswith("pred_") else np.zeros(24, bool)
+    np.testing.assert_array_equal(out[:, ~m], preds[:, ~m])
+    if f.kind == "pred_outage" and m.any():
+        assert (out[:, m, 1:, :] == 0).all()
+    if f.kind == "pred_stale" and m.any():
+        t_freeze = max(min(f.start, 24) - 1, 0)
+        for t in np.flatnonzero(m):
+            np.testing.assert_array_equal(out[:, t, 1:, :],
+                                          preds[:, t_freeze, 1:, :])
+
+
+def test_empty_schedule_is_identity():
+    rng = np.random.default_rng(0)
+    prices = rng.uniform(0.1, 1.0, (4, 16)).astype(np.float32)
+    avail = rng.integers(0, 16, (4, 16))
+    preds = rng.uniform(0, 8, (4, 16, 6, 2)).astype(np.float32)
+    p, a, pr = inject(prices, avail, preds, ())
+    np.testing.assert_array_equal(p, prices)
+    np.testing.assert_array_equal(a, avail)
+    # inject re-syncs the present column even with no faults: already true
+    np.testing.assert_array_equal(pr[..., 1:, :], preds[..., 1:, :])
+    assert storm_schedule(0, 48, n_storms=0) == ()
+
+
+def test_storm_and_spike_semantics():
+    prices = np.full((2, 20), 0.5)
+    avail = np.full((2, 20), 7)
+    sched = (FaultSpec("preempt_storm", 4, 3),
+             FaultSpec("price_spike", 10, 2, magnitude=3.0))
+    p, a = inject_market(prices, avail, sched)
+    assert (a[:, 4:7] == 0).all() and (a[:, :4] == 7).all()
+    np.testing.assert_allclose(p[:, 10:12], 1.5)
+    np.testing.assert_allclose(p[:, 12:], 0.5)
+
+
+def test_regional_blackout():
+    avail = np.full((3, 20), 5)          # (R=3 regions, T)
+    prices = np.full(20, 0.5)
+    p, a = inject_market(prices, avail,
+                         (FaultSpec("blackout", 2, 4, region=1),))
+    assert (a[1, 2:6] == 0).all()
+    assert (a[0] == 5).all() and (a[2] == 5).all()
+    with pytest.raises(ValueError, match="region"):
+        inject_market(np.ones(8), np.ones(8),
+                      (FaultSpec("blackout", 0, 2, region=1),))
+    sched = blackout_schedule(3, 40, 4, n_events=2)
+    assert len(sched) == 2 and all(0 <= f.region < 4 for f in sched)
+    assert sched == blackout_schedule(3, 40, 4, n_events=2)
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("meteor", 0, 1)
+    with pytest.raises(ValueError, match=">= 0"):
+        FaultSpec("preempt_storm", -1, 1)
+    with pytest.raises(ValueError, match="magnitude"):
+        FaultSpec("price_spike", 0, 1, magnitude=-2.0)
+    with pytest.raises(ValueError, match="pred_fault"):
+        storm_schedule(0, 48, pred_fault="bogus")
+    sched = storm_schedule(7, 48, n_storms=3, storm_len=4, spike_mag=2.0)
+    assert sched == storm_schedule(7, 48, n_storms=3, storm_len=4,
+                                   spike_mag=2.0)
+    storms = [f for f in sched if f.kind == "preempt_storm"]
+    assert len(storms) == 3
+    for f in storms:                     # storms stay inside the horizon
+        assert 0 <= f.start and f.start + f.length <= 48
+
+
+def test_fallback_config_validation():
+    with pytest.raises(ValueError, match="threshold"):
+        FallbackConfig(threshold=0.0)
+    with pytest.raises(ValueError, match="lam"):
+        FallbackConfig(lam=1.5)
+    with pytest.raises(ValueError, match="price_weight"):
+        FallbackConfig(price_weight=-0.1)
+    assert hash(FallbackConfig()) == hash(FallbackConfig())
+
+
+def test_market_regime_fault_batch():
+    from repro.data.synthetic import (market_regime_batch,
+                                      market_regime_fault_batch)
+
+    seeds = np.arange(3)
+    fs = np.arange(3) + 100
+    p0, a0 = market_regime_batch(seeds, days=1.0)
+    p, a, sched = market_regime_fault_batch(seeds, fs, days=1.0,
+                                            n_storms=[0, 1, 2])
+    assert len(sched) == 3 and sched[0] == ()
+    np.testing.assert_array_equal(p[0], p0[0])   # 0 storms = clean regime
+    np.testing.assert_array_equal(a[0], a0[0])
+    for r in (1, 2):
+        storms = [f for f in sched[r] if f.kind == "preempt_storm"]
+        assert len(storms) == r
+        for f in storms:
+            assert (a[r][window_mask(p.shape[1], f)] == 0).all()
+    with pytest.raises(ValueError, match="fault_seeds"):
+        market_regime_fault_batch(seeds, fs[:2], days=1.0)
+
+
+# ---------------------------------------------------------------------------
+# fallback=None is the shipped program; armed-but-quiet reproduces it
+# ---------------------------------------------------------------------------
+
+def test_pool_fallback_none_bitwise():
+    arrs, jobs, prices, avail, preds = _pool_setup()
+    base = fast_sim.simulate_pool_jobs(arrs, jobs, TPUT, prices, avail, preds)
+    fb = fast_sim.simulate_pool_jobs(arrs, jobs, TPUT, prices, avail, preds,
+                                     fallback=None)
+    assert set(fb) == set(base)
+    for k in base:
+        np.testing.assert_array_equal(np.asarray(base[k]), np.asarray(fb[k]),
+                                      err_msg=k)
+
+
+def test_pool_fallback_quiet_monitor_matches_baseline():
+    # threshold far above any realizable EWMA: the monitor is armed but
+    # never fires, so every decision must equal the shipped program's
+    arrs, jobs, prices, avail, preds = _pool_setup(fault_seed=0)
+    base = fast_sim.simulate_pool_jobs(arrs, jobs, TPUT, prices, avail, preds)
+    fb = fast_sim.simulate_pool_jobs(arrs, jobs, TPUT, prices, avail, preds,
+                                     fallback=FallbackConfig(threshold=1e9))
+    for k in base:
+        np.testing.assert_array_equal(np.asarray(base[k]), np.asarray(fb[k]),
+                                      err_msg=k)
+
+
+def test_pool_fallback_triggers_under_storm():
+    arrs, jobs, prices, avail, preds = _pool_setup(fault_seed=0)
+    kind = np.asarray(arrs["kind"])
+    base = fast_sim.simulate_pool_jobs(arrs, jobs, TPUT, prices, avail, preds)
+    cfg = FallbackConfig(threshold=0.5, lam=0.5)
+    on = fast_sim.simulate_pool_jobs(arrs, jobs, TPUT, prices, avail, preds,
+                                     collect=True, fallback=cfg)
+    assert set(on) - set(base) == set(SLOT_KEYS) | set(FALLBACK_KEYS)
+    fb_series = np.asarray(on["tel_fallback"])          # (J, P, T)
+    err = np.asarray(on["tel_pred_err"])
+    assert fb_series[:, kind == KIND_AHAP].any()
+    # cheap lanes carry no monitor: all-zero placeholder rows
+    assert not fb_series[:, kind != KIND_AHAP].any()
+    assert not err[:, kind != KIND_AHAP].any()
+    assert (err >= 0).all()
+    # the override actually changes decisions somewhere
+    assert not np.array_equal(np.asarray(on["utility"]),
+                              np.asarray(base["utility"]))
+    # ... and only on AHAP lanes
+    cheap = kind != KIND_AHAP
+    np.testing.assert_array_equal(np.asarray(on["utility"])[:, cheap],
+                                  np.asarray(base["utility"])[:, cheap])
+
+
+def test_pool_fallback_collect_parity():
+    # collect only ADDS keys to a fallback run: shared keys are bitwise
+    arrs, jobs, prices, avail, preds = _pool_setup(fault_seed=0)
+    cfg = FallbackConfig(threshold=0.5, lam=0.5)
+    plain = fast_sim.simulate_pool_jobs(arrs, jobs, TPUT, prices, avail,
+                                        preds, fallback=cfg)
+    tel = fast_sim.simulate_pool_jobs(arrs, jobs, TPUT, prices, avail, preds,
+                                      collect=True, fallback=cfg)
+    for k in plain:
+        np.testing.assert_array_equal(np.asarray(plain[k]),
+                                      np.asarray(tel[k]), err_msg=k)
+
+
+def test_fleet_fallback_none_bitwise_and_trigger():
+    jobs, arrivals, rows, prices, avail, pred = _fleet_setup()
+    base = fleet.simulate_fleet(rows, jobs, arrivals, TPUT, prices, avail,
+                                pred)
+    none = fleet.simulate_fleet(rows, jobs, arrivals, TPUT, prices, avail,
+                                pred, fallback=None)
+    for k in base:
+        np.testing.assert_array_equal(np.asarray(base[k]),
+                                      np.asarray(none[k]), err_msg=k)
+    quiet = fleet.simulate_fleet(rows, jobs, arrivals, TPUT, prices, avail,
+                                 pred, fallback=FallbackConfig(threshold=1e9))
+    for k in base:
+        np.testing.assert_array_equal(np.asarray(base[k]),
+                                      np.asarray(quiet[k]), err_msg=k)
+
+    jobs, arrivals, rows, prices, avail, pred = _fleet_setup(fault_seed=1)
+    cfg = FallbackConfig(threshold=0.5, lam=0.5)
+    on = fleet.simulate_fleet(rows, jobs, arrivals, TPUT, prices, avail,
+                              pred, collect=True, fallback=cfg)
+    assert set(FALLBACK_KEYS) <= set(on)
+    fb_series = np.asarray(on["tel_fallback"])          # (J, T)
+    kind_j = np.asarray(rows["kind"])
+    assert fb_series[kind_j == KIND_AHAP].any()
+    assert not fb_series[kind_j != KIND_AHAP].any()
+    # collect parity with the monitor armed
+    plain = fleet.simulate_fleet(rows, jobs, arrivals, TPUT, prices, avail,
+                                 pred, fallback=cfg)
+    for k in plain:
+        np.testing.assert_array_equal(np.asarray(plain[k]),
+                                      np.asarray(on[k]), err_msg=k)
+
+
+def test_engine_fallback_roundtrip_and_ledger():
+    arrs, jobs, prices, avail, preds = _pool_setup(fault_seed=0)
+    cfg = FallbackConfig(threshold=0.5, lam=0.5)
+    off = engine.simulate_and_select(arrs, jobs, TPUT, prices, avail, preds,
+                                     sharded=False)
+    on = engine.simulate_and_select(arrs, jobs, TPUT, prices, avail, preds,
+                                    sharded=False, fallback=cfg,
+                                    collect=True)
+    assert not np.array_equal(off.mean_utility, on.mean_utility)
+    led = pool_ledger(on.sim_out, jobs, TPUT)
+    fb = led["fallback"]
+    assert fb["triggers"] > 0
+    assert fb["events_reconciled"]
+    assert 0.0 < fb["active_fraction"] < 1.0
+    assert fb["pred_err_max"] > 0.5
+    # off-run ledger has no fallback block
+    off_tel = engine.simulate_and_select(arrs, jobs, TPUT, prices, avail,
+                                         preds, sharded=False, collect=True)
+    assert "fallback" not in pool_ledger(off_tel.sim_out, jobs, TPUT)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_fallback_events_reconciliation(seed):
+    rng = np.random.default_rng(seed)
+    act = rng.random((3, 5, 16)) < 0.4
+    ev = fallback_events(act)
+    assert ev["events_reconciled"]
+    assert ev["triggers"] >= ev["open_at_end"]
+    assert 0.0 <= ev["active_fraction"] <= 1.0
+    # hand-checked edge cases
+    assert fallback_events(np.zeros((2, 4), bool))["triggers"] == 0
+    always = fallback_events(np.ones((2, 4), bool))
+    assert always["triggers"] == 2 and always["open_at_end"] == 2
+    assert always["recoveries"] == 0 and always["events_reconciled"]
+
+
+# ---------------------------------------------------------------------------
+# input validation
+# ---------------------------------------------------------------------------
+
+def test_require_finite():
+    require_finite("ok", np.ones(4))
+    require_finite("ints are exempt", np.array([1, 2]))
+    with pytest.raises(ValueError, match=r"bad.*2 non-finite.*index \(1,\)"):
+        require_finite("bad", np.array([0.0, np.nan, np.inf]))
+
+
+def test_gather_windows_rejects_nan():
+    trace = paper_market(11, days=1)
+    trace.prices[5] = np.nan
+    with pytest.raises(ValueError, match="trace.prices"):
+        engine.prepare_noisy_inputs(trace, np.zeros(2, np.int64), D,
+                                    "magdep_uniform", 0.1, np.arange(2))
+
+
+def test_prepare_noisy_inputs_rejects_nonfinite_level():
+    trace = paper_market(11, days=1)
+    with pytest.raises(ValueError, match="level"):
+        engine.prepare_noisy_inputs(trace, np.zeros(2, np.int64), D,
+                                    "magdep_uniform", np.nan, np.arange(2))
+    with pytest.raises(ValueError, match="avail"):
+        from repro.core.predictor import noisy_matrix_batch
+        noisy_matrix_batch(np.ones((2, 8)),
+                           np.array([[1.0, np.inf] + [1.0] * 6] * 2),
+                           "magdep_uniform", 0.1, np.arange(2), 5)

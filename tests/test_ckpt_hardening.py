@@ -1,0 +1,169 @@
+"""Checkpoint hardening pins: CRC envelope, atomic writes, bounded
+retries. The failure model is the one the paper's switching cost lives in
+— preemption storms hit the checkpoint path exactly when the scheduler is
+reconfiguring — so a torn/bit-flipped file must be *detected*
+(CheckpointCorruptError), a flaky filesystem must be *ridden out*
+(bounded OSError retries), and a pre-envelope blob must still restore
+(legacy fallback)."""
+import os
+import zlib
+
+import msgpack
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointCorruptError,
+    restore,
+    save,
+    serialize,
+)
+from repro.checkpoint import ckpt as _ckpt
+
+
+def _tree():
+    return {
+        "w": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "step": np.int64(7),
+    }
+
+
+def _assert_tree_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a["w"]), np.asarray(b["w"]))
+    assert int(a["step"]) == int(b["step"])
+
+
+def test_roundtrip_with_meta(tmp_path):
+    path = str(tmp_path / "ck.msgpack")
+    tree = _tree()
+    nbytes = save(path, tree, meta={"arch": "t"})
+    assert nbytes == os.path.getsize(path)
+    out, meta = restore(path, tree)
+    _assert_tree_equal(out, tree)
+    assert meta == {"arch": "t"}
+    assert not [p for p in os.listdir(tmp_path) if p.endswith(".tmp")]
+
+
+def test_bitflip_raises_corrupt(tmp_path):
+    path = str(tmp_path / "ck.msgpack")
+    save(path, _tree())
+    blob = bytearray(open(path, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    open(path, "wb").write(bytes(blob))
+    with pytest.raises(CheckpointCorruptError):
+        restore(path, _tree())
+
+
+def test_truncation_raises_corrupt(tmp_path):
+    path = str(tmp_path / "ck.msgpack")
+    save(path, _tree())
+    blob = open(path, "rb").read()
+    open(path, "wb").write(blob[: len(blob) - 8])
+    with pytest.raises(CheckpointCorruptError):
+        restore(path, _tree())
+
+
+def test_crc_mismatch_message(tmp_path):
+    # decompresses fine, envelope intact, CRC wrong: the envelope's case
+    inner = msgpack.packb(
+        {"meta": "{}", "leaves": []}, use_bin_type=True)
+    raw = msgpack.packb(
+        {"body": inner, "crc": zlib.crc32(inner) ^ 1}, use_bin_type=True)
+    path = str(tmp_path / "ck.msgpack")
+    open(path, "wb").write(zlib.compress(raw))
+    with pytest.raises(CheckpointCorruptError, match="checksum mismatch"):
+        restore(path, {})
+
+
+def test_legacy_blob_without_envelope_restores(tmp_path):
+    # a blob written before the CRC envelope: inner payload compressed
+    # directly, no {"body", "crc"} wrapper
+    tree = _tree()
+    leaves, _ = __import__("jax").tree_util.tree_flatten(tree)
+    payload = {
+        "meta": "{}",
+        "leaves": [_ckpt._pack_leaf(l) for l in leaves],
+    }
+    blob = zlib.compress(msgpack.packb(payload, use_bin_type=True), 6)
+    path = str(tmp_path / "legacy.msgpack")
+    open(path, "wb").write(blob)
+    out, meta = restore(path, tree)
+    _assert_tree_equal(out, tree)
+    assert meta == {}
+
+
+class _Flaky:
+    """Raise OSError the first ``n_fail`` calls, then delegate."""
+
+    def __init__(self, n_fail, fn):
+        self.n_fail, self.fn, self.calls = n_fail, fn, 0
+
+    def __call__(self, *a, **kw):
+        self.calls += 1
+        if self.calls <= self.n_fail:
+            raise OSError(f"transient #{self.calls}")
+        return self.fn(*a, **kw)
+
+
+def test_save_retries_transient_oserror(tmp_path, monkeypatch):
+    path = str(tmp_path / "ck.msgpack")
+    flaky = _Flaky(2, _ckpt._write_bytes_atomic)
+    monkeypatch.setattr(_ckpt, "_write_bytes_atomic", flaky)
+    save(path, _tree(), retries=2, backoff=0.0)
+    assert flaky.calls == 3
+    out, _ = restore(path, _tree())
+    _assert_tree_equal(out, _tree())
+
+
+def test_save_retry_exhaustion_propagates(tmp_path, monkeypatch):
+    flaky = _Flaky(10, _ckpt._write_bytes_atomic)
+    monkeypatch.setattr(_ckpt, "_write_bytes_atomic", flaky)
+    with pytest.raises(OSError, match="transient"):
+        save(str(tmp_path / "ck.msgpack"), _tree(), retries=2, backoff=0.0)
+    assert flaky.calls == 3  # first attempt + exactly `retries` retries
+
+
+def test_restore_retries_transient_oserror(tmp_path, monkeypatch):
+    path = str(tmp_path / "ck.msgpack")
+    save(path, _tree())
+    flaky = _Flaky(1, _ckpt._read_bytes)
+    monkeypatch.setattr(_ckpt, "_read_bytes", flaky)
+    out, _ = restore(path, _tree(), retries=1, backoff=0.0)
+    assert flaky.calls == 2
+    _assert_tree_equal(out, _tree())
+
+
+def test_corruption_is_never_retried(tmp_path, monkeypatch):
+    path = str(tmp_path / "ck.msgpack")
+    save(path, _tree())
+    blob = bytearray(open(path, "rb").read())
+    blob[-1] ^= 0xFF
+    open(path, "wb").write(bytes(blob))
+    reads = _Flaky(0, _ckpt._read_bytes)
+    monkeypatch.setattr(_ckpt, "_read_bytes", reads)
+    with pytest.raises(CheckpointCorruptError):
+        restore(path, _tree(), retries=5, backoff=0.0)
+    assert reads.calls == 1  # a bad CRC does not heal on a reread
+
+
+def test_atomic_write_leaves_no_tmp_on_failure(tmp_path, monkeypatch):
+    # fail the replace: the target must not exist and the tmp is cleaned
+    def boom(src, dst):
+        raise OSError("replace failed")
+
+    monkeypatch.setattr(_ckpt.os, "replace", boom)
+    path = str(tmp_path / "ck.msgpack")
+    with pytest.raises(OSError):
+        _ckpt._write_bytes_atomic(path, b"payload")
+    assert not os.path.exists(path)
+    assert os.listdir(tmp_path) == []
+
+
+def test_elastic_trainer_threads_retries():
+    import inspect
+
+    from repro.train.elastic import ElasticTrainer
+
+    assert "ckpt_retries" in inspect.signature(ElasticTrainer).parameters
+    src = inspect.getsource(ElasticTrainer._reconfigure)
+    assert "retries=self.ckpt_retries" in src

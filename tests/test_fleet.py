@@ -317,6 +317,35 @@ for k in base:
     np.testing.assert_array_equal(
         np.asarray(base[k]), np.asarray(tel[k]),
         err_msg=f"collect-vs-base {k}")
+
+# fallback: fallback=None rides the same compiled program as the default
+# (bitwise vs base), and the ARMED prediction-failure monitor shards
+# bitwise too — on storm-faulted inputs that actually trigger it
+# (collect + fallback adds the 12 fleet keys + 2 fallback keys)
+from repro.chaos import FallbackConfig, inject, storm_schedule
+none = fleet.simulate_fleet(rows, stacked, arrivals, TPUT, prices, avail,
+                            pred, fallback=None)
+for k in base:
+    np.testing.assert_array_equal(
+        np.asarray(base[k]), np.asarray(none[k]), err_msg=f"fb-none {k}")
+pf, af, prf = inject(prices, avail, pred,
+                     storm_schedule(1, T, n_storms=2, storm_len=5,
+                                    pred_fault="stale"))
+cfg = FallbackConfig(threshold=0.5, lam=0.5)
+fb = fleet.simulate_fleet(rows, stacked, arrivals, TPUT, pf, af, prf,
+                          collect=True, fallback=cfg)
+assert len(fb) == len(base) + 14, sorted(fb)
+assert np.asarray(fb["tel_fallback"]).any(), "monitor never armed"
+for shape in MESHES:
+    fb_sh = fleet.simulate_fleet_sharded(
+        rows, stacked, arrivals, TPUT, pf, af, prf,
+        mesh=None if shape is None else make_pool_mesh(shape=shape),
+        collect=True, fallback=cfg)
+    assert set(fb_sh) == set(fb)
+    for k in fb:
+        np.testing.assert_array_equal(
+            np.asarray(fb[k]), np.asarray(fb_sh[k]),
+            err_msg=f"fleet fallback {k} mesh={shape}")
 print("FLEET-SHARDED-OK")
 """
 

@@ -93,6 +93,35 @@ for k in base:
         np.asarray(base[k]), np.asarray(tel[k]),
         err_msg=f"collect-vs-base {k}")
 
+# fallback: fallback=None rides the same compiled program as the default
+# (bitwise vs base), and the ARMED prediction-failure monitor shards
+# bitwise too — on storm-faulted inputs that actually trigger it
+# (collect + fallback adds 7 slot keys + 2 fallback keys)
+from repro.chaos import FallbackConfig, inject, storm_schedule
+none = fast_sim.simulate_pool_jobs(
+    arrs, stacked, TPUT, prices, avail, preds, fallback=None)
+for k in base:
+    np.testing.assert_array_equal(
+        np.asarray(base[k]), np.asarray(none[k]), err_msg=f"fb-none {k}")
+pf, af, prf = inject(prices, avail, preds,
+                     storm_schedule(1, d, n_storms=2, storm_len=4,
+                                    spike_mag=2.5, pred_fault="stale"))
+cfg = FallbackConfig(threshold=0.5, lam=0.5)
+fb = fast_sim.simulate_pool_jobs(
+    arrs, stacked, TPUT, pf, af, prf, collect=True, fallback=cfg)
+assert len(fb) == len(base) + 9, sorted(fb)
+assert np.asarray(fb["tel_fallback"]).any(), "monitor never armed"
+for shape in MESHES:
+    fb_sh = fast_sim.simulate_pool_jobs_sharded(
+        arrs, stacked, TPUT, pf, af, prf,
+        mesh=None if shape is None else make_pool_mesh(shape=shape),
+        collect=True, fallback=cfg)
+    assert set(fb_sh) == set(fb)
+    for k in fb:
+        np.testing.assert_array_equal(
+            np.asarray(fb[k]), np.asarray(fb_sh[k]),
+            err_msg=f"fallback {k} mesh={shape}")
+
 # multi-region: same meshes over the (J, R, T) market tensors
 mkt = vast_like_regions(3, seed=1, days=1)
 rarrs = specs_to_arrays(region_pool())
