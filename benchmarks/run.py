@@ -75,6 +75,7 @@ MODULES = [
     "kernels_bench",
     "pool_sim_bench",
     "region_sim",
+    "region_e2e",
     "selection_e2e",
     "fleet_sim",
     "scenario_grid",

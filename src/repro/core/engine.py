@@ -42,12 +42,16 @@ from repro.configs.base import ThroughputConfig
 from repro.core import fast_sim, selector
 from repro.core.job import normalize_utility_batch
 from repro.core.market import gather_windows, require_finite
-from repro.core.predictor import noisy_matrix_batch
+from repro.core.predictor import (
+    noisy_matrix_batch,
+    noisy_matrix_batch_jax,
+    regional_noisy_matrix_jax,
+)
 
 
 def prepare_noisy_inputs(trace, t0s, deadline: int, kind: str, level,
                          seeds, horizon: Optional[int] = None,
-                         avail_max: int = 16):
+                         avail_max: int = 16, prep_backend: str = "numpy"):
     """Batched Fig. 9-style prep: gather the K job windows in one indexing
     pass and emit the whole noisy forecast stack in one vectorized call.
     Returns ``(prices (K, d) f32, avail (K, d) i64, preds (K, d, W1MAX, 2)
@@ -55,15 +59,79 @@ def prepare_noisy_inputs(trace, t0s, deadline: int, kind: str, level,
     per-job ``NoisyPredictor(trace.window(t0s[k], d+1), ..., seed=seeds[k])``
     construction it replaces. ``level`` may be a scalar or a per-row (K,)
     array (``noisy_matrix_batch``'s contract) — the scenario grid passes
-    per-regime noise levels through one call this way."""
+    per-regime noise levels through one call this way.
+
+    ``prep_backend="jax"`` swaps the forecast construction for the jitted
+    batched-PRNG ``noisy_matrix_batch_jax`` — ``preds`` comes back as a
+    device array (born where the simulator consumes it; no host round-trip
+    and no per-seed generator loop). The draws use JAX's counter-based
+    PRNG, so the stacks are distribution- but not bitwise-equal to the
+    numpy oracle (winner/regret parity pinned in
+    tests/test_region_engine.py)."""
     horizon = fast_sim.W1MAX - 1 if horizon is None else horizon
     pw, aw = gather_windows(trace, t0s, deadline + 1)
-    preds = noisy_matrix_batch(pw, aw, kind, level, seeds, horizon,
-                               avail_max)[:, :deadline]
-    require_finite("forecast stack", preds)
+    if prep_backend == "jax":
+        preds = noisy_matrix_batch_jax(pw, aw, kind, level, seeds, horizon,
+                                       avail_max)[:, :deadline]
+    else:
+        preds = noisy_matrix_batch(pw, aw, kind, level, seeds, horizon,
+                                   avail_max)[:, :deadline]
+        require_finite("forecast stack", preds)
+        preds = preds.astype(np.float32)
     return (pw[:, :deadline].astype(np.float32),
             aw[:, :deadline].astype(np.int64),
-            preds.astype(np.float32))
+            preds)
+
+
+def prepare_noisy_inputs_regions(market, t0s, deadline: int, kind: str,
+                                 level, seeds,
+                                 horizon: Optional[int] = None,
+                                 avail_max: int = 16,
+                                 prep_backend: str = "numpy"):
+    """Regional :func:`prepare_noisy_inputs`: gather every (job, region)
+    market window of a :class:`RegionalMarket` and emit the full
+    (K, R, d, W1MAX, 2) forecast stack in ONE batched pass over the
+    flattened (K*R,) row axis. Returns ``(prices (K, R, d) f32, avail
+    (K, R, d) i64, preds (K, R, d, W1MAX, 2) f32)`` ready for
+    ``simulate_pool_regions[_sharded]`` / the regional
+    :func:`simulate_and_select` path.
+
+    Row (k, r) is seeded ``seeds[k] * 1009 + r`` — the same
+    decorrelate-regions-by-1009 convention as ``vast_like_regions`` — so
+    the numpy path is bitwise-equal to stacking per-job
+    ``RegionalPredictor(market.window(t0s[k], d+1), lambda tr, r:
+    NoisyPredictor(tr, kind, level, seed=seeds[k] * 1009 + r))``
+    constructions (the replaced Fig. 9/10 host loop).
+    ``prep_backend="jax"`` builds the stack on device via
+    ``regional_noisy_matrix_jax`` (different PRNG; winner/regret parity
+    pinned, as for the single-region path)."""
+    horizon = fast_sim.W1MAX - 1 if horizon is None else horizon
+    n_regions = market.n_regions
+    pws, aws = zip(*(gather_windows(market.region(r), t0s, deadline + 1)
+                     for r in range(n_regions)))
+    pw = np.stack(pws, axis=1)                    # (K, R, d+1)
+    aw = np.stack(aws, axis=1)
+    n_jobs = pw.shape[0]
+    seeds = np.asarray(seeds)
+    rseeds = seeds[:, None] * np.int64(1009) + np.arange(n_regions)[None, :]
+    if prep_backend == "jax":
+        preds = regional_noisy_matrix_jax(
+            pw, aw, kind, level, rseeds, horizon, avail_max
+        )[:, :, :deadline]
+    else:
+        level_arr = np.asarray(level, float)
+        lv = np.repeat(level_arr, n_regions) if level_arr.ndim else level_arr
+        preds = noisy_matrix_batch(
+            pw.reshape(n_jobs * n_regions, -1),
+            aw.reshape(n_jobs * n_regions, -1),
+            kind, lv, rseeds.reshape(-1), horizon, avail_max,
+        ).reshape(n_jobs, n_regions, deadline + 1, horizon + 1, 2)
+        preds = preds[:, :, :deadline]
+        require_finite("forecast stack", preds)
+        preds = preds.astype(np.float32)
+    return (pw[:, :, :deadline].astype(np.float32),
+            aw[:, :, :deadline].astype(np.int64),
+            preds)
 
 
 @functools.partial(jax.jit, static_argnames=("track_history", "collect"))
@@ -147,6 +215,9 @@ def simulate_and_select(
     return_utilities: bool = False,
     collect: bool = False,
     fallback=None,
+    delta_mig: Optional[int] = None,
+    p_od=None,
+    prep=None,
 ) -> SelectionResult:
     """Run the whole online-selection workload in one call: sharded pool
     simulation of every (job, policy) cell, batched utility normalization,
@@ -174,7 +245,31 @@ def simulate_and_select(
     prediction-failure monitor in the AHAP lanes (see
     ``repro.chaos.fallback``); ``None`` — the default — is the same
     static-flag discipline and compiles the identical shipped program
-    (pinned in tests/test_chaos.py)."""
+    (pinned in tests/test_chaos.py).
+
+    **Regional mode** — pass ``delta_mig`` (the market's checkpoint-
+    transfer cost) to select among region-aware lanes instead: the inputs
+    become (K, R, d) ``prices``/``avail`` and (K, R, d, W1MAX, 2) ``preds``
+    (:func:`prepare_noisy_inputs_regions`), the simulate leg becomes
+    ``simulate_pool_regions[_sharded]``, and the (K, M) utility matrix,
+    region paths and migration counts stay device-resident between the
+    sim, normalize and EG stages exactly as in the single-region path.
+    ``p_od`` forwards the market's optional per-region on-demand
+    multipliers. With R == 1 (and ``p_od=None``) the result is
+    BITWISE-identical to the single-region engine on the squeezed inputs
+    (pinned in tests/test_region_engine.py) — the per-cell programs agree
+    bitwise and the select leg is shared code.
+
+    ``prep`` optionally streams input construction: a callable
+    ``prep(lo, hi) -> (prices, avail, preds)`` producing each chunk's
+    inputs on demand (e.g. a :func:`prepare_noisy_inputs_regions` closure
+    over the job windows), in which case the array arguments may be
+    ``None``. The chunk loop DOUBLE-BUFFERS: chunk k's simulate/select
+    work is dispatched asynchronously, then chunk k+1's prep runs on the
+    host while the device chews — the prep leg hides behind the simulate
+    leg instead of serializing with it (benchmarks/region_e2e.py measures
+    the split via StageTimer). ``prep=None`` slices the passed arrays,
+    which is the same values in the same order — results are unchanged."""
     n_jobs = int(np.shape(jobs.workload)[0])
     n_pol = int(np.asarray(pool_arrays["kind"]).shape[0])
     if state is None:
@@ -182,29 +277,59 @@ def simulate_and_select(
     chunk = int(job_chunk) if job_chunk else n_jobs
     if chunk < 1:
         raise ValueError(f"job_chunk must be >= 1, got {job_chunk}")
+    regional = delta_mig is not None
+    if prep is None and preds is None:
+        raise ValueError("pass (prices, avail, preds) arrays or prep=")
+
+    def _stage(lo, hi):
+        if prep is not None:
+            p, a, m = prep(lo, hi)
+        else:
+            p, a, m = prices[lo:hi], avail[lo:hi], preds[lo:hi]
+        # jnp.asarray starts the host->device transfer right away, so a
+        # staged chunk is already in flight when its sim dispatches
+        return jnp.asarray(p), jnp.asarray(a), jnp.asarray(m)
 
     u_sum = jnp.zeros((n_pol,), jnp.float32)
     max_w, regrets, hist, raw = [], [], [], []
     ent, top, sim_chunks = [], [], []
-    for lo in range(0, n_jobs, chunk):
-        hi = min(lo + chunk, n_jobs)
+    spans = [(lo, min(lo + chunk, n_jobs))
+             for lo in range(0, n_jobs, chunk)]
+    staged = _stage(*spans[0])
+    for i, (lo, hi) in enumerate(spans):
+        pr_c, av_c, pm_c = staged
         jb = fast_sim.slice_jobs(jobs, lo, hi)
-        if sharded:
+        if regional:
+            if sharded:
+                out = fast_sim.simulate_pool_regions_sharded(
+                    pool_arrays, jb, tput, pr_c, av_c, pm_c,
+                    backend=backend, delta_mig=delta_mig, mesh=mesh,
+                    collect=collect, fallback=fallback, p_od=p_od,
+                )
+            else:
+                out = fast_sim.simulate_pool_regions(
+                    pool_arrays, jb, tput, pr_c, av_c, pm_c,
+                    backend=backend, delta_mig=delta_mig, collect=collect,
+                    fallback=fallback, p_od=p_od,
+                )
+        elif sharded:
             out = fast_sim.simulate_pool_jobs_sharded(
-                pool_arrays, jb, tput, prices[lo:hi], avail[lo:hi],
-                preds[lo:hi], backend=backend, mesh=mesh, collect=collect,
-                fallback=fallback,
+                pool_arrays, jb, tput, pr_c, av_c, pm_c, backend=backend,
+                mesh=mesh, collect=collect, fallback=fallback,
             )
         else:
             out = fast_sim.simulate_pool_jobs(
-                pool_arrays, jb, tput, prices[lo:hi], avail[lo:hi],
-                preds[lo:hi], backend=backend, collect=collect,
-                fallback=fallback,
+                pool_arrays, jb, tput, pr_c, av_c, pm_c, backend=backend,
+                collect=collect, fallback=fallback,
             )
         u = out["utility"]                       # (k, M), device-resident
         u_sum = u_sum + jnp.sum(u, axis=0)
         state, traj = _normalize_and_scan(jb, u, state, track_history,
                                           collect)
+        # everything above is async-dispatched device work; prep the NEXT
+        # chunk now so host prep overlaps the in-flight simulation
+        if i + 1 < len(spans):
+            staged = _stage(*spans[i + 1])
         max_w.append(traj["max_weight"])
         regrets.append(traj["regret"])
         if track_history:

@@ -316,6 +316,12 @@ _TEL_SLOTS = ("tel_spot_cost", "tel_od_cost", "tel_progress", "tel_active",
 # Order matches the (fallback-active, ewma-error) ys appended by the scans.
 _TEL_FALLBACK = ("tel_fallback", "tel_pred_err")
 
+# region-path series, emitted only by the multi-region scans under collect:
+# the region occupied each slot and the switch-decision events. The slot
+# sums of tel_migration must equal the ``migrations`` result leaves
+# (reconciled in repro.obs.ledger.migration_reconciliation).
+_TEL_REGION = ("tel_region", "tel_migration")
+
 # floor for the relative-error denominators of the fallback monitor
 # (traces clip prices >= 0.02; availability errors normalize by >= 1 unit)
 _FB_PRICE_EPS = 0.01
@@ -866,10 +872,12 @@ def _pad_leading(x, pad: int):
 @functools.lru_cache(maxsize=None)
 def _sharded_pool_call(mesh, tput, backend: str, delta_mig: int,
                        with_regions: bool, ahap: bool, lspec, jspec, ospec,
-                       collect: bool = False, fallback=None):
+                       collect: bool = False, fallback=None,
+                       has_p_od: bool = False):
     """jit(shard_map)-wrapped runner for one kind partition, cached on the
-    static configuration (``collect`` and ``fallback`` are part of the
-    key: the telemetry and degradation programs are different lowerings).
+    static configuration (``collect``, ``fallback`` and ``has_p_od`` are
+    part of the key: the telemetry, degradation and per-region-od programs
+    are different lowerings; ``has_p_od`` adds a replicated (R,) operand).
     The cache is what keeps the sharded path's per-call cost at dispatch
     level: a fresh shard_map closure per call would retrace (and re-lower)
     the whole pool program every invocation — the prime mover of the old
@@ -877,11 +885,18 @@ def _sharded_pool_call(mesh, tput, backend: str, delta_mig: int,
     from jax.experimental.shard_map import shard_map
 
     if ahap and with_regions:
-        def local(w, v_, s, r, rs, rm, jb, pr_, av_, pm_):
-            return _pool_jobs_ahap_regions(
-                w, v_, s, r, rs, rm, jb, tput, pr_, av_, pm_, backend,
-                delta_mig,
-            )
+        if has_p_od:
+            def local(w, v_, s, r, rs, rm, jb, pr_, av_, pm_, po):
+                return _pool_jobs_ahap_regions(
+                    w, v_, s, r, rs, rm, jb, tput, pr_, av_, pm_, backend,
+                    delta_mig, collect, fallback, po,
+                )
+        else:
+            def local(w, v_, s, r, rs, rm, jb, pr_, av_, pm_):
+                return _pool_jobs_ahap_regions(
+                    w, v_, s, r, rs, rm, jb, tput, pr_, av_, pm_, backend,
+                    delta_mig, collect, fallback,
+                )
         n_lane = 6
     elif ahap:
         def local(w, v_, s, r, jb, pr_, av_, pm_):
@@ -889,10 +904,18 @@ def _sharded_pool_call(mesh, tput, backend: str, delta_mig: int,
                                    backend, collect, fallback)
         n_lane = 4
     elif with_regions:
-        def local(k, s, c, rs, rm, jb, pr_, av_, pm_):
-            return _pool_jobs_cheap_regions(
-                k, s, c, rs, rm, jb, tput, pr_, av_, pm_, delta_mig
-            )
+        if has_p_od:
+            def local(k, s, c, rs, rm, jb, pr_, av_, pm_, po):
+                return _pool_jobs_cheap_regions(
+                    k, s, c, rs, rm, jb, tput, pr_, av_, pm_, delta_mig,
+                    collect, fallback, po,
+                )
+        else:
+            def local(k, s, c, rs, rm, jb, pr_, av_, pm_):
+                return _pool_jobs_cheap_regions(
+                    k, s, c, rs, rm, jb, tput, pr_, av_, pm_, delta_mig,
+                    collect, fallback,
+                )
         n_lane = 5
     else:
         # pm_ rides along unused: cheap lanes take no forecasts
@@ -900,9 +923,13 @@ def _sharded_pool_call(mesh, tput, backend: str, delta_mig: int,
             return _pool_jobs_cheap(k, s, c, jb, tput, pr_, av_, collect,
                                     fallback)
         n_lane = 3
+    from jax.sharding import PartitionSpec
+
+    # the tiny (R,) od-multiplier vector is replicated to every device
+    pod_spec = (PartitionSpec(),) if has_p_od else ()
     return jax.jit(shard_map(
         local, mesh=mesh,
-        in_specs=(lspec,) * n_lane + (jspec,) * 4,
+        in_specs=(lspec,) * n_lane + (jspec,) * 4 + pod_spec,
         out_specs=ospec, check_rep=False,
     ))
 
@@ -910,7 +937,7 @@ def _sharded_pool_call(mesh, tput, backend: str, delta_mig: int,
 def _run_partitioned_sharded(pool_arrays, jobs, tput, prices, avail, pred,
                              backend: str, mesh, *, with_regions: bool = False,
                              delta_mig: int = 0, collect: bool = False,
-                             fallback=None):
+                             fallback=None, p_od=None):
     """Sharded twin of :func:`_run_partitioned`: partition by kind on the
     host, then lay each partition's (jobs x lanes) grid over ``mesh``.
 
@@ -943,6 +970,7 @@ def _run_partitioned_sharded(pool_arrays, jobs, tput, prices, avail, pred,
         pool_arrays, with_regions
     )
     pr_j, av_j, pm_j = (jnp.asarray(x) for x in (prices, avail, pred))
+    pod_args = () if p_od is None else (jnp.asarray(p_od, jnp.float32),)
 
     def run_part(ahap: bool, lane_arrays):
         p_l = int(np.shape(lane_arrays[0])[0])
@@ -954,9 +982,9 @@ def _run_partitioned_sharded(pool_arrays, jobs, tput, prices, avail, pred,
         )
         call = _sharded_pool_call(
             mesh, tput, backend, int(delta_mig), with_regions, ahap,
-            lspec, jspec, ospec, collect, fallback,
+            lspec, jspec, ospec, collect, fallback, p_od is not None,
         )
-        out = call(*lane_in, jobs, pr_j, av_j, pm_j)
+        out = call(*lane_in, jobs, pr_j, av_j, pm_j, *pod_args)
         if pad_l:
             out = {k: v[:, :p_l] for k, v in out.items()}
         return out
@@ -1083,16 +1111,32 @@ def _region_step(cur, mig_left, sc_row, rmargin, delta_mig: int, inactive):
 
 def _simulate_lanes_ahap_regions(omega, v, sigma, rho, rsel, rmargin,
                                  j: JobArrays, tput, prices, avail, pred,
-                                 backend: str, delta_mig: int):
+                                 backend: str, delta_mig: int,
+                                 collect: bool = False, fallback=None,
+                                 p_od=None):
     """Region-aware :func:`_simulate_lanes_ahap`: prices/avail are (R, dmax),
     pred is (R, dmax, W1MAX, 2). The AHAP scaffolding is precomputed per
     (lane, region, slot); each scan slot selects a region per lane and
-    gathers that region's row before the unchanged lane-batched CHC rule."""
+    gathers that region's row before the unchanged lane-batched CHC rule.
+
+    ``collect`` (static) appends the ``_TEL_SLOTS`` series plus the
+    ``_TEL_REGION`` pair (per-slot region occupancy + switch events) to the
+    scan ys; False traces the identical shipped program. ``fallback``
+    (static FallbackConfig, or None) arms the prediction-health monitor of
+    :func:`_simulate_lanes_ahap`, except the error EWMA is per-lane (P,) —
+    lanes occupy different regions, so each lane scores the 1-step-ahead
+    forecast of ITS region against that region's realized market. ``p_od``
+    (traced (R,) array, or None) scales the job's on-demand price per
+    region (multipliers; termination billing uses the lane's final region);
+    None traces the flat-od program unchanged."""
     dmax = prices.shape[1]
     p = omega.shape[0]
     jcfg = _job_cfg(j)
     ts = jnp.arange(dmax)
     av_i = avail.astype(jnp.int32)
+    # per-region od price: thr_s thresholds see the (R, 1) effective price
+    # broadcast against the (R, W1MAX) forecast rows
+    j_pre = j if p_od is None else j._replace(p_o=j.p_o * p_od[:, None])
     # slot-major from the start (see _simulate_lanes_ahap): the (R, dmax)
     # raw forecast stack is transposed ONCE (small), then slots ride the
     # outer vmap so the big per-(slot, lane, region) tensors are born in
@@ -1101,33 +1145,67 @@ def _simulate_lanes_ahap_regions(omega, v, sigma, rho, rsel, rmargin,
     pred_sm = jnp.swapaxes(pred, 0, 1)           # (dmax, R, W1MAX, 2)
     pr, thr_s, z_exp_end, eff_slots = jax.vmap(
         lambda t, pm: jax.vmap(
-            lambda w, s, r: _ahap_precompute(j, w, s, r, t, pm)
+            lambda w, s, r: _ahap_precompute(j_pre, w, s, r, t, pm)
         )(omega, sigma, rho)
     )(ts, pred_sm)
     # pr (dmax, P, R, W1MAX, 2); thr_s (dmax, P, R, W1MAX); rest (dmax, P)
     sc = _region_scores(j, prices, av_i, pred)[:, rsel]  # (dmax, P, R)
     lane = jnp.arange(p)
+    if fallback is not None:
+        thr = jnp.float32(fallback.threshold)
+        prev1 = jnp.swapaxes(jax.vmap(_fallback_prev1)(pred), 0, 1)
+        prev_av = jnp.swapaxes(
+            jnp.concatenate([av_i[:, :1], av_i[:, :-1]], axis=1), 0, 1
+        )                                        # (dmax, R)
 
     def step(carry, xs):
-        z, n_prev, cost, done, T, plans, cur, mig_left = carry
-        prices_t, avail_t, pr_t, thr_t, zee_t, eff_t, sc_t, t = xs
+        if fallback is not None:
+            z, n_prev, cost, done, T, plans, cur, mig_left, err = carry
+            (prices_t, avail_t, pr_t, thr_t, zee_t, eff_t, sc_t, t,
+             p1_t, pav_t) = xs
+        else:
+            z, n_prev, cost, done, T, plans, cur, mig_left = carry
+            prices_t, avail_t, pr_t, thr_t, zee_t, eff_t, sc_t, t = xs
         cur, mig_left, migrating, switch = _region_step(
             cur, mig_left, sc_t, rmargin, delta_mig,
             done | (t >= j.deadline),
         )
         price = prices_t[cur]                    # (P,) per-lane region price
         av = avail_t[cur]
+        j_t = j if p_od is None else j._replace(p_o=j.p_o * p_od[cur])
+        jcfg_t = jcfg if p_od is None else _job_cfg(j_t)
+        if fallback is not None:
+            p1_sel = p1_t[cur]                   # (P, 2) lane-region forecasts
+            err = _fallback_error(fallback, err, price, av,
+                                  (p1_sel[:, 0], p1_sel[:, 1]))
+            fb = err > thr
         n_o, n_s, plans = _ahap_rule_batch(
-            jcfg, j, tput, v, backend, z, t, price, av, plans,
+            jcfg_t, j_t, tput, v, backend, z, t, price, av, plans,
             pr_t[lane, cur], thr_t[lane, cur], zee_t, eff_t,
         )
+        if fallback is not None:
+            an_o, an_s = _ahanp_rule(j_t, sigma, z, t, price, av, n_prev,
+                                     pav_t[cur])
+            n_o = jnp.where(fb, an_o, n_o)
+            n_s = jnp.where(fb, an_s, n_s)
         n_o = jnp.where(migrating, 0, n_o)
         n_s = jnp.where(migrating, 0, n_s)
-        z, n_prev, cost, done, T, n_o, n_s, _ = _execute(
-            j, tput, z, n_prev, cost, done, T, t, n_o, n_s, price, av
+        n_prev0 = n_prev
+        z, n_prev, cost, done, T, n_o, n_s, active = _execute(
+            j_t, tput, z, n_prev, cost, done, T, t, n_o, n_s, price, av
         )
-        return ((z, n_prev, cost, done, T, plans, cur, mig_left),
-                (n_o, n_s, cur, switch))
+        ys = (n_o, n_s, cur, switch)
+        if collect:
+            ys = ys + _slot_telemetry(j_t, n_prev0, z, n_o, n_s, active,
+                                      price, av)
+            ys = ys + (cur, switch)
+            if fallback is not None:
+                ys = ys + (jnp.broadcast_to(fb, n_o.shape),
+                           jnp.broadcast_to(err, n_o.shape))
+        new_carry = (z, n_prev, cost, done, T, plans, cur, mig_left)
+        if fallback is not None:
+            new_carry = new_carry + (err,)
+        return new_carry, ys
 
     init = (
         jnp.zeros((p,), jnp.float32), jnp.zeros((p,), jnp.int32),
@@ -1137,27 +1215,42 @@ def _simulate_lanes_ahap_regions(omega, v, sigma, rho, rsel, rmargin,
         jnp.argmin(sc[0], axis=-1).astype(jnp.int32),  # free initial placement
         jnp.zeros((p,), jnp.int32),
     )
-    (z, _, cost, done, T, _, _, _), (no_hist, ns_hist, cur_hist, sw_hist) = (
-        jax.lax.scan(
-            step, init,
-            (jnp.swapaxes(prices, 0, 1), jnp.swapaxes(av_i, 0, 1),
-             pr, thr_s, z_exp_end, eff_slots, sc, ts),
-        )
+    xs = (jnp.swapaxes(prices, 0, 1), jnp.swapaxes(av_i, 0, 1),
+          pr, thr_s, z_exp_end, eff_slots, sc, ts)
+    if fallback is not None:
+        init = init + (jnp.zeros((p,), jnp.float32),)
+        xs = xs + (prev1, prev_av)
+    (z, _, cost, done, T, _, cur_end, *_rest), ys = jax.lax.scan(
+        step, init, xs
     )
-    out = _finalize(jcfg, j, tput, z, cost, done, T,
+    no_hist, ns_hist, cur_hist, sw_hist = ys[:4]
+    j_fin = j if p_od is None else j._replace(p_o=j.p_o * p_od[cur_end])
+    jcfg_fin = jcfg if p_od is None else _job_cfg(j_fin)
+    out = _finalize(jcfg_fin, j_fin, tput, z, cost, done, T,
                     jnp.swapaxes(no_hist, 0, 1), jnp.swapaxes(ns_hist, 0, 1))
     out["region"] = jnp.swapaxes(cur_hist, 0, 1)
     out["migrations"] = sw_hist.astype(jnp.int32).sum(axis=0)
+    if collect:
+        keys = (_TEL_SLOTS + _TEL_REGION
+                + (_TEL_FALLBACK if fallback is not None else ()))
+        for key, hist in zip(keys, ys[4:]):
+            out[key] = jnp.swapaxes(hist, 0, 1)
     return out
 
 
 def _simulate_one_cheap_regions(kind, sigma, cfrac, rsel, rmargin,
                                 j: JobArrays, tput, prices, avail, scores,
-                                delta_mig: int):
+                                delta_mig: int, collect: bool = False,
+                                fallback=None, p_od=None):
     """Region-aware :func:`_simulate_one_cheap`: same DP-free rules, fed the
     per-slot selected region's (price, avail). ``scores`` is the
     (dmax, N_RSEL, R) tensor from :func:`_region_scores` (shared across the
-    cheap lanes of one job)."""
+    cheap lanes of one job). ``collect`` appends the ``_TEL_SLOTS`` +
+    ``_TEL_REGION`` series; cheap lanes consume no predictions, so
+    ``fallback`` only (with collect) appends the all-zero ``_TEL_FALLBACK``
+    placeholders that keep the merged pool key set uniform. ``p_od``
+    ((R,) multipliers, or None) scales the on-demand price by the occupied
+    region, as in :func:`_simulate_lanes_ahap_regions`."""
     dmax = prices.shape[1]
     jcfg = _job_cfg(j)
     av_i = avail.astype(jnp.int32)
@@ -1173,11 +1266,13 @@ def _simulate_one_cheap_regions(kind, sigma, cfrac, rsel, rmargin,
         )
         price = prices_t[cur]
         av = avail_t[cur]
-        an_o, an_s = _ahanp_rule(j, sigma, z, t, price, av, n_prev, prev_avail)
-        od_o, od_s = _od_rule(j, tput, z, t, price, av)
-        ms_o, ms_s = _msu_rule(j, tput, z, t, price, av)
-        up_o, up_s = _up_rule(j, tput, z, t, price, av)
-        rd_o, rd_s = _rand_rule(j, tput, cfrac, z, t, price, av)
+        j_t = j if p_od is None else j._replace(p_o=j.p_o * p_od[cur])
+        an_o, an_s = _ahanp_rule(j_t, sigma, z, t, price, av, n_prev,
+                                 prev_avail)
+        od_o, od_s = _od_rule(j_t, tput, z, t, price, av)
+        ms_o, ms_s = _msu_rule(j_t, tput, z, t, price, av)
+        up_o, up_s = _up_rule(j_t, tput, z, t, price, av)
+        rd_o, rd_s = _rand_rule(j_t, tput, cfrac, z, t, price, av)
         n_o = jnp.select(
             [kind == 1, kind == 2, kind == 3, kind == 4, kind == 5],
             [an_o, od_o, ms_o, up_o, rd_o],
@@ -1188,61 +1283,92 @@ def _simulate_one_cheap_regions(kind, sigma, cfrac, rsel, rmargin,
         )
         n_o = jnp.where(migrating, 0, n_o)
         n_s = jnp.where(migrating, 0, n_s)
+        n_prev0 = n_prev
         z, n_prev, cost, done, T, n_o, n_s, active = _execute(
-            j, tput, z, n_prev, cost, done, T, t, n_o, n_s, price, av
+            j_t, tput, z, n_prev, cost, done, T, t, n_o, n_s, price, av
         )
         prev_avail = jnp.where(active, av, prev_avail)
-        return ((z, n_prev, cost, done, T, prev_avail, cur, mig_left),
-                (n_o, n_s, cur, switch))
+        ys = (n_o, n_s, cur, switch)
+        if collect:
+            ys = ys + _slot_telemetry(j_t, n_prev0, z, n_o, n_s, active,
+                                      price, av)
+            ys = ys + (cur, switch)
+            if fallback is not None:
+                ys = ys + (jnp.bool_(False), jnp.float32(0.0))
+        return ((z, n_prev, cost, done, T, prev_avail, cur, mig_left), ys)
 
     init = (
         jnp.float32(0.0), jnp.int32(0), jnp.float32(0.0),
         jnp.bool_(False), jnp.float32(0.0), av_i[cur0, 0],
         cur0, jnp.int32(0),
     )
-    (z, _, cost, done, T, _, _, _), (no_hist, ns_hist, cur_hist, sw_hist) = (
-        jax.lax.scan(
-            step, init,
-            (jnp.swapaxes(prices, 0, 1), jnp.swapaxes(av_i, 0, 1), sc,
-             jnp.arange(dmax)),
-        )
+    (z, _, cost, done, T, _, cur_end, _), ys = jax.lax.scan(
+        step, init,
+        (jnp.swapaxes(prices, 0, 1), jnp.swapaxes(av_i, 0, 1), sc,
+         jnp.arange(dmax)),
     )
-    out = _finalize(jcfg, j, tput, z, cost, done, T, no_hist, ns_hist)
+    no_hist, ns_hist, cur_hist, sw_hist = ys[:4]
+    j_fin = j if p_od is None else j._replace(p_o=j.p_o * p_od[cur_end])
+    jcfg_fin = jcfg if p_od is None else _job_cfg(j_fin)
+    out = _finalize(jcfg_fin, j_fin, tput, z, cost, done, T, no_hist, ns_hist)
     out["region"] = cur_hist
     out["migrations"] = sw_hist.astype(jnp.int32).sum()
+    if collect:
+        keys = (_TEL_SLOTS + _TEL_REGION
+                + (_TEL_FALLBACK if fallback is not None else ()))
+        for key, hist in zip(keys, ys[4:]):
+            out[key] = hist
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("tput", "backend", "delta_mig"))
+@functools.partial(jax.jit, static_argnames=("tput", "backend", "delta_mig",
+                                             "collect", "fallback"))
 def _pool_jobs_ahap_regions(omega, v, sigma, rho, rsel, rmargin,
                             jobs: JobArrays, tput, prices, avail, pred,
-                            backend: str, delta_mig: int):
+                            backend: str, delta_mig: int,
+                            collect: bool = False, fallback=None, p_od=None):
     def per_job(job_row, pr_, av_, pm_):
         return _simulate_lanes_ahap_regions(
             omega, v, sigma, rho, rsel, rmargin, job_row, tput,
             pr_, av_, pm_, backend, delta_mig,
+            collect=collect, fallback=fallback, p_od=p_od,
         )
 
     return jax.vmap(per_job)(jobs, prices, avail, pred)
 
 
-@functools.partial(jax.jit, static_argnames=("tput", "delta_mig"))
+@functools.partial(jax.jit, static_argnames=("tput", "delta_mig", "collect",
+                                             "fallback"))
 def _pool_jobs_cheap_regions(kind, sigma, cfrac, rsel, rmargin,
                              jobs: JobArrays, tput, prices, avail, pred,
-                             delta_mig: int):
+                             delta_mig: int, collect: bool = False,
+                             fallback=None, p_od=None):
     def per_job(job_row, pr_, av_, pm_):
         scores = _region_scores(job_row, pr_, av_.astype(jnp.int32), pm_)
         fn = lambda k, s, c, rs, rm: _simulate_one_cheap_regions(
-            k, s, c, rs, rm, job_row, tput, pr_, av_, scores, delta_mig
+            k, s, c, rs, rm, job_row, tput, pr_, av_, scores, delta_mig,
+            collect=collect, fallback=fallback, p_od=p_od,
         )
         return jax.vmap(fn)(kind, sigma, cfrac, rsel, rmargin)
 
     return jax.vmap(per_job)(jobs, prices, avail, pred)
 
 
+def _as_p_od(p_od, n_regions: int):
+    """Normalize a per-region on-demand price multiplier: None passes
+    through (the flat-od program is traced unchanged), a scalar broadcasts
+    to (R,), an (R,) array is taken as-is."""
+    if p_od is None:
+        return None
+    return jnp.broadcast_to(
+        jnp.asarray(p_od, jnp.float32).reshape(-1), (n_regions,)
+    )
+
+
 def simulate_pool_regions(pool_arrays: dict, jobs: JobArrays,
                           tput: ThroughputConfig, prices, avail, pred,
-                          backend: str = "xla", *, delta_mig: int):
+                          backend: str = "xla", *, delta_mig: int,
+                          collect: bool = False, fallback=None, p_od=None):
     """Multi-region :func:`simulate_pool_jobs`: jobs x pool over an R-region
     market. ``prices``/``avail`` are (J, R, d_max), ``pred`` is
     (J, R, d_max, W1MAX, 2) (see ``prepare_inputs_regions``); ``delta_mig``
@@ -1255,15 +1381,27 @@ def simulate_pool_regions(pool_arrays: dict, jobs: JobArrays,
     Returns the ``simulate_pool_jobs`` leaves (J, P, ...) plus ``region``
     (the lane's region each slot) and ``migrations`` (completed switches).
     With R == 1 the shared leaves are bitwise-identical to
-    ``simulate_pool_jobs``."""
+    ``simulate_pool_jobs``.
+
+    ``collect=True`` adds the (J, P, T) ``tel_*`` flight-recorder series
+    plus ``tel_region``/``tel_migration`` (per-slot occupancy and switch
+    events; slot sums reconcile against ``migrations`` in
+    obs.ledger.migration_reconciliation); ``fallback`` (static
+    repro.chaos.FallbackConfig) arms the AHAP lanes' per-lane online
+    prediction-failure monitor; ``p_od`` (scalar or (R,)) scales the
+    on-demand price by occupied region (``market.p_od``; multipliers of the
+    job's flat ``on_demand_price``). All three default to the
+    bitwise-pinned shipped program."""
+    p_od = _as_p_od(p_od, np.shape(prices)[1])
     return _run_partitioned(
         pool_arrays,
         lambda w, v, s, r, rs, rm: _pool_jobs_ahap_regions(
             w, v, s, r, rs, rm, jobs, tput, prices, avail, pred,
-            backend, delta_mig,
+            backend, delta_mig, collect, fallback, p_od,
         ),
         lambda k, s, c, rs, rm: _pool_jobs_cheap_regions(
             k, s, c, rs, rm, jobs, tput, prices, avail, pred, delta_mig,
+            collect, fallback, p_od,
         ),
         axis=1, with_regions=True,
     )
@@ -1278,14 +1416,20 @@ def simulate_pool_regions_sharded(
     *,
     delta_mig: int,
     mesh=None,
+    collect: bool = False,
+    fallback=None,
+    p_od=None,
 ):
     """Device-sharded :func:`simulate_pool_regions`: jobs (and, on a 2-D
     pool mesh, lanes) shard exactly as in
     :func:`simulate_pool_jobs_sharded`; the small region axis rides along
-    whole per device inside the (J, R, T) market tensors. BITWISE-equal to
+    whole per device inside the (J, R, T) market tensors (``p_od``, when
+    set, is replicated to every device). BITWISE-equal to
     ``simulate_pool_regions`` (pinned in tests/test_region_sim.py and the
     forced-4-device subprocess in tests/test_sharded_pool.py); falls
-    through to it on one device."""
+    through to it on one device. ``collect``/``fallback``/``p_od`` as in
+    :func:`simulate_pool_regions` (per-(job, lane)-cell local, so sharded
+    runs stay bitwise-equal to unsharded ones)."""
     from repro.launch.mesh import make_pool_mesh
 
     if mesh is None:
@@ -1293,11 +1437,13 @@ def simulate_pool_regions_sharded(
     if int(np.prod(mesh.devices.shape)) == 1:
         return simulate_pool_regions(
             pool_arrays, jobs, tput, prices, avail, pred, backend=backend,
-            delta_mig=delta_mig,
+            delta_mig=delta_mig, collect=collect, fallback=fallback,
+            p_od=p_od,
         )
     return _run_partitioned_sharded(
         pool_arrays, jobs, tput, prices, avail, pred, backend, mesh,
-        with_regions=True, delta_mig=int(delta_mig),
+        with_regions=True, delta_mig=int(delta_mig), collect=collect,
+        fallback=fallback, p_od=_as_p_od(p_od, np.shape(prices)[1]),
     )
 
 

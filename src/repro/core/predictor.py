@@ -17,9 +17,12 @@ Predictors:
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.market import Trace, require_finite
@@ -119,6 +122,101 @@ def noisy_matrix_batch(prices: np.ndarray, avail: np.ndarray, kind: str,
     noisy[..., 1] = np.clip(np.round(noisy[..., 1]), 0, avail_max)
     noisy[:, :, 0, :] = out[:, :, 0, :]  # the present is observed
     return noisy
+
+
+def _true_future_batch_jax(prices, avail, horizon: int):
+    """Device twin of :func:`true_future_batch`: (K, T) jnp windows ->
+    (K, T, horizon+1, 2) edge-padded true values, all on device."""
+    T = prices.shape[1]
+    p = jnp.concatenate(
+        [prices, jnp.repeat(prices[:, -1:], horizon, axis=1)], axis=1)
+    a = jnp.concatenate(
+        [avail, jnp.repeat(avail[:, -1:], horizon, axis=1)], axis=1)
+    idx = jnp.arange(T)[:, None] + jnp.arange(horizon + 1)[None, :]
+    return jnp.stack([p[:, idx], a[:, idx]], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "horizon", "avail_max"))
+def _noisy_matrix_batch_jax(prices, avail, level, seeds, kind: str,
+                            horizon: int, avail_max: int):
+    out = _true_future_batch_jax(prices, avail, horizon)
+    steps = jnp.sqrt(jnp.arange(horizon + 1, dtype=jnp.float32))
+    scale = level * steps if level.ndim == 0 else level[:, None] * steps
+    ref = jnp.stack([
+        jnp.broadcast_to(jnp.mean(prices, axis=1)[:, None], prices.shape),
+        jnp.broadcast_to(jnp.mean(avail, axis=1)[:, None], avail.shape),
+    ], axis=-1)                                     # (K, T, 2)
+    shape = out.shape[1:]
+
+    def draw(seed):
+        key = jax.random.PRNGKey(seed)
+        if kind.endswith("uniform"):
+            return jax.random.uniform(key, shape, jnp.float32, -1.0, 1.0)
+        return (jnp.clip(jax.random.t(key, 3.0, shape, jnp.float32),
+                         -8.0, 8.0)
+                / np.sqrt(3.0).astype(np.float32))
+
+    eps = jax.vmap(draw)(seeds)                     # (K, T, h+1, 2)
+    eps = eps * (scale[None, None, :, None] if scale.ndim == 1
+                 else scale[:, None, :, None])
+    if kind.startswith("magdep"):
+        noisy = out * (1.0 + eps)
+    else:
+        noisy = out + eps * ref[:, :, None, :]
+    noisy = jnp.stack([
+        jnp.clip(noisy[..., 0], 0.01, 10.0),
+        jnp.clip(jnp.round(noisy[..., 1]), 0.0, float(avail_max)),
+    ], axis=-1)
+    return noisy.at[:, :, 0, :].set(out[:, :, 0, :])  # present is observed
+
+
+def noisy_matrix_batch_jax(prices, avail, kind: str, level, seeds,
+                           horizon: int, avail_max: int = 16):
+    """Jitted device twin of :func:`noisy_matrix_batch`: the whole
+    (K, T, horizon+1, 2) noisy forecast stack built by one batched-PRNG
+    XLA program — no host loop over per-seed generator objects, and the
+    result is born on device where the pool simulator consumes it
+    (core.engine's ``prep_backend="jax"``).
+
+    Same math (sqrt(j) error growth, per-row reference magnitudes, clips,
+    observed-present restore) in float32, but the draws come from JAX's
+    counter-based PRNG keyed per row on ``seeds`` — NOT bitwise-equal to
+    the numpy Philox streams. The numpy path stays the parity oracle:
+    tests pin that both backends agree on the selected winner and keep
+    EG regret within the Theorem 2 bound (tests/test_region_engine.py).
+    """
+    assert kind in NOISE_KINDS, kind
+    prices = jnp.asarray(prices, jnp.float32)
+    avail = jnp.asarray(avail, jnp.float32)
+    seeds = jnp.asarray(seeds, jnp.uint32)
+    assert seeds.shape == (prices.shape[0],), (seeds.shape, prices.shape)
+    return _noisy_matrix_batch_jax(
+        prices, avail, jnp.asarray(level, jnp.float32), seeds,
+        kind, int(horizon), int(avail_max),
+    )
+
+
+def regional_noisy_matrix_jax(prices, avail, kind: str, level, seeds,
+                              horizon: int, avail_max: int = 16):
+    """:class:`RegionalPredictor` lift of :func:`noisy_matrix_batch_jax`:
+    (K, R, T) per-(job, region) market windows and (K, R) seeds ->
+    (K, R, T, horizon+1, 2) forecast stacks, built by ONE jitted call over
+    the flattened (K*R,) row axis — the region axis never leaves the
+    device. ``level`` is a scalar or (K,) per-job array (broadcast across
+    that job's regions)."""
+    prices = jnp.asarray(prices, jnp.float32)
+    K, R, T = prices.shape
+    avail = jnp.asarray(avail, jnp.float32)
+    seeds = jnp.asarray(seeds, jnp.uint32)
+    assert seeds.shape == (K, R), (seeds.shape, (K, R))
+    level = jnp.asarray(level, jnp.float32)
+    if level.ndim:
+        level = jnp.repeat(level, R)                # (K*R,) per-row levels
+    out = noisy_matrix_batch_jax(
+        prices.reshape(K * R, T), avail.reshape(K * R, T), kind, level,
+        seeds.reshape(-1), horizon, avail_max,
+    )
+    return out.reshape(K, R, T, horizon + 1, 2)
 
 
 class PerfectPredictor:

@@ -26,7 +26,7 @@ policy_pool.region_pool.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import List, Optional, Sequence
 
 import numpy as np
@@ -47,6 +47,13 @@ class RegionalMarket:
     delta_mig: int = 1          # checkpoint-transfer cost: slots lost per move
     region_names: Sequence[str] = ()
     meta: dict = field(default_factory=dict)
+    # per-region on-demand price MULTIPLIERS of a job's flat
+    # on_demand_price (regions price reserved capacity differently too).
+    # None (the default) or a scalar keeps the flat-od behavior — a scalar
+    # broadcasts, and 1.0 multipliers are IEEE-exact no-ops, so old
+    # behavior is preserved bitwise; an (R,) vector makes the od leg of
+    # billing (and the AHAP thresholds/window solves) region-dependent.
+    p_od: Optional[np.ndarray] = None
 
     def __post_init__(self):
         assert self.prices.shape == self.avail.shape, (
@@ -55,6 +62,11 @@ class RegionalMarket:
         if not self.region_names:
             self.region_names = tuple(
                 f"r{i}" for i in range(self.prices.shape[0]))
+        if self.p_od is not None:
+            self.p_od = np.broadcast_to(
+                np.asarray(self.p_od, np.float64).reshape(-1),
+                (self.prices.shape[0],),
+            )
 
     def __len__(self):  # number of slots, matching Trace
         return self.prices.shape[1]
@@ -80,7 +92,7 @@ class RegionalMarket:
         return RegionalMarket(
             self.prices[:, t0 : t0 + length], self.avail[:, t0 : t0 + length],
             self.slot_seconds, self.slots_per_day, self.delta_mig,
-            self.region_names, dict(self.meta, t0=t0),
+            self.region_names, dict(self.meta, t0=t0), p_od=self.p_od,
         )
 
     def stats(self) -> List[TraceStats]:
@@ -88,7 +100,8 @@ class RegionalMarket:
 
     @staticmethod
     def from_traces(traces: Sequence[Trace], delta_mig: int = 1,
-                    region_names: Sequence[str] = ()) -> "RegionalMarket":
+                    region_names: Sequence[str] = (),
+                    p_od=None) -> "RegionalMarket":
         t0 = traces[0]
         for i, t in enumerate(traces[1:], 1):  # no silent misalignment:
             if len(t) != len(t0):              # regions share one time base
@@ -111,6 +124,7 @@ class RegionalMarket:
             delta_mig=delta_mig,
             region_names=tuple(region_names),
             meta={"kind": "from_traces"},
+            p_od=p_od,
         )
 
 
@@ -198,17 +212,29 @@ def simulate_regional(
     way (RegionSelector pads to RSEL_PRED_WINDOW itself); a too-short
     forecast only starves the python AHAP's plan window relative to the
     padded one the fast lanes see.
+
+    When the market carries per-region on-demand multipliers
+    (``market.p_od``), each slot runs against an *effective* job whose
+    ``on_demand_price`` is scaled by the occupied region's multiplier —
+    the policy's decision, the slot billing, and (via the final region)
+    the termination configuration all see the regional od price. ``None``
+    leaves the loop byte-for-byte as before.
     """
     d = job.deadline
     assert len(market) >= d, "market shorter than deadline"
     policy.reset(job, tput)
     selector.reset(job, market.delta_mig)
+    pod = market.p_od
+    eff_job = (lambda r: job) if pod is None else (
+        lambda r: replace(job, on_demand_price=job.on_demand_price
+                          * float(pod[r])))
 
     z, n_prev, cost = 0.0, 0, 0.0
     T_complete: Optional[float] = None
     ns_hist, no_hist = np.zeros(d, int), np.zeros(d, int)
     region_hist = np.zeros(d, int)
     migrations = 0
+    cur = 0
 
     for t in range(d):
         pred_t = pred_matrix[:, t] if pred_matrix is not None else None
@@ -219,6 +245,8 @@ def simulate_regional(
 
         price, avail = float(market.prices[cur, t]), int(market.avail[cur, t])
         pred = pred_t[cur] if pred_t is not None else None
+        job_t = eff_job(cur)
+        policy.job = job_t  # policies read self.job fresh every decide
         obs = Obs(t=t, price=price, avail=avail, z_prev=z, n_prev=n_prev,
                   pred=pred)
         n_o, n_s = policy.decide(obs)
@@ -227,7 +255,7 @@ def simulate_regional(
         # slot execution is shared with simulator.simulate — the single-
         # region loop and this one cannot drift apart
         n_o, n_s, work, dc, T_complete = exec_slot(
-            job, tput, z, n_prev, t, n_o, n_s, price, avail
+            job_t, tput, z, n_prev, t, n_o, n_s, price, avail
         )
         cost += dc
         ns_hist[t], no_hist[t] = n_s, n_o
@@ -239,8 +267,9 @@ def simulate_regional(
     if T_complete is not None:
         value = float(value_fn(job, T_complete))
     else:
-        # termination configuration: N^max on-demand past the deadline
-        dt, dc = termination_config(job, tput, z)
+        # termination configuration: N^max on-demand past the deadline,
+        # billed at the final occupied region's od rate
+        dt, dc = termination_config(eff_job(cur), tput, z)
         T_complete = d + dt
         cost += dc
         value = float(value_fn(job, T_complete))

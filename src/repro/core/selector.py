@@ -166,7 +166,11 @@ def run_eg_scan(state: EGState, utilities, track_history: bool = False,
     in f32 the floor is the smallest normal instead — weights there are
     zero to f32 anyway). Chain calls by passing the returned state back in:
     the scan is associative over concatenated utility chunks, which is what
-    core.engine's job-chunked streaming mode relies on."""
+    core.engine's job-chunked streaming mode relies on — for both the
+    single-region and the regional engine path: the scan is agnostic to
+    where the (K, M) utilities came from (``simulate_pool_jobs`` or
+    ``simulate_pool_regions``), which is why R == 1 engine runs are
+    bitwise-identical end to end."""
     u_all = jnp.clip(jnp.asarray(utilities, jnp.float32), 0.0, 1.0)
     tiny = jnp.float32(np.finfo(np.float32).tiny)
 

@@ -231,7 +231,7 @@ def solve_window_batch(
     tn = int(table_n)
     assert tn > 0, "solve_window_batch needs a static table_n"
 
-    if jnp.asarray(job.workload).ndim:
+    if jnp.asarray(job.workload).ndim or jnp.asarray(p_o).ndim:
         b = prices.shape[0]
         bc = lambda x: jnp.broadcast_to(jnp.asarray(x), (b,))
 

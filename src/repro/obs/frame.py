@@ -43,6 +43,19 @@ cheap lanes, which carry no monitor, report all-zero rows):
                     slot (its forecast-error EWMA exceeded the threshold)
 ``pred_err``        f32, that realized-forecast-error EWMA after the slot
 ==================  ========================================================
+
+Region runs (``simulate_pool_regions[_sharded]`` with ``collect=True``)
+add the migration series (``None`` for single-region runs):
+
+==============  ============================================================
+``region``      i32, the region occupied this slot (post region-selector
+                step — matches the ``region`` result leaf exactly)
+``migrated``    bool, a cross-region switch was *committed* this slot (the
+                checkpoint transfer starts; the lane holds zero instances
+                for the next ``delta_mig`` slots). Slot sums equal the
+                ``migrations`` result leaf — ``obs.ledger.
+                migration_reconciliation`` checks that invariant.
+==============  ============================================================
 """
 from __future__ import annotations
 
@@ -60,6 +73,8 @@ FLEET_KEYS = ("tel_demand", "tel_grant", "tel_slack", "tel_rank",
               "tel_starved")
 # prediction-failure monitor series, only when fallback= is armed
 FALLBACK_KEYS = ("tel_fallback", "tel_pred_err")
+# migration series only the region engine emits (fast_sim._TEL_REGION)
+REGION_KEYS = ("tel_region", "tel_migration")
 
 
 class TelemetryFrame(NamedTuple):
@@ -80,6 +95,8 @@ class TelemetryFrame(NamedTuple):
     starved: Optional[np.ndarray] = None
     fallback_active: Optional[np.ndarray] = None
     pred_err: Optional[np.ndarray] = None
+    region: Optional[np.ndarray] = None
+    migrated: Optional[np.ndarray] = None
 
 
 def has_telemetry(out: dict) -> bool:
@@ -112,4 +129,6 @@ def frame_from_out(out: dict) -> TelemetryFrame:
         starved=a("tel_starved") if "tel_starved" in out else None,
         fallback_active=a("tel_fallback") if "tel_fallback" in out else None,
         pred_err=a("tel_pred_err") if "tel_pred_err" in out else None,
+        region=a("tel_region") if "tel_region" in out else None,
+        migrated=a("tel_migration") if "tel_migration" in out else None,
     )

@@ -126,6 +126,44 @@ def fallback_events(active) -> dict:
     }
 
 
+def migration_reconciliation(out: dict) -> dict:
+    """Reconcile the per-slot migration series against the region engine's
+    summary leaves (a ``simulate_pool_regions[_sharded]`` ``collect=True``
+    run).
+
+    Two invariants are checked, not trusted:
+
+    * ``events_reconciled`` — per (job, lane), ``tel_migration`` slot sums
+      equal the ``migrations`` result leaf exactly (every committed switch
+      the scan counted shows up as exactly one telemetry event);
+    * ``series_matches_leaf`` — ``tel_region`` is bitwise the ``region``
+      occupancy leaf (the telemetry path and the result path sampled the
+      same post-step region).
+
+    Also summarizes occupancy: fraction of slot-samples spent in each
+    region, and the mean committed switches per (job, lane)."""
+    mig_series = np.asarray(out["tel_migration"], bool)
+    mig_leaf = np.asarray(out["migrations"], np.int64)
+    reg_series = np.asarray(out["tel_region"], np.int64)
+    reg_leaf = np.asarray(out["region"], np.int64)
+    per_cell = mig_series.sum(axis=-1).astype(np.int64)
+    n_regions = int(reg_series.max()) + 1 if reg_series.size else 0
+    occupancy = [float((reg_series == r).mean()) for r in range(n_regions)]
+    return {
+        "total_migrations": int(mig_leaf.sum()),
+        "migrations_mean": float(mig_leaf.mean()) if mig_leaf.size else 0.0,
+        "events_reconciled": bool(np.array_equal(per_cell, mig_leaf)),
+        "series_matches_leaf": bool(np.array_equal(reg_series, reg_leaf)),
+        "region_occupancy": occupancy,
+    }
+
+
+def _migration_block(out: dict) -> Optional[dict]:
+    if "tel_migration" not in out or "migrations" not in out:
+        return None
+    return migration_reconciliation(out)
+
+
 def _fallback_block(fr: _frame.TelemetryFrame) -> Optional[dict]:
     if fr.fallback_active is None:
         return None
@@ -141,7 +179,10 @@ def pool_ledger(out: dict, jobs, tput, lane_names: Optional[Sequence[str]] =
     """Ledger for a ``simulate_pool_jobs[_sharded]`` collect run.
 
     ``out`` leaves are (J, P[, T]); per-lane aggregations reduce over the
-    jobs axis. ``lane_names`` (length P) labels the per-lane block."""
+    jobs axis. ``lane_names`` (length P) labels the per-lane block. Region
+    runs (``simulate_pool_regions[_sharded]``) get a ``migration`` block —
+    :func:`migration_reconciliation` over their ``tel_region`` /
+    ``tel_migration`` series."""
     fr = _frame.frame_from_out(out)
     util = np.asarray(out["utility"], np.float64)     # (J, P)
     cost = np.asarray(out["cost"], np.float64)
@@ -170,6 +211,9 @@ def pool_ledger(out: dict, jobs, tput, lane_names: Optional[Sequence[str]] =
     fb = _fallback_block(fr)
     if fb is not None:
         ledger["fallback"] = fb
+    mig = _migration_block(out)
+    if mig is not None:
+        ledger["migration"] = mig
     return ledger
 
 

@@ -46,6 +46,16 @@ def _render_pool(ledger: dict) -> List[str]:
             f"  preempt={pl['preemptions_mean'][i]:.2f}"
             f"  done={pl['completion_rate'][i]:.0%}"
         )
+    if "migration" in ledger:
+        mg = ledger["migration"]
+        occ = " ".join(f"r{r}={f:.0%}" for r, f in
+                       enumerate(mg["region_occupancy"]))
+        lines.append(
+            f"migration  {mg['total_migrations']} switches"
+            f" (mean {mg['migrations_mean']:.2f}/lane)"
+            f"  occupancy {occ}"
+            f"  reconciled={'yes' if mg['events_reconciled'] and mg['series_matches_leaf'] else 'NO'}"
+        )
     return lines
 
 

@@ -20,7 +20,8 @@ tests are opt-in:
 
 Knobs: POOL_SIM_JOBS / POOL_SIM_REPEAT / POOL_SIM_SCALE_JOBS /
 POOL_SIM_SCALE_REPEAT / POOL_SIM_MESH / SEL_E2E_JOBS / SEL_E2E_REPEAT /
-FLEET_SIM_JOBS / FLEET_SIM_REPEAT shrink or reshape the workloads (the
+REGION_E2E_JOBS / REGION_E2E_REPEAT / FLEET_SIM_JOBS / FLEET_SIM_REPEAT
+shrink or reshape the workloads (the
 guards set small defaults for themselves below; the scenario-grid winner
 pins force their own SCENARIO_GRID_* config so the pinned map always
 refers to one fixed workload).
@@ -171,6 +172,34 @@ def test_selection_engine_not_slower_than_host_loop():
     )
     # both pipelines must land on the same winning policy
     assert rows["selection_e2e_same_winner"]["derived"] == 1.0
+
+
+def test_region_engine_not_slower_than_host_loop():
+    """The regional-engine guard (region e2e PR): at the Fig. 9/10 scale
+    regionalized (1000 jobs x 36 region lanes x 3 regions) the streamed
+    regional engine — chunked ``prepare_noisy_inputs_regions`` prep
+    double-buffered against the sharded region simulation and the fused
+    EG scan — must be no slower than the per-(job, region)
+    RegionalPredictor host-loop pipeline it replaced, and must land on
+    the same winning lane (the two draw bitwise-identical forecasts, so
+    same_winner is deterministic). REGION_E2E_JOBS in the caller env
+    shrinks the workload for local runs."""
+    payload = _run_pool_bench(
+        defaults={
+            "REGION_E2E_JOBS": "1000",
+            "REGION_E2E_REPEAT": "1",
+        },
+        only="region_e2e",
+    )
+    rows = {r["name"]: r for r in payload["rows"]}
+    assert "region_e2e_engine_vs_loop" in rows, sorted(rows)
+    ratio = rows["region_e2e_engine_vs_loop"]["derived"]
+    assert ratio >= MIN_ENGINE_RATIO, (
+        f"regional engine regressed: {ratio:.2f}x < {MIN_ENGINE_RATIO}x the "
+        f"host-loop pipeline\n"
+        f"rows: { {n: r['derived'] for n, r in rows.items()} }"
+    )
+    assert rows["region_e2e_same_winner"]["derived"] == 1.0
 
 
 # Per-regime winner pins for the scenario grid's forced shrunken config

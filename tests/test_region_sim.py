@@ -187,6 +187,74 @@ def test_migration_cost_accounting_two_region_toy():
     assert abs(ref.cost - (run_cost + term_cost)) < 1e-3
 
 
+def test_per_region_od_price_accounting_two_region_toy():
+    """Hand-checked per-region on-demand pricing: the crossover toy of
+    test_migration_cost_accounting_two_region_toy with od multipliers
+    (1.0, 2.0). MSU@greedy_price selects regions on SPOT prices and never
+    buys on-demand inside the window, so the region path, allocations and
+    running spot cost are unchanged — only the termination configuration,
+    billed at the final region's od rate, doubles. A scalar multiplier of
+    1.0 must be a bitwise no-op (the shipped-program pin), and the python
+    reference (market.p_od) must agree with the fast path."""
+    job = JobConfig(workload=200.0, deadline=8, n_min=1, n_max=4, value=120.0)
+    tput = ThroughputConfig(alpha=1.0, beta=0.0, mu1=0.9, mu2=0.95)
+    p0 = np.array([0.2] * 4 + [0.9] * 4)
+    p1 = np.array([0.8] * 4 + [0.3] * 4)
+    av = np.full(8, 4, np.int64)
+    traces = [from_arrays(p0, av), from_arrays(p1, av)]
+    p_od = np.array([1.0, 2.0])
+    mkt = RegionalMarket.from_traces(traces, delta_mig=1, p_od=p_od)
+    spec = PolicySpec(KIND_MSU, rsel=RSEL_PRICE, rmargin=0.0)
+    arrs = specs_to_arrays([spec])
+    stacked = fast_sim.stack_jobs([job])
+    rp, ra, rpm = fast_sim.prepare_inputs_regions(mkt, None, job.deadline)
+    tile = lambda x: np.asarray(x)[None]
+    run = lambda po: fast_sim.simulate_pool_regions(
+        arrs, stacked, tput, tile(rp), tile(ra), tile(rpm),
+        delta_mig=1, p_od=po,
+    )
+    out = run(mkt.p_od)
+    # region path and allocations are untouched by the od multipliers
+    np.testing.assert_array_equal(np.asarray(out["region"])[0, 0],
+                                  [0] * 4 + [1] * 4)
+    np.testing.assert_array_equal(np.asarray(out["n_spot"])[0, 0],
+                                  [4, 4, 4, 4, 0, 4, 4, 4])
+    assert not np.asarray(out["n_od"])[0, 0].any()
+    # spot billing as in the base toy; termination finishes on-demand in
+    # the final region (r1) at DOUBLE the flat od rate
+    z_exp = 15.6 + 0.0 + 11.6
+    run_cost = 4 * 4 * 0.2 + 3 * 4 * 0.3
+    term = 2.0 * job.on_demand_price * job.n_max * (job.workload - z_exp) / 4.0
+    assert abs(float(np.asarray(out["cost"])[0, 0]) - (run_cost + term)) < 1e-3
+    # base toy (flat od) differs by exactly the doubled termination leg
+    base = run(None)
+    flat_term = term / 2.0
+    assert abs(float(np.asarray(out["cost"])[0, 0])
+               - float(np.asarray(base["cost"])[0, 0]) - flat_term) < 1e-3
+    # scalar 1.0 multiplier: IEEE-exact no-op, every leaf bitwise
+    ones = run(1.0)
+    for k in base:
+        np.testing.assert_array_equal(
+            np.asarray(base[k]), np.asarray(ones[k]), err_msg=k
+        )
+    # the python reference sees market.p_od and lands on the same books
+    ref = simulate_regional(spec.build(), spec.build_selector(), job, tput,
+                            mkt, None)
+    assert ref.migrations == 1
+    np.testing.assert_array_equal(ref.region_hist, [0] * 4 + [1] * 4)
+    assert abs(ref.cost - (run_cost + term)) < 1e-3
+    assert abs(ref.cost - float(np.asarray(out["cost"])[0, 0])) < 1e-3
+    # sharded entry forwards p_od (single-device fallthrough, bitwise)
+    sh = fast_sim.simulate_pool_regions_sharded(
+        arrs, stacked, tput, tile(rp), tile(ra), tile(rpm),
+        delta_mig=1, p_od=mkt.p_od,
+    )
+    for k in out:
+        np.testing.assert_array_equal(
+            np.asarray(out[k]), np.asarray(sh[k]), err_msg=k
+        )
+
+
 def test_hysteresis_prevents_thrash():
     """Alternating-argmin market (price lead flips every slot by 0.05): the
     margin-0 greedy lane thrashes, the sticky lane (margin > oscillation)

@@ -148,6 +148,43 @@ for shape in MESHES:
             np.asarray(rbase[k]), np.asarray(sh[k]),
             err_msg=f"{k} regions mesh={shape}",
         )
+
+# region engine knobs: collect=True (+9 keys: 7 slot + 2 migration
+# series), the armed fallback monitor (+2 more), and per-region od
+# multipliers — all three shard bitwise on every mesh layout, and the
+# collect run's shared keys match the plain region run
+p_od = np.array([1.0, 1.5, 0.7], np.float32)
+rfull = fast_sim.simulate_pool_regions(
+    rarrs, stacked, TPUT, rp, ra, rpm, delta_mig=1,
+    collect=True, fallback=FallbackConfig(threshold=0.5, lam=0.5),
+    p_od=p_od)
+rtel = fast_sim.simulate_pool_regions(
+    rarrs, stacked, TPUT, rp, ra, rpm, delta_mig=1, collect=True)
+assert len(rtel) == len(rbase) + 9, sorted(rtel)
+assert len(rfull) == len(rbase) + 11, sorted(rfull)
+for k in rbase:
+    np.testing.assert_array_equal(
+        np.asarray(rbase[k]), np.asarray(rtel[k]),
+        err_msg=f"region collect-vs-base {k}")
+np.testing.assert_array_equal(
+    np.asarray(rtel["tel_migration"]).sum(axis=-1),
+    np.asarray(rtel["migrations"]), err_msg="migration reconciliation")
+for name, ref, kw in (
+    ("collect", rtel, dict(collect=True)),
+    ("full", rfull, dict(collect=True,
+                         fallback=FallbackConfig(threshold=0.5, lam=0.5),
+                         p_od=p_od)),
+):
+    for shape in MESHES:
+        sh = fast_sim.simulate_pool_regions_sharded(
+            rarrs, stacked, TPUT, rp, ra, rpm, delta_mig=1,
+            mesh=None if shape is None else make_pool_mesh(shape=shape),
+            **kw)
+        assert set(sh) == set(ref)
+        for k in ref:
+            np.testing.assert_array_equal(
+                np.asarray(ref[k]), np.asarray(sh[k]),
+                err_msg=f"region {name} {k} mesh={shape}")
 print("SHARDED-PARITY-OK")
 """
 
